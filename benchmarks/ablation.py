@@ -1,0 +1,96 @@
+"""Paper Table 2 / Figure 5: ablations over R (local updates), W (workset
+size / sampling strategy), and ξ (instance weighting threshold).
+
+Each block reproduces one Table-2 row group: communication rounds required
+to reach a shared target AUC, relative to the no-technique baseline.
+"""
+from __future__ import annotations
+
+from .common import csv_row, default_workload, rounds_to, run_protocol
+
+ROUNDS = 700
+LR = 0.003
+TARGET_FRACTION = 0.97   # target = frac * best vanilla AUC (self-calibrated)
+
+
+def _target(data, cfg) -> float:
+    base = run_protocol("vanilla", data, cfg, rounds=ROUNDS, lr=LR)
+    return TARGET_FRACTION * base["best_auc"], base
+
+
+def bench_local_update(data, cfg, target, base):
+    """Vary R at fixed W=5, ξ=60° (Table 2 block 1).
+
+    Savings are a PROFILE over target quality: on a workload that converges
+    ~25x faster than the paper's 41M-row stream, local updates buy the most
+    in the far-from-converged region (where the paper's targets sit); near
+    this task's saturation AdaGrad's step-count-driven lr decay evens the
+    protocols out.  Reported at 88% / 95% / 98.5% of vanilla's best AUC."""
+    fracs = (0.88, 0.95, 0.985)
+    targets = [f * base["best_auc"] for f in fracs]
+    csv_row("# local_update: rounds-to-target profile "
+            "(targets = %s of vanilla best)" %
+            "/".join(f"{f:.1%}" for f in fracs))
+    csv_row("setting", *[f"rounds@{t:.3f}" for t in targets], "final_auc")
+    runs = {"vanilla(R=1)": base}
+    for R in (3, 5, 8):
+        runs[f"celu(R={R})"] = run_protocol(
+            "celu", data, cfg, R=R, W=5, xi=60.0, rounds=ROUNDS, lr=LR)
+    base_rounds = [rounds_to(base["curve"], t) or ROUNDS for t in targets]
+    for name, r in runs.items():
+        cells = []
+        for t, b in zip(targets, base_rounds):
+            rt = rounds_to(r["curve"], t) or ROUNDS
+            cells.append(f"{rt} ({100 * (1 - rt / b):+.0f}%)")
+        csv_row(name, *cells, f"{r['final_auc']:.4f}")
+
+
+STRESS_LR = 0.01   # higher lr + R=8: staleness errors actually bite
+STRESS_R = 8
+
+
+def bench_local_sampling(data, cfg, target, base):
+    """W=1 consecutive (FedBCD-style) vs round-robin W>1 (Table 2 blk 2).
+
+    Run in the stressed-staleness regime (lr=0.01, R=8) where repetitive
+    sampling measurably accumulates variance (paper Fig 3/5b); quality
+    metric is best AUC reached (the curves plateau differently)."""
+    csv_row(f"# local_sampling: R={STRESS_R}, xi=60, lr={STRESS_LR}")
+    csv_row("setting", "best_auc", "final_auc")
+    r1 = run_protocol("celu", data, cfg, R=STRESS_R, W=1, xi=60.0,
+                      sampling="consecutive", rounds=ROUNDS, lr=STRESS_LR,
+                      eval_every=10)
+    csv_row("consecutive(W=1)", f"{r1['best_auc']:.4f}",
+            f"{r1['final_auc']:.4f}")
+    for W in (3, 5, 8):
+        r = run_protocol("celu", data, cfg, R=STRESS_R, W=W, xi=60.0,
+                         rounds=ROUNDS, lr=STRESS_LR, eval_every=10)
+        csv_row(f"round_robin(W={W})", f"{r['best_auc']:.4f}",
+                f"{r['final_auc']:.4f}")
+
+
+def bench_instance_weighting(data, cfg, target, base):
+    """No-weights vs ξ ∈ {90°, 60°, 30°} at (W,R)=(5,8), stressed regime
+    (Table 2 blk 3 — weighting matters when staleness errors are large)."""
+    csv_row(f"# instance_weighting: W=5, R={STRESS_R}, lr={STRESS_LR}")
+    csv_row("setting", "best_auc", "final_auc")
+    r0 = run_protocol("celu", data, cfg, R=STRESS_R, W=5, weighting=False,
+                      rounds=ROUNDS, lr=STRESS_LR, eval_every=10)
+    csv_row("no_weights", f"{r0['best_auc']:.4f}", f"{r0['final_auc']:.4f}")
+    for xi in (90.0, 60.0, 30.0):
+        r = run_protocol("celu", data, cfg, R=STRESS_R, W=5, xi=xi,
+                         rounds=ROUNDS, lr=STRESS_LR, eval_every=10)
+        csv_row(f"xi={int(xi)}", f"{r['best_auc']:.4f}",
+                f"{r['final_auc']:.4f}")
+
+
+def main():
+    spec, data, cfg = default_workload("wdl", "criteo")
+    target, base = _target(data, cfg)
+    bench_local_update(data, cfg, target, base)
+    bench_local_sampling(data, cfg, target, base)
+    bench_instance_weighting(data, cfg, target, base)
+
+
+if __name__ == "__main__":
+    main()

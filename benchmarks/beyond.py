@@ -1,0 +1,119 @@
+"""Beyond-paper optimizations (§Perf pair 3, iterations 2+).
+
+1. **bf16 wire format** for the exchanged ⟨Z_A, ∇Z_A⟩: the paper sends
+   fp32.  Validates convergence parity on WDL and reports the combined
+   communication reduction (CELU round savings × 2 from the wire).
+2. **run_protocol wire sweep** — fp32 vs bf16 at the paper-repro settings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .common import csv_row, default_workload
+from .common import run_protocol as _run
+
+
+def run_protocol_wire(protocol, data, cfg, wire, **kw):
+    """run_protocol with a wire_dtype override."""
+    import benchmarks.common as C
+    from repro.configs.base import CELUConfig
+    from repro.core import protocol as proto
+    import jax
+    import numpy as np
+    import time
+    from repro.data import synthetic as synth
+    from repro.models.tabular import auc, make_dlrm
+    from repro.optim import make_optimizer
+
+    R, W, xi = kw.get("R", 5), kw.get("W", 5), kw.get("xi", 60.0)
+    rounds, lr = kw.get("rounds", 700), kw.get("lr", 0.003)
+    batch = kw.get("batch", 256)
+    init_fn, task, predict = make_dlrm(cfg)
+    base = CELUConfig(R=R, W=W, xi_degrees=xi, wire_dtype=wire)
+    ccfg, nloc = proto.protocol_config(protocol, base)
+    ccfg = dataclasses.replace(ccfg, wire_dtype=wire)
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", lr)
+    it = synth.aligned_batches(data["train"], batch, seed=0)
+    _, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    state = proto.init_state(task, params, opt, ccfg, asj(ba), asj(bb))
+    rnd = proto.make_round(task, opt, ccfg, local_steps=nloc)
+    it = synth.aligned_batches(data["train"], batch, seed=0)
+    te = data["test"]
+    tea = {"x_a": jnp.asarray(te["x_a"])}
+    teb = {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])}
+    best = 0.0
+    for i in range(rounds):
+        bi, ba, bb = next(it)
+        state, m = rnd(state, asj(ba), asj(bb), bi)
+        if (i + 1) % 50 == 0:
+            a = auc(np.asarray(predict(state["params"], cfg, tea, teb)),
+                    te["y"])
+            best = max(best, a)
+    zb = proto.exchange_bytes((batch, cfg.z_dim), wire_dtype=wire)
+    return best, zb
+
+
+def dp_sweep(data, cfg):
+    """Privacy/utility: Gaussian DP on the wire (core/privacy.py).  CELU
+    releases 1/(1+R) as many messages per update, so the per-update ε
+    shrinks the same way the communication does."""
+    import jax
+    import numpy as np
+    from repro.configs.base import CELUConfig
+    from repro.core import protocol as proto
+    from repro.core.privacy import DPConfig, epsilon_per_release
+    from repro.data import synthetic as synth
+    from repro.models.tabular import auc, make_dlrm
+    from repro.optim import make_optimizer
+
+    csv_row("# beyond-paper: DP-on-the-wire (clip=8, 400 rounds, celu R=5)")
+    csv_row("sigma", "eps_per_release", "best_auc")
+    init_fn, task, predict = make_dlrm(cfg)
+    te = data["test"]
+    tea = {"x_a": jnp.asarray(te["x_a"])}
+    teb = {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])}
+    for sigma in (0.0, 0.05, 0.2):
+        celu = CELUConfig(R=5, W=5, dp_sigma=sigma, dp_clip=8.0)
+        params = init_fn(jax.random.PRNGKey(0), cfg)
+        opt = make_optimizer("adagrad", 0.003)
+        it = synth.aligned_batches(data["train"], 256, seed=0)
+        _, ba, bb = next(it)
+        asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+        state = proto.init_state(task, params, opt, celu, asj(ba), asj(bb))
+        rnd = proto.make_round(task, opt, celu)
+        it = synth.aligned_batches(data["train"], 256, seed=0)
+        best = 0.0
+        for i in range(400):
+            bi, ba, bb = next(it)
+            state, m = rnd(state, asj(ba), asj(bb), bi)
+            if (i + 1) % 100 == 0:
+                best = max(best, auc(np.asarray(
+                    predict(state["params"], cfg, tea, teb)), te["y"]))
+        eps = epsilon_per_release(DPConfig(clip=8.0, sigma=sigma))
+        csv_row(sigma, "inf" if eps == float("inf") else f"{eps:.1f}",
+                f"{best:.4f}")
+
+
+def main():
+    csv_row("# beyond-paper: bf16 wire format for the cut-tensor exchange")
+    csv_row("setting", "best_auc", "bytes_per_round", "relative_comm")
+    spec, data, cfg = default_workload("wdl", "criteo")
+    base_auc, base_bytes = run_protocol_wire("vanilla", data, cfg, "float32",
+                                             rounds=700)
+    csv_row("vanilla fp32-wire", f"{base_auc:.4f}", base_bytes, "1.00x")
+    for wire in ("float32", "bfloat16"):
+        a, zb = run_protocol_wire("celu", data, cfg, wire, R=5, W=5,
+                                  rounds=700)
+        # CELU reaches target in ~1/4 the rounds (ablation block); the wire
+        # multiplies on top.  Report per-round bytes here.
+        csv_row(f"celu {wire}-wire", f"{a:.4f}", zb,
+                f"{zb / base_bytes:.2f}x/round")
+    dp_sweep(data, cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import CELUConfig  # noqa: E402
+from repro.core import protocol as proto  # noqa: E402
+from repro.data import synthetic as synth  # noqa: E402
+from repro.models.tabular import DLRMConfig, auc, make_dlrm  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+
+# Smaller-than-paper but non-trivial default workload (paper: 41M rows,
+# B=4096, z=256; here scaled to CPU).  REPRO_BENCH_FULL=1 doubles scale.
+FULL = os.environ.get("REPRO_BENCH_FULL", "") == "1"
+
+
+def default_workload(model: str = "wdl", spec_name: str = "criteo",
+                     seed: int = 0):
+    spec0 = synth.TABULAR_SPECS[spec_name]
+    n_train = 65536 if FULL else 32768
+    spec = dataclasses.replace(spec0, vocab=128, n_train=n_train,
+                               n_test=8192)
+    data = synth.make_tabular(spec, seed=seed)
+    cfg = DLRMConfig(model, spec.fields_a, spec.fields_b, vocab=spec.vocab,
+                     embed_dim=8, z_dim=32, hidden=(64, 32))
+    return spec, data, cfg
+
+
+def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
+                 weighting=True, sampling=None, rounds=400, batch=256,
+                 lr=0.01, optimizer="adagrad", seed=0, eval_every=25,
+                 target_auc: Optional[float] = None
+                 ) -> Dict[str, object]:
+    """Train with one protocol; return the AUC-vs-round curve and (if
+    target_auc given) the first round reaching it."""
+    init_fn, task, predict = make_dlrm(cfg)
+    base = CELUConfig(R=R, W=W, xi_degrees=xi, weighting=weighting,
+                      sampling=sampling or "round_robin")
+    ccfg, nloc = proto.protocol_config(protocol, base)
+    if sampling is not None and protocol == "celu":
+        ccfg = dataclasses.replace(ccfg, sampling=sampling)
+    params = init_fn(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer(optimizer, lr)
+    it = synth.aligned_batches(data["train"], batch, seed=seed)
+    _, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    state = proto.init_state(task, params, opt, ccfg, asj(ba), asj(bb))
+    rnd = proto.make_round(task, opt, ccfg, local_steps=nloc)
+    it = synth.aligned_batches(data["train"], batch, seed=seed)
+
+    te = data["test"]
+    tea = {"x_a": jnp.asarray(te["x_a"])}
+    teb = {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])}
+    curve: List[Tuple[int, float]] = []
+    reached = None
+    t0 = time.time()
+    for i in range(rounds):
+        bi, ba, bb = next(it)
+        state, m = rnd(state, asj(ba), asj(bb), bi)
+        if (i + 1) % eval_every == 0 or i + 1 == rounds:
+            a = auc(np.asarray(predict(state["params"], cfg, tea, teb)),
+                    te["y"])
+            curve.append((i + 1, a))
+            if target_auc and reached is None and a >= target_auc:
+                reached = i + 1
+    return {
+        "protocol": protocol, "R": R, "W": W, "xi": xi,
+        "weighting": weighting, "curve": curve,
+        "final_auc": curve[-1][1], "best_auc": max(a for _, a in curve),
+        "rounds_to_target": reached, "wall_s": time.time() - t0,
+        "z_bytes_per_round": proto.exchange_bytes((batch, cfg.z_dim)),
+    }
+
+
+def rounds_to(curve, target):
+    """First eval round whose AUC >= target (None if never)."""
+    for s, a in curve:
+        if a >= target:
+            return s
+    return None
+
+
+def csv_row(*cols):
+    print(",".join(str(c) for c in cols), flush=True)

@@ -1,0 +1,90 @@
+"""Paper Figure 6: end-to-end convergence, Vanilla vs FedBCD vs CELU-VFL.
+
+Wall-clock is modelled as  t = rounds * (bytes/round / WAN_bw + 2*latency)
++ measured compute time  (paper §2.1's 300 Mbps / gateway-proxied WAN; this
+container has no real WAN).  Speedups are reported on the time-to-target
+metric like the paper's 2.65-6.27x table.
+"""
+from __future__ import annotations
+
+from .common import csv_row, default_workload, rounds_to, run_protocol
+
+ROUNDS = 1200
+LR = 0.003
+WAN_BW = 300e6 / 8           # bytes/s
+WAN_LAT = 0.01               # s/direction
+
+
+# The convergence dynamics are measured at miniature geometry (Z_A dim 32,
+# B=256 — 65 KB/round); the WALL-CLOCK model uses the paper's deployment
+# geometry (Z_A dim 256, B=4096 -> 2 x 4 MB = 224 ms/round at 300 Mbps,
+# §2.1) with V100-scale compute (a few ms/update, >90% of time is
+# communication).  Local updates overlap the in-flight exchange (the
+# paper's two-worker design), so only overlap-excess compute is charged.
+PAPER_Z_BYTES = 2 * 4096 * 256 * 4   # the paper's per-round messages
+GPU_COMPUTE_PER_UPDATE = 0.005       # s — conservative V100-scale estimate
+
+
+def sim_time(rounds: int, z_bytes: int, local_ratio: float,
+             compute_per_round: float = GPU_COMPUTE_PER_UPDATE) -> float:
+    comm = rounds * (PAPER_Z_BYTES / WAN_BW + 2 * WAN_LAT)
+    compute = rounds * compute_per_round * (1.0 + local_ratio)
+    return comm + max(0.0, compute - comm)
+
+
+def hard_workload(model: str, dataset: str, seed: int = 0):
+    """Far-from-convergence regime like the paper's 41M-row stream: 4x the
+    hash vocabulary and 4x the rows, so each embedding row is updated
+    rarely and 1200 rounds stay mid-curve."""
+    import dataclasses
+    from repro.data import synthetic as synth
+    from repro.models.tabular import DLRMConfig
+    spec = dataclasses.replace(synth.TABULAR_SPECS[dataset], vocab=512,
+                               n_train=131072, n_test=8192)
+    data = synth.make_tabular(spec, seed=seed)
+    cfg = DLRMConfig(model, spec.fields_a, spec.fields_b, vocab=512,
+                     embed_dim=8, z_dim=32, hidden=(64, 32))
+    return spec, data, cfg
+
+
+def run_one(dataset: str, model: str):
+    spec, data, cfg = hard_workload(model, dataset)
+    base = run_protocol("vanilla", data, cfg, rounds=ROUNDS, lr=LR,
+                        eval_every=50)
+    target = 0.97 * base["best_auc"]
+    csv_row(f"# end_to_end {model}/{dataset}: target AUC {target:.4f}")
+    csv_row("protocol", "rounds_to_target", "sim_wan_s", "speedup_vs_vanilla",
+            "final_auc")
+
+    rows = {}
+    b_rounds = rounds_to(base["curve"], target) or ROUNDS
+    zb = base["z_bytes_per_round"]
+    t_van = sim_time(b_rounds, zb, 0.0)
+    rows["vanilla"] = (b_rounds, t_van, base["final_auc"])
+
+    fb = run_protocol("fedbcd", data, cfg, R=5, rounds=ROUNDS, lr=LR,
+                      eval_every=50, target_auc=target)
+    fb_rounds = fb["rounds_to_target"] or ROUNDS
+    rows["fedbcd(R=5)"] = (fb_rounds, sim_time(fb_rounds, zb, 5.0),
+                           fb["final_auc"])
+
+    for R in (5, 8):
+        ce = run_protocol("celu", data, cfg, R=R, W=5, xi=60.0,
+                          rounds=ROUNDS, lr=LR, eval_every=50,
+                          target_auc=target)
+        ce_rounds = ce["rounds_to_target"] or ROUNDS
+        rows[f"celu(R={R})"] = (ce_rounds,
+                                sim_time(ce_rounds, zb, float(R)),
+                                ce["final_auc"])
+
+    for name, (r, t, a) in rows.items():
+        csv_row(name, r, f"{t:.1f}", f"{t_van / t:.2f}x", f"{a:.4f}")
+
+
+def main():
+    run_one("criteo", "wdl")
+    run_one("avazu", "dssm")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Kernel-level microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only — Python-interpreted, meaningless to time), so wall-times are reported
+for the pure-jnp oracles (XLA:CPU-compiled) as relative indicators, plus the
+analytic VMEM-pass accounting that motivates each fusion (DESIGN §2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import csv_row
+
+
+def _time(fn, *args, n=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6   # us
+
+
+def bench_cosine_weight():
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    B, F = 4096, 256                      # the paper's Z_A geometry
+    a = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    dz = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+
+    fused = jax.jit(lambda a_, s_, d_: ref.weighted_cotangent_ref(
+        a_, s_, d_, 0.5))
+    us = _time(fused, a, s, dz)
+    naive = jax.jit(lambda a_, s_, d_: (
+        ref.cosine_weight_ref(a_, s_, 0.5)[:, None] * d_))
+    us2 = _time(naive, a, s, dz)
+    # one fused pass moves 3 inputs + 1 output; the unfused composition
+    # re-reads dz and re-materializes w
+    bytes_fused = 4 * B * F * 4
+    csv_row("cosine_weight(jnp-oracle)", f"{us:.1f}us",
+            f"hbm_bytes_one_pass={bytes_fused}")
+    csv_row("cosine_weight(naive-2pass)", f"{us2:.1f}us", "")
+
+
+def bench_flash_oracle():
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 1, 1024, 4, 64
+    q, k, v = (jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    dense = jax.jit(lambda *a: ref.flash_attention_ref(*a, causal=True))
+    us = _time(dense, q, k, v, n=5)
+    csv_row("attention_dense_oracle(B1,S1024,H4,hd64)", f"{us:.1f}us",
+            f"score_bytes={B * H * S * S * 4}")
+
+    from repro.models import layers as L
+    pos = jnp.arange(S, dtype=jnp.int32)
+    blockwise = jax.jit(lambda q_, k_, v_: L._blockwise_sdpa(
+        q_, k_, v_, pos, pos, causal=True, window=0))
+    us2 = _time(blockwise, q, k, v, n=5)
+    csv_row("attention_blockwise(flash-schedule)", f"{us2:.1f}us",
+            f"tile_bytes={L.Q_BLOCK * L.KV_BLOCK * 4}")
+
+
+def bench_adagrad():
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    acc = jnp.abs(jnp.asarray(rng.normal(size=(n,)), jnp.float32))
+    fn = jax.jit(lambda g_, a_: ref.fused_adagrad_ref(g_, a_, 0.01, 1e-10))
+    us = _time(fn, g, acc)
+    csv_row("fused_adagrad_oracle(1M params)", f"{us:.1f}us",
+            f"stream_bytes={4 * n * 4}")
+
+
+def bench_protocol_round():
+    """Per-round step cost of the three protocols (CPU wall, WDL small)."""
+    from .common import default_workload, run_protocol
+    spec, data, cfg = default_workload("wdl", "criteo")
+    for proto_name, kw in (("vanilla", {}), ("fedbcd", {"R": 5}),
+                           ("celu", {"R": 5, "W": 5})):
+        r = run_protocol(proto_name, data, cfg, rounds=30, eval_every=30,
+                         **kw)
+        csv_row(f"round_wall_{proto_name}",
+                f"{r['wall_s'] / 30 * 1e3:.1f}ms",
+                f"z_bytes={r['z_bytes_per_round']}")
+
+
+def main():
+    csv_row("# microbenchmarks (CPU oracles; Pallas kernels are TPU-target)")
+    bench_cosine_weight()
+    bench_flash_oracle()
+    bench_adagrad()
+    bench_protocol_round()
+
+
+if __name__ == "__main__":
+    main()

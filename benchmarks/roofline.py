@@ -1,0 +1,128 @@
+"""§Roofline reporting + cross-pod collective accounting.
+
+1. Aggregates results/dryrun_baseline.jsonl (written by launch.dryrun) into
+   the per-(arch x shape x mesh) roofline table used by EXPERIMENTS.md.
+2. Measures the pod-protocol claim: inter-pod ppermute bytes per MODEL
+   UPDATE drop ~(R+1)x with CELU local updates (lowering the 2-pod round
+   with R=0 vs R=5 and parsing the HLO).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import csv_row
+
+_RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+RESULTS = [os.path.join(_RESULTS_DIR, "dryrun_baseline.jsonl"),
+           os.path.join(_RESULTS_DIR, "dryrun_final.jsonl")]
+PERF = os.path.join(_RESULTS_DIR, "dryrun_perf2.jsonl")
+
+
+def report_table(paths=None, tag: str = ""):
+    paths = [p for p in (paths or RESULTS) if os.path.exists(p)]
+    if not paths:
+        csv_row("# roofline: no dryrun results",
+                "(run launch.dryrun --all [--multi-pod] first)")
+        return []
+    seen = {}
+    for path in paths:                      # later files take precedence
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("tag", "") != tag:
+                    continue
+                seen[(r["arch"], r["shape"], r["mesh"])] = r   # last wins
+    rows = sorted(seen.values(), key=lambda r: (r["arch"], r["shape"],
+                                                r["mesh"]))
+    csv_row("# roofline terms (seconds/step, per-device HLO)")
+    csv_row("arch", "shape", "mesh", "ok", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_flops_frac", "temp_GB")
+    for r in rows:
+        if not r.get("ok"):
+            csv_row(r["arch"], r["shape"], r["mesh"], "FAIL",
+                    "-", "-", "-", "-", "-", "-")
+            continue
+        t = r["roofline"]
+        csv_row(r["arch"], r["shape"], r["mesh"], "ok",
+                f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+                f"{t['collective_s']:.4f}", r["dominant"],
+                f"{r['useful_flops_frac']:.3f}",
+                f"{r['memory']['temp_bytes'] / 1e9:.1f}")
+    return rows
+
+
+_POD_MEASURE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, re, sys
+sys.path.insert(0, {src!r})
+from repro.core.pod_protocol import make_pod_round, init_pod_state
+from repro.optim import adagrad
+from repro.launch.dryrun import collective_bytes
+
+mesh = jax.make_mesh((2,), ("pod",))
+opt = adagrad(0.05)
+for R in (0, 3, 5, 8):
+    params, opt_state, ws = init_pod_state(
+        jax.random.PRNGKey(0), mesh, opt, n_fields=16, vocab=512, batch=4096,
+        W=5, z_dim=256, hidden=256)
+    rnd = make_pod_round(mesh, opt, R=max(R, 1), cos_xi=0.5)
+    x = jax.ShapeDtypeStruct((2, 4096, 16), jnp.int32)
+    y = jax.ShapeDtypeStruct((2, 4096), jnp.float32)
+    lowered = rnd.lower(params, opt_state, ws, x, y)
+    txt = lowered.compile().as_text()
+    coll = collective_bytes(txt)
+    # ppermute bytes per ROUND are constant (Z_A + dZ_A, the paper's 2x4MB
+    # for B=4096 z=256 fp32); CELU funds 1+R updates with them.
+    cp = coll["collective-permute"] if R else coll["collective-permute"]
+    updates = 1 + R
+    print(f"R={{R}} (vanilla)" if R == 0 else f"R={{R}}        ", end=" ")
+    print(f"ppermute_bytes/round={{cp}} updates/round={{updates}} "
+          f"bytes/update={{cp/updates:.0f}}")
+""".format(src=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pod_collective_accounting():
+    csv_row("# pod-protocol cross-pod bytes (2-device lowering)")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _POD_MEASURE],
+                       capture_output=True, text=True, env=env, timeout=900)
+    for line in (r.stdout or "").strip().splitlines():
+        csv_row(line)
+    if r.returncode != 0:
+        csv_row("# pod measurement failed:", r.stderr[-400:])
+
+
+def report_perf_variants():
+    """§Perf iteration results (tagged runs from dryrun_perf.jsonl)."""
+    if not os.path.exists(PERF):
+        return
+    csv_row("# perf-iteration variants (see EXPERIMENTS.md §Perf)")
+    csv_row("arch", "shape", "tag", "ok", "compute_s", "memory_s",
+            "collective_s", "temp_GB")
+    with open(PERF) as f:
+        for line in f:
+            r = json.loads(line)
+            if not r.get("ok"):
+                csv_row(r["arch"], r["shape"], r.get("tag", ""), "FAIL",
+                        "-", "-", "-", "-")
+                continue
+            t = r["roofline"]
+            csv_row(r["arch"], r["shape"], r.get("tag", ""), "ok",
+                    f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+                    f"{t['collective_s']:.4f}",
+                    f"{r['memory']['temp_bytes'] / 1e9:.1f}")
+
+
+def main():
+    report_table()
+    report_perf_variants()
+    pod_collective_accounting()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark harness: one block per paper table/figure + roofline report.
+
+  python -m benchmarks.run [--only ablation|end_to_end|roofline|micro]
+
+Emits CSV blocks (``# name`` headers).  REPRO_BENCH_FULL=1 scales up.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=("ablation", "end_to_end", "roofline", "micro", "beyond"))
+    args = ap.parse_args()
+
+    from . import ablation, beyond, end_to_end, microbench, roofline
+    blocks = {
+        "micro": microbench.main,
+        "roofline": roofline.main,
+        "end_to_end": end_to_end.main,
+        "ablation": ablation.main,
+        "beyond": beyond.main,
+    }
+    picked = [args.only] if args.only else list(blocks)
+    for name in picked:
+        print(f"\n#### {name} " + "#" * 40, flush=True)
+        t0 = time.time()
+        blocks[name]()
+        print(f"#### {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,29 @@
+"""CELU-VFL on an LLM backbone: Party A holds an auxiliary token stream,
+Party B the main tokens + labels.  Runs the full protocol stack (workset
+table, round-robin sampling, instance weighting) on a reduced smollm
+config — the same code path the production configs lower through.
+
+    PYTHONPATH=src python examples/llm_vfl_training.py [--arch hymba-1.5b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as T  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--rounds", type=int, default=12)
+    args = ap.parse_args()
+    T.main(["--arch", args.arch, "--protocol", "celu",
+            "--rounds", str(args.rounds), "--batch-size", "4",
+            "--seq-len", "32", "--reduced", "--R", "3", "--W", "3",
+            "--lr", "0.02"])
+
+
+if __name__ == "__main__":
+    main()

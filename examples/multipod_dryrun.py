@@ -1,0 +1,44 @@
+"""Production-mesh dry-run for one (arch x shape): lower + compile on the
+2x16x16 multi-pod mesh and print the roofline terms.  No device allocation;
+runs on any host.
+
+    python examples/multipod_dryrun.py [--arch hymba-1.5b --shape train_4k]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets the 512-device override
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+         "--shape", args.shape, "--multi-pod"],
+        capture_output=True, text=True, env=env, timeout=3600)
+    for line in out.stdout.splitlines():
+        if line.startswith("{"):
+            r = json.loads(line)
+            print(f"arch={r['arch']} shape={r['shape']} mesh={r['mesh']} "
+                  f"ok={r['ok']}")
+            if r["ok"]:
+                print(f"  roofline: " + ", ".join(
+                    f"{k}={v:.4f}s" for k, v in r["roofline"].items()))
+                print(f"  dominant: {r['dominant']}  "
+                      f"temp={r['memory']['temp_bytes']/1e9:.1f} GB/device")
+                print(f"  collectives: {r['collectives']}")
+    if out.returncode != 0:
+        print(out.stderr[-1000:])
+
+
+if __name__ == "__main__":
+    main()

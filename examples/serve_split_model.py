@@ -1,0 +1,23 @@
+"""Serve a split VFL model: batched prefill + token-by-token decode with the
+party boundary kept as a module boundary.  Uses the VLM config (Party A =
+vision owner supplying patch embeddings) reduced for CPU.
+
+    PYTHONPATH=src python examples/serve_split_model.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as S  # noqa: E402
+
+
+def main():
+    S.main(["--arch", "llama-3.2-vision-90b", "--prompt-len", "16",
+            "--gen", "8", "--batch", "2"])
+    S.main(["--arch", "xlstm-125m", "--prompt-len", "16",
+            "--gen", "8", "--batch", "2"])
+
+
+if __name__ == "__main__":
+    main()

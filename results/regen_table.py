@@ -1,0 +1,42 @@
+"""Regenerate the EXPERIMENTS.md §Roofline markdown table from JSONL.
+
+    python results/regen_table.py [results/dryrun_final.jsonl] [--mesh 16x16]
+"""
+import json
+import sys
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_final.jsonl"
+    mesh = None
+    if "--mesh" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--mesh") + 1]
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("tag"):
+                continue
+            seen[(r["arch"], r["shape"], r["mesh"])] = r
+    print(f"{'arch':24s} {'shape':12s} {'mesh':8s} {'comp_s':>8s} "
+          f"{'mem_s':>8s} {'coll_s':>8s} {'dominant':>12s} {'frac':>6s} "
+          f"{'tempGB':>7s}")
+    n_ok = n = 0
+    for (a, s, m), r in sorted(seen.items()):
+        if mesh and m != mesh:
+            continue
+        n += 1
+        if not r["ok"]:
+            print(f"{a:24s} {s:12s} {m:8s} FAIL {r.get('error', '')[:60]}")
+            continue
+        n_ok += 1
+        t = r["roofline"]
+        print(f"{a:24s} {s:12s} {m:8s} {t['compute_s']:8.4f} "
+              f"{t['memory_s']:8.4f} {t['collective_s']:8.4f} "
+              f"{r['dominant']:>12s} {r['useful_flops_frac']:6.2f} "
+              f"{r['memory']['temp_bytes'] / 1e9:7.1f}")
+    print(f"# {n_ok}/{n} ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Pytree checkpointing to .npz (flat key paths), no external deps.
+
+Per-party checkpoints: in a real deployment each party persists only its own
+tower (privacy discipline) — ``save(path, state, party="a")`` selects the
+corresponding subtree.  Restore rebuilds into the exact reference pytree, so
+shapes/dtypes are validated on load.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(p) for p in path)
+        arr = np.asarray(leaf) if leaf.dtype != jnp.bfloat16 else \
+            np.asarray(leaf.astype(jnp.float32))  # numpy has no bf16
+        flat[key] = arr
+    return flat
+
+
+def _key_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return p.name
+    return str(p)
+
+
+def save(path: str, tree: Any, party: Optional[str] = None) -> None:
+    if party is not None:
+        tree = {party: tree[party]} if isinstance(tree, dict) else tree
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, reference: Any) -> Any:
+    """Load into the structure of ``reference`` (shape/dtype checked)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    out = []
+    for pathkeys, ref in leaves_ref:
+        key = _SEP.join(_key_str(p) for p in pathkeys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(reference), out)

@@ -1,0 +1,199 @@
+"""Architecture / shape / run configuration dataclasses.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG: ArchConfig`` with the exact assigned hyper-parameters (citation in
+``source``).  ``ArchConfig.reduced()`` produces the CPU-smoke variant
+(<=2 layers, d_model<=512, <=4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0        # shared (always-on) experts, llama4-style
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # "ep" shards the expert dim over the model axis (all-to-all dispatch),
+    # "tp" shards each expert's FFN over the model axis (no all-to-all).
+    sharding: str = "tp"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM (used by hybrid archs)."""
+    state_dim: int = 16
+    conv_dim: int = 4
+    expand: int = 2
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block layout: sLSTM at layer indices i % slstm_every == 0."""
+    slstm_every: int = 4
+    conv_dim: int = 4
+
+
+@dataclass(frozen=True)
+class VFLConfig:
+    """How the backbone is split across the two parties (see DESIGN §3)."""
+    layers_a: int            # Party A bottom tower depth
+    layers_b: int            # Party B bottom tower depth
+    layers_top: int          # Party B top tower depth (+ head)
+    fusion: str = "add"      # add | cross_attn
+    z_dim: int = 0           # dim of the exchanged Z_A; 0 -> d_model
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str              # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0        # 0 -> d_model // n_heads
+    source: str = ""
+
+    # family extras
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    cross_attn_every: int = 0      # vlm: every k-th layer cross-attends
+    enc_layers: int = 0            # audio: encoder depth (Party A tower)
+    qkv_bias: bool = False         # qwen-style attention bias
+
+    # attention window; 0 = full causal.  long_500k configs override this.
+    sliding_window: int = 0
+
+    # modality frontends (stubs; see DESIGN §5)
+    n_patches: int = 0             # vlm: patch tokens from the vision stub
+    d_frontend: int = 0            # vlm/audio: stub embedding dim
+    audio_downsample: int = 4      # audio: frames = seq_len // downsample
+
+    aux_vocab_size: int = 65536    # Party A token stream vocab (text archs)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    vfl: Optional[VFLConfig] = None
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def vfl_split(self) -> VFLConfig:
+        if self.vfl is not None:
+            return self.vfl
+        if self.family == "vlm":
+            # Party A = vision owner; bottom_A is the projector, all decoder
+            # layers belong to Party B; top = last quarter.
+            lt = max(1, self.n_layers // 4)
+            return VFLConfig(layers_a=0, layers_b=self.n_layers - lt,
+                             layers_top=lt, fusion="cross_attn")
+        if self.family == "audio":
+            lt = max(1, self.n_layers // 4)
+            return VFLConfig(layers_a=self.enc_layers,
+                             layers_b=self.n_layers - lt, layers_top=lt,
+                             fusion="cross_attn")
+        la = max(1, self.n_layers // 4)
+        lt = max(1, self.n_layers // 4)
+        return VFLConfig(layers_a=la, layers_b=self.n_layers - la - lt,
+                         layers_top=lt, fusion="add")
+
+    def with_sliding_window(self, window: int) -> "ArchConfig":
+        return dataclasses.replace(self, sliding_window=window)
+
+    def reduced(self) -> "ArchConfig":
+        """CPU smoke variant: same family, tiny dims."""
+        d = 128
+        heads, kv = 4, 2
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe, n_experts=4, top_k=min(self.moe.top_k, 2))
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=2,
+            d_model=d,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=d // heads,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            aux_vocab_size=512,
+            moe=moe,
+            cross_attn_every=2 if self.cross_attn_every else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            n_patches=16 if self.n_patches else 0,
+            d_frontend=32 if self.d_frontend else 0,
+            vfl=VFLConfig(
+                layers_a=0 if self.family == "vlm" else 1,
+                layers_b=1, layers_top=1,
+                fusion=self.vfl_split.fusion),
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# Window applied to attention archs for the long_500k decode config
+# (DESIGN §3 long_500k policy).
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclass(frozen=True)
+class CELUConfig:
+    """Hyper-parameters of the paper's technique (Section 3 notation)."""
+    R: int = 5               # max local updates per cached batch
+    W: int = 5               # workset table capacity (mini-batches)
+    xi_degrees: float = 60.0 # weighting threshold ξ (cos ξ floor)
+    weighting: bool = True
+    sampling: str = "round_robin"   # round_robin | consecutive (FedBCD)
+    # BEYOND-PAPER: wire precision of the exchanged ⟨Z_A, ∇Z_A⟩.  The paper
+    # sends fp32; "bfloat16" halves WAN bytes per round (EXPERIMENTS §Perf
+    # pair 3 validates convergence parity).
+    wire_dtype: str = "float32"
+    # BEYOND-PAPER: Gaussian-mechanism DP on the wire (core/privacy.py);
+    # sigma = 0 disables.  Noised statistics are what gets cached, so local
+    # updates reuse already-released messages at no extra privacy cost.
+    dp_sigma: float = 0.0
+    dp_clip: float = 1.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 256
+    lr: float = 0.01
+    optimizer: str = "adagrad"      # paper uses AdaGrad
+    steps: int = 200
+    seed: int = 0
+    celu: CELUConfig = field(default_factory=CELUConfig)

@@ -1,0 +1,12 @@
+"""granite-moe-3b-a800m — MoE 40 experts top-8, d_ff=512 per expert
+[hf:ibm-granite/granite-3.0-1b-a400m-base].  Spec's main line says 40e
+top-8 (bracket note says 32); we follow the main line (DESIGN §3)."""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, d_ff=512,
+    vocab_size=49155,
+    moe=MoEConfig(n_experts=40, top_k=8),
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

@@ -1,0 +1,3 @@
+"""CELU-VFL core: workset table, instance weighting, training protocols."""
+from . import protocol, weighting, workset  # noqa: F401
+from .protocol import VFLTask, init_state, make_round, protocol_config  # noqa: F401

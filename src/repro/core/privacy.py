@@ -1,0 +1,56 @@
+"""Differential-privacy noise on the exchanged statistics (paper §4.2).
+
+The paper argues CELU-VFL *strengthens* privacy because fewer messages
+cross the boundary.  This module makes the complementary mechanism
+first-class: per-round Gaussian noise on the wire tensors (Z_A uplink,
+∇Z_A downlink) after L2 clipping — the standard Gaussian mechanism applied
+to the cut tensors, so each party bounds what the other can infer per
+message.  Composable with the workset: NOISED statistics are what gets
+cached, so local updates add NO additional privacy cost (they reuse
+already-released messages — the paper's communication reduction is also an
+ε reduction under sequential composition).
+
+``benchmarks.beyond`` sweeps sigma to chart the privacy/utility tradeoff.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class DPConfig(NamedTuple):
+    clip: float = 1.0        # per-instance L2 clip of the message rows
+    sigma: float = 0.0       # noise stddev as a multiple of clip (0 = off)
+
+
+def clip_rows(x, clip: float):
+    """Per-instance L2 clipping over flattened non-batch dims."""
+    B = x.shape[0]
+    flat = x.reshape(B, -1).astype(jnp.float32)
+    n = jnp.linalg.norm(flat, axis=1, keepdims=True)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(n, 1e-12))
+    return (flat * scale).reshape(x.shape).astype(x.dtype)
+
+
+def privatize(rng, x, cfg: DPConfig):
+    """Clip + add Gaussian noise (the released message)."""
+    if cfg.sigma <= 0.0:
+        return x
+    y = clip_rows(x, cfg.clip)
+    noise = cfg.sigma * cfg.clip * jax.random.normal(
+        rng, y.shape, jnp.float32)
+    return (y.astype(jnp.float32) + noise).astype(x.dtype)
+
+
+def epsilon_per_release(cfg: DPConfig, delta: float = 1e-5) -> float:
+    """Classic Gaussian-mechanism bound per released message (sensitivity =
+    clip, both neighboring rows clipped): eps = sqrt(2 ln(1.25/delta))/sigma.
+    CELU releases 1/(1+R) as many messages per model update as vanilla, so
+    under sequential composition the per-update budget shrinks the same way
+    the communication does."""
+    import math
+    if cfg.sigma <= 0:
+        return float("inf")
+    return math.sqrt(2 * math.log(1.25 / delta)) / cfg.sigma

@@ -1,0 +1,52 @@
+"""Staleness-aware instance weighting (paper Algorithm 2).
+
+``instance_weights(ad_hoc, stale, cos_xi)`` measures the per-instance cosine
+similarity between the ad-hoc statistics (computed this local step) and the
+cached stale statistics, and floors it at ``cos ξ`` (below the threshold the
+instance weight is zeroed).  The cosine is taken over all non-batch axes
+flattened per instance — exactly the paper's ``cos(·, ·, axis=1)`` with the
+2-D flattening of footnote 3.
+
+Rationale (paper §3.3): for an FC layer ``∇θ = z_inᵀ ∇z_out``, so
+``cos(∇θ, ∇̃θ) = cos(∇z_out, ∇̃z_out)`` — row-wise similarity of the cut
+tensors is a proxy for the similarity of the true and approximated gradients.
+
+``use_pallas=True`` routes through the fused VMEM kernel in
+``kernels/cosine_weight.py`` (one HBM pass instead of three); the default
+pure-jnp path is its oracle and is what the TPU dry-run lowers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def row_cosine(a, b):
+    """Per-instance cosine similarity.  a, b: (B, ...) -> (B,) float32."""
+    B = a.shape[0]
+    af = a.reshape(B, -1).astype(jnp.float32)
+    bf = b.reshape(B, -1).astype(jnp.float32)
+    num = jnp.sum(af * bf, axis=1)
+    den = jnp.sqrt(jnp.sum(af * af, axis=1) * jnp.sum(bf * bf, axis=1))
+    return num / jnp.maximum(den, EPS)
+
+
+def instance_weights(ad_hoc, stale, cos_xi: float, *,
+                     use_pallas: bool = False):
+    """Algorithm 2 ``InsWeight``: cosine similarities floored at cos ξ.
+
+    Returns float32 weights of shape (B,); entries below the threshold are 0.
+    """
+    if use_pallas:
+        from ..kernels import ops as kops
+        return kops.cosine_weight(ad_hoc, stale, cos_xi)
+    w = row_cosine(ad_hoc, stale)
+    return jnp.where(w < cos_xi, 0.0, w)
+
+
+def xi_to_cos(xi_degrees: float) -> float:
+    """Paper parameterizes the threshold as an angle ξ (e.g. 60°)."""
+    import math
+    return math.cos(math.radians(xi_degrees))

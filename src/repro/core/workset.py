@@ -1,0 +1,129 @@
+"""The workset table: a device-resident ring buffer of cached statistics.
+
+Paper §3.1: the table caches ``⟨i, Z_A^(i), ∇Z_A^(i), j⟩`` entries with two
+clocks per entry — the insertion timestamp ``i`` (the communication round
+that produced it) and the use count ``j``.  Eviction rules:
+
+  * capacity: during the insertion at time ``i``, entries inserted before
+    ``i - W + 1`` are dead (the ring buffer overwrites slot ``i mod W``, and
+    the validity predicate ``insert_time > time - W`` retires the rest);
+  * exhaustion: entries that reach ``R`` uses are dead.
+
+Everything is a fixed-shape pytree of jnp arrays, so insert / sample /
+tick are all jittable (``lax.dynamic_*`` only — no Python in the step) and
+the table shards like any other training-state leaf (batch dim over the
+``data`` mesh axis).
+
+Each party owns its own table.  Besides the exchanged statistics, a party
+caches its OWN features for the batch (Party A: ``X_A``; Party B: ``X_B, y``)
+so local updates never touch the host — callers pass those through the
+generic ``aux`` pytree.
+
+Round-robin sampling (paper §3.2): a cursor walks slots in insertion order;
+a slot cannot be re-sampled within ``W-1`` local steps by construction.
+Consecutive sampling (FedBCD / the ``W=1`` degenerate case) always returns
+the most recently inserted slot.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT_MIN = -(2 ** 30)
+
+
+def workset_init(W: int, entry_example: Dict[str, Any]) -> Dict[str, Any]:
+    """Create an empty table.  ``entry_example`` is a pytree of arrays with
+    the per-batch shapes (e.g. {"z_a": (B,S,d), "dz_a": (B,S,d),
+    "x": ..., "y": ...}); the table stacks a leading W axis."""
+    buf = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((W,) + a.shape, a.dtype), entry_example)
+    return {
+        "buf": buf,
+        "insert_time": jnp.full((W,), INT_MIN, jnp.int32),
+        "use_count": jnp.zeros((W,), jnp.int32),
+        "batch_idx": jnp.full((W,), -1, jnp.int32),
+        "cursor": jnp.int32(0),
+        "time": jnp.int32(0),      # communication rounds so far
+    }
+
+
+def workset_insert(ws: Dict[str, Any], entry: Dict[str, Any],
+                   batch_idx) -> Dict[str, Any]:
+    """Insert a fresh entry at ring slot ``time mod W``; bump the clock."""
+    W = ws["insert_time"].shape[0]
+    t = ws["time"]
+    slot = jnp.mod(t, W)
+    buf = jax.tree_util.tree_map(
+        lambda b, e: jax.lax.dynamic_update_index_in_dim(b, e.astype(b.dtype),
+                                                         slot, 0),
+        ws["buf"], entry)
+    return {
+        "buf": buf,
+        "insert_time": ws["insert_time"].at[slot].set(t),
+        "use_count": ws["use_count"].at[slot].set(0),
+        "batch_idx": ws["batch_idx"].at[slot].set(jnp.int32(batch_idx)),
+        "cursor": ws["cursor"],
+        "time": t + 1,
+    }
+
+
+def _valid_mask(ws: Dict[str, Any], R: int) -> jnp.ndarray:
+    """(W,) bool — alive entries: inserted, not expired, not exhausted."""
+    t = ws["time"]
+    W = ws["insert_time"].shape[0]
+    alive = ws["insert_time"] >= t - W      # not expired (ring also enforces)
+    alive &= ws["insert_time"] > INT_MIN    # ever inserted
+    alive &= ws["use_count"] < R            # not exhausted
+    return alive
+
+
+def workset_sample(ws: Dict[str, Any], R: int, strategy: str
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any], jnp.ndarray,
+                              jnp.ndarray]:
+    """Draw one entry for a local update.
+
+    strategy: "round_robin" — advance the cursor to the next alive slot
+    (uniform over the table); "consecutive" — always the freshest slot
+    (FedBCD).  Returns (new_ws, entry, batch_idx, valid) where ``valid`` is
+    a bool scalar (False -> caller must no-op the update).
+    """
+    W = ws["insert_time"].shape[0]
+    alive = _valid_mask(ws, R)
+    if strategy == "consecutive":
+        slot = jnp.mod(ws["time"] - 1, W)
+        valid = alive[slot]
+        new_cursor = ws["cursor"]
+    elif strategy == "round_robin":
+        # STRICT cycle (paper §3.2 / Fig 4): the cursor advances by exactly
+        # one per draw, so a slot cannot be re-sampled within W-1 draws.
+        # Dead/empty slots yield an invalid (no-op) draw — the "bubbles" the
+        # paper accepts in the first W-1 rounds.  Skipping dead slots
+        # instead would collapse the schedule back to consecutive reuse of
+        # the freshest batch (measured: identical curves for all W).
+        slot = jnp.mod(ws["cursor"], W)
+        valid = alive[slot]
+        new_cursor = jnp.mod(slot + 1, W)
+    else:
+        raise ValueError(strategy)
+
+    entry = jax.tree_util.tree_map(lambda b: b[slot], ws["buf"])
+    new_ws = dict(ws)
+    new_ws["use_count"] = ws["use_count"].at[slot].add(
+        jnp.where(valid, 1, 0))
+    if strategy == "round_robin":
+        new_ws["cursor"] = new_cursor          # advance even on a bubble
+    else:
+        new_ws["cursor"] = jnp.where(valid, new_cursor, ws["cursor"])
+    return new_ws, entry, ws["batch_idx"][slot], valid
+
+
+def workset_stats(ws: Dict[str, Any], R: int) -> Dict[str, jnp.ndarray]:
+    alive = _valid_mask(ws, R)
+    return {
+        "n_alive": jnp.sum(alive),
+        "total_uses": jnp.sum(jnp.where(alive, ws["use_count"], 0)),
+        "time": ws["time"],
+    }

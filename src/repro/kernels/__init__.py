@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True).
+
+  cosine_weight   -- fused Algorithm-2 staleness weighting (VPU, one pass)
+  flash_attention -- blockwise online-softmax attention (MXU tiles)
+  fused_adagrad   -- optimizer accumulate+scale (memory-bound optimum)
+
+Each has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py.
+"""

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container every kernel runs with ``interpret=True`` (the kernel
+body executed in Python by the Pallas interpreter — bit-accurate for
+correctness, not for speed).  On a real TPU set
+``repro.kernels.ops.INTERPRET = False`` (or the REPRO_PALLAS_COMPILE env
+var) to compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import cosine_weight as _cw
+from . import flash_attention as _fa
+from . import fused_adagrad as _ag
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "") == ""
+
+
+def cosine_weight(ad_hoc, stale, cos_xi):
+    """Algorithm-2 InsWeight: -> (B,) float32 weights."""
+    B = ad_hoc.shape[0]
+    a2 = ad_hoc.reshape(B, -1)
+    s2 = stale.reshape(B, -1)
+    w, _ = _cw.cosine_weight_2d(a2, s2, jnp.zeros_like(a2),
+                                jnp.float32(cos_xi), interpret=INTERPRET)
+    return w
+
+
+def weighted_cotangent(ad_hoc, stale, dz, cos_xi):
+    """Fused InsWeight + weights ⊙ ∇Z.  -> (weights (B,), weighted dz)."""
+    B = ad_hoc.shape[0]
+    shape = dz.shape
+    w, out = _cw.cosine_weight_2d(ad_hoc.reshape(B, -1),
+                                  stale.reshape(B, -1), dz.reshape(B, -1),
+                                  jnp.float32(cos_xi), interpret=INTERPRET)
+    return w, out.reshape(shape)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """(B, S, H, hd) x3 -> (B, S, H, hd); kv pre-repeated to H heads."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=INTERPRET)
+
+
+def fused_adagrad(grad, accum, lr, eps):
+    """-> (update fp32, new_accum fp32)."""
+    return _ag.fused_adagrad(grad, accum, lr, eps, interpret=INTERPRET)
+
+
+def flash_attention_trainable(q, k, v, *, causal: bool = True,
+                              window: int = 0):
+    """Differentiable flash attention (custom VJP: FlashAttention-2
+    backward kernels — dq / dkv recompute score tiles, never materialize
+    the softmax)."""
+    from .flash_attention_bwd import flash_attention_vjp
+    return flash_attention_vjp(q, k, v, causal, window, INTERPRET)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the mathematically-plain composition that the fused kernel
+must reproduce; tests sweep shapes/dtypes and assert kernel(interpret=True)
+against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def cosine_weight_ref(ad_hoc, stale, cos_xi: float):
+    """Per-row cosine over flattened non-batch dims, floored at cos_xi.
+
+    -> (B,) float32 weights (Algorithm 2 InsWeight)."""
+    B = ad_hoc.shape[0]
+    a = ad_hoc.reshape(B, -1).astype(jnp.float32)
+    b = stale.reshape(B, -1).astype(jnp.float32)
+    num = jnp.sum(a * b, axis=1)
+    den = jnp.sqrt(jnp.sum(a * a, axis=1) * jnp.sum(b * b, axis=1))
+    w = num / jnp.maximum(den, EPS)
+    return jnp.where(w < cos_xi, 0.0, w)
+
+
+def weighted_cotangent_ref(ad_hoc, stale, dz, cos_xi: float):
+    """Fused InsWeight + weights ⊙ ∇Z (the full Algorithm-2 line 7-8 hot
+    path): -> weighted cotangent, same shape/dtype as dz."""
+    w = cosine_weight_ref(ad_hoc, stale, cos_xi)
+    w = w.reshape((w.shape[0],) + (1,) * (dz.ndim - 1))
+    return (dz.astype(jnp.float32) * w).astype(dz.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Dense softmax attention oracle.  q,k,v: (B, S, H, hd) (GQA: kv heads
+    already repeated).  fp32 softmax internals."""
+    B, S, H, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    pos = jnp.arange(S)
+    d = pos[:, None] - pos[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= d >= 0
+    if window:
+        mask &= d < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def fused_adagrad_ref(grad, accum, lr: float, eps: float):
+    """AdaGrad accumulate + scaled update.  -> (update, new_accum)."""
+    g = grad.astype(jnp.float32)
+    a_new = accum + g * g
+    return -lr * g / (jnp.sqrt(a_new) + eps), a_new

@@ -1,0 +1,38 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod = 16 x 16 = 256 chips, axes (data, model).
+Multi-pod  = 2 x 16 x 16 = 512 chips, axes (pod, data, model); the ``pod``
+axis is the slow inter-pod link — in the CELU party-to-pod mapping it
+carries the two VFL parties (core/pod_protocol.py), in the generic dry-run
+it extends data parallelism.
+
+Functions, not module constants: importing this module never touches jax
+device state (device count locks on first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) for the roofline terms
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+SINGLE_POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever fits the current host's devices — for smoke tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,182 @@
+"""Step builders + abstract input specs for every (arch × shape).
+
+``train_step``   — full VFL forward/backward + AdaGrad update (train shapes).
+``prefill_step`` — full-context forward emitting decode caches.
+``serve_step``   — ONE new token against a seq_len-deep KV/state cache
+                   (decode shapes lower THIS, per the assignment).
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input — the dry-run lowers against these, no allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import vfl
+from ..models.initializers import PARAM_DTYPE
+from ..optim import Optimizer, apply_updates
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training/prefill batch for the family (frontends stubbed: patch/frame
+    embeddings arrive precomputed — DESIGN §5)."""
+    B, S = shape.global_batch, shape.seq_len
+    spec: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        spec["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        spec["patches"] = _sds((B, cfg.n_patches, cfg.d_frontend),
+                               jnp.float32)
+    elif cfg.family == "audio":
+        spec["frames"] = _sds((B, S // cfg.audio_downsample, cfg.d_frontend),
+                              jnp.float32)
+    else:
+        spec["tokens_a"] = _sds((B, S), jnp.int32)
+    return spec
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig
+                 ) -> Tuple[Dict[str, Any], Any, Any]:
+    """-> (step_batch, caches, pos) ShapeDtypeStructs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    step: Dict[str, Any] = {"token": _sds((B, 1), jnp.int32)}
+    if cfg.family not in ("vlm", "audio"):
+        step["token_a"] = _sds((B, 1), jnp.int32)
+    mem_len = 0
+    if cfg.family == "vlm":
+        mem_len = cfg.n_patches
+    elif cfg.family == "audio":
+        mem_len = S // cfg.audio_downsample
+    caches = jax.eval_shape(
+        lambda: vfl.make_serve_cache(cfg, B, S, mem_len))
+    pos = _sds((), jnp.int32)
+    return step, caches, pos
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All abstract inputs for the shape's step function, keyed by arg."""
+    if shape.kind == "decode":
+        step, caches, pos = decode_specs(cfg, shape)
+        return {"caches": caches, "step_batch": step, "pos": pos}
+    return {"batch": batch_specs(cfg, shape)}
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: vfl.init_all(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------
+# Steps
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, opt: Optimizer, *,
+                    microbatches: int = 1, unroll_microbatches: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    ``microbatches`` > 1 accumulates gradients over batch slices — live
+    remat activations scale with the per-device microbatch, so peak memory
+    drops ~N× at the cost of re-reading weights per slice (EXPERIMENTS
+    §Perf pair 1).  ``unroll_microbatches`` unrolls the loop instead of
+    ``lax.scan``: the scan body appears ONCE in the HLO so static analyses
+    (cost_analysis, collective parsing) undercount it N× — the dry-run
+    lowers the unrolled form for honest roofline terms, real training uses
+    the scan (sequencing = the memory guarantee)."""
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: vfl.joint_loss(p, cfg, batch, train=True))(params)
+        else:
+            from ..models.layers import shard_batch_dim
+            B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            assert B % microbatches == 0, (B, microbatches)
+            mb = B // microbatches
+            split = jax.tree_util.tree_map(
+                lambda a: a.reshape((microbatches, mb) + a.shape[1:]), batch)
+
+            def one(mbatch):
+                mbatch = jax.tree_util.tree_map(shard_batch_dim, mbatch)
+                return jax.value_and_grad(
+                    lambda p: vfl.joint_loss(p, cfg, mbatch, train=True)
+                )(params)
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if unroll_microbatches:
+                loss = jnp.float32(0.0)
+                grads = g0
+                for i in range(microbatches):
+                    mbatch = jax.tree_util.tree_map(lambda a: a[i], split)
+                    li, gi = one(mbatch)
+                    loss = loss + li
+                    grads = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32), grads, gi)
+            else:
+                def acc_step(carry, mbatch):
+                    loss_acc, g_acc = carry
+                    li, gi = one(mbatch)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc, gi)
+                    return (loss_acc + li, g_acc), None
+
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.float32(0.0), g0), split)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return vfl.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, caches, step_batch, pos):
+        return vfl.decode_step(params, cfg, caches, step_batch, pos)
+    return serve_step
+
+
+def make_step(cfg: ArchConfig, shape: ShapeConfig, opt: Optimizer = None, *,
+              microbatches: int = 1):
+    """The step function a shape lowers, matching input_specs keys."""
+    if shape.kind == "train":
+        assert opt is not None
+        return make_train_step(cfg, opt, microbatches=microbatches)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)
+
+
+# --------------------------------------------------------------------------
+# Concrete (host) batches for smoke tests
+# --------------------------------------------------------------------------
+def concrete_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in batch_specs(cfg, shape).items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size if k != "tokens_a" else cfg.aux_vocab_size
+            out[k] = jnp.asarray(
+                rng.integers(0, hi, size=s.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(
+                rng.normal(size=s.shape).astype(np.float32))
+    return out

@@ -1,0 +1,183 @@
+"""End-to-end VFL training driver.
+
+Two modes:
+  * DLRM (the paper's workloads): --arch wdl-criteo | dssm-avazu, trains on
+    the synthetic vertically-partitioned stream with the selected protocol
+    (vanilla | fedbcd | celu) and reports AUC + communication accounting
+    (rounds, bytes, simulated-WAN seconds).
+  * LLM backbones: --arch <assigned-id> trains a REDUCED variant on CPU for
+    --steps rounds (the full configs are exercised by the dry-run only).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch wdl-criteo \
+      --protocol celu --rounds 300 --R 5 --W 5 --xi 60
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --protocol celu --rounds 20 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get_config
+from ..configs.base import ArchConfig, CELUConfig
+from ..core import protocol as proto
+from ..data import synthetic as synth
+from ..models import vfl
+from ..models.tabular import DLRMConfig, auc, make_dlrm
+from ..optim import make_optimizer
+
+# Simulated-WAN wall-clock model (paper §2.1: 300 Mbps, gateway latency).
+WAN_BANDWIDTH = 300e6 / 8          # bytes/s
+WAN_LATENCY = 0.01                 # s, per direction
+
+
+def wan_seconds(nbytes: int) -> float:
+    return nbytes / WAN_BANDWIDTH + 2 * WAN_LATENCY
+
+
+def _as_jax(d: Dict[str, np.ndarray]):
+    return {k: jnp.asarray(v) for k, v in d.items()}
+
+
+# --------------------------------------------------------------------------
+def llm_task(cfg: ArchConfig) -> proto.VFLTask:
+    """VFLTask over the LLM backbone split (text archs)."""
+    def forward_a(pa, batch_a):
+        return vfl.forward_a(pa, cfg, batch_a, train=True)
+
+    def loss_b(pb, z_a, batch_b):
+        return vfl.per_instance_loss(pb, cfg, z_a, batch_b, train=True)
+
+    return proto.VFLTask(forward_a, loss_b)
+
+
+def train_dlrm(args) -> Dict[str, Any]:
+    cfg: DLRMConfig = get_config(args.arch)
+    if args.small:
+        cfg = dataclasses.replace(cfg, vocab=128, embed_dim=8, z_dim=32,
+                                  hidden=(64, 32))
+    spec_name = {"wdl-criteo": "criteo", "dssm-avazu": "avazu"}[args.arch]
+    spec = dataclasses.replace(synth.TABULAR_SPECS[spec_name],
+                               vocab=cfg.vocab, n_train=args.n_train,
+                               n_test=args.n_test)
+    data = synth.make_tabular(spec, seed=args.seed)
+    init_fn, task, predict = make_dlrm(cfg)
+
+    base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
+                      weighting=not args.no_weighting)
+    celu_cfg, n_local = proto.protocol_config(args.protocol, base)
+    params = init_fn(jax.random.PRNGKey(args.seed), cfg)
+    opt = make_optimizer(args.optimizer, args.lr)
+
+    it = synth.aligned_batches(data["train"], args.batch_size,
+                               seed=args.seed)
+    _, ba0, bb0 = next(it)
+    state = proto.init_state(task, params, opt, celu_cfg, _as_jax(ba0),
+                             _as_jax(bb0))
+    rnd = proto.make_round(task, opt, celu_cfg, local_steps=n_local)
+    z_bytes = proto.exchange_bytes((args.batch_size, cfg.z_dim))
+
+    te = data["test"]
+    tea, teb = ({"x_a": jnp.asarray(te["x_a"])},
+                {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])})
+    it = synth.aligned_batches(data["train"], args.batch_size,
+                               seed=args.seed)
+    t0 = time.time()
+    history = []
+    for i in range(args.rounds):
+        bi, ba, bb = next(it)
+        state, m = rnd(state, _as_jax(ba), _as_jax(bb), bi)
+        if (i + 1) % max(1, args.rounds // 10) == 0:
+            logits = predict(state["params"], cfg, tea, teb)
+            a = auc(np.asarray(logits), te["y"])
+            history.append((i + 1, float(m["loss"]), a))
+            print(f"round {i+1:6d} loss {float(m['loss']):.4f} "
+                  f"AUC {a:.4f} local_steps {int(m.get('local_steps', 0))} "
+                  f"w_mean {float(m.get('w_mean', 0)):.3f}", flush=True)
+    wall = time.time() - t0
+    comm_s = args.rounds * wan_seconds(z_bytes)
+    out = {
+        "arch": args.arch, "protocol": args.protocol,
+        "rounds": args.rounds, "final_auc": history[-1][2] if history else None,
+        "comm_bytes": args.rounds * z_bytes,
+        "sim_wan_s": comm_s, "compute_wall_s": wall,
+        "history": history,
+    }
+    print(f"[done] {args.protocol}: AUC={out['final_auc']:.4f} "
+          f"comm={out['comm_bytes']/1e6:.1f}MB "
+          f"simWAN={comm_s:.1f}s wall={wall:.1f}s")
+    return out
+
+
+def train_llm(args) -> Dict[str, Any]:
+    cfg: ArchConfig = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit("protocol training demo uses text-family archs; "
+                         "vlm/audio exercise the serving path "
+                         "(launch.serve) and the dry-run")
+    B, S = args.batch_size, args.seq_len
+    data = synth.make_token_stream(max(B * 8, 64), S, cfg.vocab_size,
+                                   cfg.aux_vocab_size, seed=args.seed)
+    task = llm_task(cfg)
+    base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
+                      weighting=not args.no_weighting)
+    celu_cfg, n_local = proto.protocol_config(args.protocol, base)
+    params = vfl.init_all(jax.random.PRNGKey(args.seed), cfg)
+    opt = make_optimizer(args.optimizer, args.lr)
+
+    it = synth.token_batches(data, B, seed=args.seed)
+    _, ba0, bb0 = next(it)
+    state = proto.init_state(task, params, opt, celu_cfg, _as_jax(ba0),
+                             _as_jax(bb0))
+    rnd = proto.make_round(task, opt, celu_cfg, local_steps=n_local)
+    it = synth.token_batches(data, B, seed=args.seed)
+    losses = []
+    for i in range(args.rounds):
+        bi, ba, bb = next(it)
+        state, m = rnd(state, _as_jax(ba), _as_jax(bb), bi)
+        losses.append(float(m["loss"]))
+        if (i + 1) % max(1, args.rounds // 10) == 0:
+            print(f"round {i+1:4d} loss {losses[-1]:.4f}", flush=True)
+    print(f"[done] {args.arch} {args.protocol}: "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return {"arch": args.arch, "losses": losses}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--protocol", default="celu",
+                    choices=("vanilla", "fedbcd", "celu"))
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--R", type=int, default=5)
+    ap.add_argument("--W", type=int, default=5)
+    ap.add_argument("--xi", type=float, default=60.0)
+    ap.add_argument("--no-weighting", action="store_true")
+    ap.add_argument("--optimizer", default="adagrad")
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--small", action="store_true",
+                    help="smaller DLRM dims for quick CPU runs")
+    ap.add_argument("--n-train", type=int, default=32768)
+    ap.add_argument("--n-test", type=int, default=8192)
+    args = ap.parse_args(argv)
+
+    if args.arch in ("wdl-criteo", "dssm-avazu"):
+        return train_dlrm(args)
+    return train_llm(args)
+
+
+if __name__ == "__main__":
+    main()

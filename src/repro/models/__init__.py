@@ -1,0 +1,1 @@
+from . import backbone, initializers, layers, moe, ssm, vfl, xlstm  # noqa: F401

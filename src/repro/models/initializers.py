@@ -1,0 +1,49 @@
+"""Parameter initialization helpers (pure pytrees, no flax).
+
+Every layer exposes ``init(rng, ...) -> params`` (nested dict of jnp arrays)
+and a pure ``apply(params, ...)`` function.  Scanned towers stack per-layer
+params along a leading L axis via ``stacked_init``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Parameter dtype used across the library.  bf16 keeps the dry-run memory
+# analysis honest for the TPU target; smoke tests run fine in bf16 too
+# (loss/softmax internals are fp32).
+PARAM_DTYPE = jnp.bfloat16
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype=None):
+    scale = 1.0 / jnp.sqrt(d_in)
+    w = jax.random.uniform(rng, (d_in, d_out), jnp.float32, -scale, scale)
+    return w.astype(dtype or PARAM_DTYPE)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=None):
+    w = jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02
+    return w.astype(dtype or PARAM_DTYPE)
+
+
+def zeros_init(shape, dtype=None):
+    return jnp.zeros(shape, dtype or PARAM_DTYPE)
+
+
+def ones_init(shape, dtype=None):
+    return jnp.ones(shape, dtype or PARAM_DTYPE)
+
+
+def stacked_init(init_fn, rng, n: int):
+    """Stack ``n`` independent layer inits along a leading axis."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(init_fn)(rngs)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))

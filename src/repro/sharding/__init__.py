@@ -1,0 +1,2 @@
+from .rules import (batch_pspec, cache_pspecs, make_sharding,  # noqa: F401
+                    params_pspecs, tree_pspecs)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the host's single CPU device (the 512-device override lives
+# ONLY in launch/dryrun.py).  Keep compilation light.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

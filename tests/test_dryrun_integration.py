@@ -1,0 +1,43 @@
+"""Integration: the 512-device production-mesh dry-run actually lowers,
+compiles, and reports roofline terms (one cheap arch x shape per mesh —
+the full 10x4x2 matrix lives in results/dryrun_*.jsonl)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, timeout=timeout)
+    recs = [json.loads(l) for l in r.stdout.splitlines()
+            if l.startswith("{")]
+    assert recs, r.stderr[-2000:]
+    return recs
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_long_context():
+    (rec,) = _run_dryrun(["--arch", "xlstm-125m", "--shape", "long_500k"])
+    assert rec["ok"], rec.get("error")
+    assert rec["chips"] == 256
+    assert rec["roofline"]["memory_s"] >= 0
+    assert rec["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_train():
+    (rec,) = _run_dryrun(["--arch", "smollm-360m", "--shape", "train_4k",
+                          "--multi-pod"])
+    assert rec["ok"], rec.get("error")
+    assert rec["chips"] == 512 and rec["mesh"] == "2x16x16"
+    # gradient sync must produce collectives on the production mesh
+    assert rec["collective_bytes_per_dev"] > 0

@@ -1,0 +1,149 @@
+"""Multi-party CELU-VFL (K feature parties) and DP-on-the-wire tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CELUConfig
+from repro.core import multiparty as MP
+from repro.core.privacy import DPConfig, clip_rows, epsilon_per_release, \
+    privatize
+from repro.core import protocol as P
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.models.tabular import DLRMConfig, auc, make_dlrm
+from repro.optim import make_optimizer
+
+
+# --------------------------------------------------------------------------
+# 3-party WDL: parties A1, A2 (features), B (features + labels)
+# --------------------------------------------------------------------------
+def _three_party_setup(seed=0):
+    """Split a 12-field dataset as A1: 4, A2: 4, B: 4 (+labels)."""
+    spec = TabularSpec("t", fields_a=8, fields_b=4, vocab=64,
+                       n_train=8192, n_test=2048)
+    data = make_tabular(spec, seed=seed)
+    cfg = DLRMConfig("wdl", 4, 4, vocab=64, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    init_fn, single_task, predict = make_dlrm(cfg)
+
+    # per-party tower inits (A1, A2 identical shape; B = wdl's b-side)
+    p_full_1 = init_fn(jax.random.PRNGKey(seed), cfg)
+    p_full_2 = init_fn(jax.random.PRNGKey(seed + 1), cfg)
+    pa1, pa2, pb = p_full_1["a"], p_full_2["a"], p_full_1["b"]
+    # widen B's top to accept [Z1 | Z2 | Z_B] (3 * z_dim)
+    k = jax.random.PRNGKey(seed + 2)
+    from repro.models.tabular import _mlp_init
+    pb = dict(pb)
+    pb["top"] = _mlp_init(k, [3 * cfg.z_dim, 16, 1])
+
+    from repro.models.tabular import _mlp, _tower
+
+    def forward_a(pa, batch_a):
+        return _tower(pa["tower"], batch_a["x_a"])
+
+    def loss_b(pb_, z_list, batch_b):
+        z_b = _tower(pb_["tower"], batch_b["x_b"])
+        h = jnp.concatenate([z.astype(jnp.float32) for z in z_list]
+                            + [z_b], axis=-1)
+        logit = _mlp(pb_["top"], h)[:, 0]
+        F = batch_b["x_b"].shape[1]
+        wide = pb_["wide"][jnp.arange(F)[None, :], batch_b["x_b"]].sum(1)
+        logit = logit + wide + pb_["bias"]
+        y = batch_b["y"]
+        li = jnp.maximum(logit, 0) - logit * y + jnp.log1p(
+            jnp.exp(-jnp.abs(logit)))
+        return li, jnp.float32(0.0)
+
+    task = MP.MultiVFLTask(forward_a, loss_b)
+    params = {"a": [pa1, pa2], "b": pb}
+    return data, cfg, task, params, loss_b
+
+
+def _split_batches(ba, bb):
+    a1 = {"x_a": jnp.asarray(ba["x_a"][:, :4])}
+    a2 = {"x_a": jnp.asarray(ba["x_a"][:, 4:])}
+    b = {"x_b": jnp.asarray(bb["x_b"]), "y": jnp.asarray(bb["y"])}
+    return [a1, a2], b
+
+
+def test_three_party_celu_trains():
+    data, cfg, task, params, loss_b = _three_party_setup()
+    celu = CELUConfig(R=2, W=2, xi_degrees=60.0)
+    opt = make_optimizer("adagrad", 0.02)
+    it = aligned_batches(data["train"], 128, seed=0)
+    _, ba, bb = next(it)
+    bas, b = _split_batches(ba, bb)
+    state = MP.init_state(task, params, opt, celu, bas, b)
+    rnd = MP.make_round(task, opt, celu)
+    it = aligned_batches(data["train"], 128, seed=0)
+    losses = []
+    for i in range(30):
+        bi, ba, bb = next(it)
+        bas, b = _split_batches(ba, bb)
+        state, m = rnd(state, bas, b, bi)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    assert int(state["comm_rounds"]) == 30
+
+
+def test_three_party_matches_interface_counts():
+    data, cfg, task, params, loss_b = _three_party_setup()
+    celu = CELUConfig(R=2, W=2)
+    opt = make_optimizer("sgd", 0.05)
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    bas, b = _split_batches(ba, bb)
+    state = MP.init_state(task, params, opt, celu, bas, b)
+    assert len(state["ws"]["a"]) == 2
+    assert len(state["params"]["a"]) == 2
+
+
+# --------------------------------------------------------------------------
+# DP on the wire
+# --------------------------------------------------------------------------
+def test_clip_rows_bounds_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 32)) * 10, jnp.float32)
+    y = clip_rows(x, 1.0)
+    norms = np.linalg.norm(np.asarray(y).reshape(16, -1), axis=1)
+    assert (norms <= 1.0 + 1e-5).all()
+
+
+def test_privatize_noise_scale():
+    rng = jax.random.PRNGKey(0)
+    x = jnp.ones((512, 64), jnp.float32) * 0.01
+    cfg = DPConfig(clip=1.0, sigma=0.5)
+    y = privatize(rng, x, cfg)
+    resid = np.asarray(y - clip_rows(x, 1.0))
+    assert abs(resid.std() - 0.5) < 0.05
+
+
+def test_epsilon_monotone_in_sigma():
+    e1 = epsilon_per_release(DPConfig(sigma=0.5))
+    e2 = epsilon_per_release(DPConfig(sigma=1.0))
+    assert e2 < e1
+
+
+def test_protocol_with_dp_still_converges():
+    spec = TabularSpec("t", fields_a=4, fields_b=3, vocab=64,
+                       n_train=4096, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=64, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    init_fn, task, predict = make_dlrm(cfg)
+    celu = CELUConfig(R=2, W=2, dp_sigma=0.1, dp_clip=5.0)
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", 0.02)
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    state = P.init_state(task, params, opt, celu, asj(ba), asj(bb))
+    rnd = P.make_round(task, opt, celu)
+    it = aligned_batches(data["train"], 64, seed=0)
+    losses = []
+    for i in range(25):
+        bi, ba, bb = next(it)
+        state, m = rnd(state, asj(ba), asj(bb), bi)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])

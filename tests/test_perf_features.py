@@ -1,0 +1,103 @@
+"""Tests for the §Perf features: microbatched training and bf16 wire."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import CELUConfig, ShapeConfig
+from repro.core import protocol as P
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.launch.steps import concrete_batch, make_train_step
+from repro.models import vfl
+from repro.models.tabular import DLRMConfig, make_dlrm
+from repro.optim import adagrad, make_optimizer
+
+SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=4, kind="train")
+
+
+def test_microbatch_matches_full_batch_loss():
+    cfg = get_config("smollm-360m").reduced()
+    params = vfl.init_all(jax.random.PRNGKey(0), cfg)
+    batch = concrete_batch(cfg, SHAPE, seed=0)
+    opt = adagrad(0.01)
+    s1 = opt.init(params)
+    step1 = jax.jit(make_train_step(cfg, opt, microbatches=1))
+    step2 = jax.jit(make_train_step(cfg, opt, microbatches=2))
+    p1, _, loss1 = step1(params, s1, batch)
+    p2, _, loss2 = step2(params, opt.init(params), batch)
+    # mean-of-microbatch losses == full-batch loss (both mean-reduced)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=2e-2)
+    # resulting params close (bf16 params, fp32 accumulators)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.1, atol=0.05)
+
+
+def test_bf16_wire_protocol_converges():
+    spec = TabularSpec("t", fields_a=4, fields_b=3, vocab=64,
+                       n_train=4096, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=64, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    init_fn, task, predict = make_dlrm(cfg)
+    finals = {}
+    for wire in ("float32", "bfloat16"):
+        celu = CELUConfig(R=2, W=2, wire_dtype=wire)
+        params = init_fn(jax.random.PRNGKey(0), cfg)
+        opt = make_optimizer("adagrad", 0.02)
+        it = aligned_batches(data["train"], 64, seed=0)
+        _, ba, bb = next(it)
+        asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+        state = P.init_state(task, params, opt, celu, asj(ba), asj(bb))
+        rnd = P.make_round(task, opt, celu)
+        it = aligned_batches(data["train"], 64, seed=0)
+        losses = []
+        for i in range(25):
+            bi, ba, bb = next(it)
+            state, m = rnd(state, asj(ba), asj(bb), bi)
+            losses.append(float(m["loss"]))
+        finals[wire] = np.mean(losses[-5:])
+        assert losses[-1] < losses[0], (wire, losses[:3], losses[-3:])
+    # parity within 5%
+    assert abs(finals["bfloat16"] - finals["float32"]) \
+        / finals["float32"] < 0.05, finals
+
+
+def test_exchange_bytes_wire():
+    assert P.exchange_bytes((256, 32), wire_dtype="bfloat16") \
+        == P.exchange_bytes((256, 32)) // 2
+
+
+def test_chunked_mlstm_matches_sequential():
+    """The chunkwise-parallel mLSTM is mathematically exact (§Perf)."""
+    import jax
+    from repro.models import xlstm as X
+    rng = jax.random.PRNGKey(3)
+    p = X.mlstm_init(rng, 64, 4)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 128, 64),
+                          jnp.float32)
+    y_seq, st_seq = X.mlstm_apply(p, x)
+    y_par, st_par = X.mlstm_apply_chunked(p, x, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_seq, np.float32),
+                               np.asarray(y_par, np.float32),
+                               rtol=1e-4, atol=1e-5)
+    for k in ("C", "n", "m"):
+        np.testing.assert_allclose(np.asarray(st_seq[k]),
+                                   np.asarray(st_par[k]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_chunked_mlstm_grads_finite():
+    import jax
+    from repro.models import xlstm as X
+    rng = jax.random.PRNGKey(4)
+    p = X.mlstm_init(rng, 32, 2)
+    x = jax.random.normal(rng, (1, 64, 32), jnp.float32)
+    g = jax.grad(lambda p_: jnp.sum(
+        X.mlstm_apply_chunked(p_, x, chunk=32)[0].astype(jnp.float32)))(p)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert jnp.isfinite(leaf.astype(jnp.float32)).all()

@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.weighting import instance_weights, row_cosine, xi_to_cos
+from repro.core.workset import workset_init, workset_insert, workset_sample
+from repro.kernels import ref as kref
+from repro.models.tabular import auc
+
+
+# --------------------------------------------------------------------------
+# Weighting invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(2, 32), st.floats(0.0, 0.99),
+       st.integers(0, 2 ** 31 - 1))
+def test_weights_bounded_and_thresholded(B, F, cos_xi, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    w = np.asarray(instance_weights(a, s, cos_xi))
+    assert ((w == 0.0) | (w >= cos_xi - 1e-6)).all()
+    assert (w <= 1.0 + 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 16), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.1, 10.0))
+def test_cosine_scale_invariant(B, F, seed, scale):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    c1 = np.asarray(row_cosine(a, s))
+    c2 = np.asarray(row_cosine(a * scale, s))
+    np.testing.assert_allclose(c1, c2, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.0, 180.0))
+def test_xi_to_cos_monotone(xi):
+    assert -1.0 - 1e-9 <= xi_to_cos(xi) <= 1.0 + 1e-9
+    if xi < 90.0:
+        assert xi_to_cos(xi) > 0
+
+
+# --------------------------------------------------------------------------
+# Workset invariants under arbitrary op sequences
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 5),
+       st.lists(st.booleans(), min_size=1, max_size=40),
+       st.sampled_from(["round_robin", "consecutive"]))
+def test_workset_never_overuses(W, R, ops, strategy):
+    """No entry is ever sampled more than R times, and every sampled entry
+    is one of the W most recent inserts."""
+    entry = lambda v: {"z_a": jnp.full((1, 2), float(v)),
+                       "dz_a": jnp.zeros((1, 2)), "batch": {}}
+    ws = workset_init(W, entry(0))
+    n_ins = 0
+    uses = {}
+    for is_insert in ops:
+        if is_insert or n_ins == 0:
+            ws = workset_insert(ws, entry(n_ins), n_ins)
+            n_ins += 1
+        else:
+            ws, e, bidx, valid = workset_sample(ws, R, strategy)
+            if bool(valid):
+                b = int(bidx)
+                uses[b] = uses.get(b, 0) + 1
+                assert b >= n_ins - W, (b, n_ins, W)
+                assert uses[b] <= R
+
+
+# --------------------------------------------------------------------------
+# Kernel oracles as algebraic properties
+# --------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_flash_ref_softmax_rows_sum_to_one_effect(seed):
+    """Attention output lies in the convex hull of V rows (causal)."""
+    rng = np.random.default_rng(seed)
+    B, S, H, hd = 1, 8, 1, 4
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.uniform(0, 1, size=(B, S, H, hd)), jnp.float32)
+    o = np.asarray(kref.flash_attention_ref(q, k, v, causal=True))
+    assert (o >= -1e-5).all() and (o <= 1.0 + 1e-5).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_adagrad_update_opposes_gradient(n, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    acc = jnp.asarray(np.abs(rng.normal(size=(n,))), jnp.float32)
+    u, a2 = kref.fused_adagrad_ref(g, acc, 0.1, 1e-10)
+    assert (np.sign(np.asarray(u)) == -np.sign(np.asarray(g))
+            )[np.asarray(g) != 0].all()
+    assert (np.asarray(a2) >= np.asarray(acc)).all()
+
+
+# --------------------------------------------------------------------------
+# AUC
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 200), st.integers(0, 2 ** 31 - 1))
+def test_auc_perfect_and_random(n, seed):
+    rng = np.random.default_rng(seed)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    if y.sum() in (0, n):
+        return
+    assert auc(y * 2 - 1, y) == 1.0         # perfectly ranked
+    assert auc(-(y * 2 - 1), y) == 0.0      # perfectly anti-ranked
+    a = auc(rng.normal(size=n), y)
+    assert 0.0 <= a <= 1.0
