@@ -84,12 +84,25 @@ def bench_instance_weighting(data, cfg, target, base):
                 f"{r['final_auc']:.4f}")
 
 
-def main():
+BLOCKS = {
+    "local_update": bench_local_update,
+    "local_sampling": bench_local_sampling,
+    "instance_weighting": bench_instance_weighting,
+}
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--block", default="all",
+                    choices=("all",) + tuple(BLOCKS),
+                    help="run one Table-2 block instead of all three")
+    args = ap.parse_args(argv)
     spec, data, cfg = default_workload("wdl", "criteo")
     target, base = _target(data, cfg)
-    bench_local_update(data, cfg, target, base)
-    bench_local_sampling(data, cfg, target, base)
-    bench_instance_weighting(data, cfg, target, base)
+    for name, fn in BLOCKS.items():
+        if args.block in ("all", name):
+            fn(data, cfg, target, base)
 
 
 if __name__ == "__main__":

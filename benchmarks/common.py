@@ -14,7 +14,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs.base import CELUConfig  # noqa: E402
-from repro.core import protocol as proto  # noqa: E402
+from repro.core import engine  # noqa: E402
 from repro.data import synthetic as synth  # noqa: E402
 from repro.models.tabular import DLRMConfig, auc, make_dlrm  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
@@ -39,14 +39,16 @@ def default_workload(model: str = "wdl", spec_name: str = "criteo",
 def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
                  weighting=True, sampling=None, rounds=400, batch=256,
                  lr=0.01, optimizer="adagrad", seed=0, eval_every=25,
-                 target_auc: Optional[float] = None
+                 target_auc: Optional[float] = None,
+                 fused_weighting: bool = True
                  ) -> Dict[str, object]:
-    """Train with one protocol; return the AUC-vs-round curve and (if
-    target_auc given) the first round reaching it."""
+    """Train with one protocol preset of the K-party round engine; return
+    the AUC-vs-round curve and (if target_auc given) the first round
+    reaching it."""
     init_fn, task, predict = make_dlrm(cfg)
     base = CELUConfig(R=R, W=W, xi_degrees=xi, weighting=weighting,
                       sampling=sampling or "round_robin")
-    ccfg, nloc = proto.protocol_config(protocol, base)
+    ccfg, nloc = engine.preset_config(protocol, base)
     if sampling is not None and protocol == "celu":
         ccfg = dataclasses.replace(ccfg, sampling=sampling)
     params = init_fn(jax.random.PRNGKey(seed), cfg)
@@ -54,8 +56,13 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     it = synth.aligned_batches(data["train"], batch, seed=seed)
     _, ba, bb = next(it)
     asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
-    state = proto.init_state(task, params, opt, ccfg, asj(ba), asj(bb))
-    rnd = proto.make_round(task, opt, ccfg, local_steps=nloc)
+    etask = engine.lift_two_party(task)
+    transport = engine.SimWANTransport(ccfg)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, ccfg, [asj(ba)], asj(bb))
+    rnd = engine.make_round(etask, opt, ccfg, local_steps=nloc,
+                            transport=transport,
+                            fused_weighting=fused_weighting, donate=True)
     it = synth.aligned_batches(data["train"], batch, seed=seed)
 
     te = data["test"]
@@ -66,9 +73,10 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     t0 = time.time()
     for i in range(rounds):
         bi, ba, bb = next(it)
-        state, m = rnd(state, asj(ba), asj(bb), bi)
+        state, m = rnd(state, [asj(ba)], asj(bb), bi)
         if (i + 1) % eval_every == 0 or i + 1 == rounds:
-            a = auc(np.asarray(predict(state["params"], cfg, tea, teb)),
+            a = auc(np.asarray(predict(engine.unlift_params(state["params"]),
+                                       cfg, tea, teb)),
                     te["y"])
             curve.append((i + 1, a))
             if target_auc and reached is None and a >= target_auc:
@@ -78,7 +86,7 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
         "weighting": weighting, "curve": curve,
         "final_auc": curve[-1][1], "best_auc": max(a for _, a in curve),
         "rounds_to_target": reached, "wall_s": time.time() - t0,
-        "z_bytes_per_round": proto.exchange_bytes((batch, cfg.z_dim)),
+        "z_bytes_per_round": transport.round_bytes([(batch, cfg.z_dim)]),
     }
 
 

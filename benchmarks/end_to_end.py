@@ -47,9 +47,12 @@ def hard_workload(model: str, dataset: str, seed: int = 0):
     return spec, data, cfg
 
 
-def run_one(dataset: str, model: str):
+def run_one(dataset: str, model: str, protocols=("vanilla", "fedbcd",
+                                                 "celu"), rounds=ROUNDS):
+    """All rounds are constructed through the K-party engine (the vanilla
+    baseline always runs — it calibrates the shared target AUC)."""
     spec, data, cfg = hard_workload(model, dataset)
-    base = run_protocol("vanilla", data, cfg, rounds=ROUNDS, lr=LR,
+    base = run_protocol("vanilla", data, cfg, rounds=rounds, lr=LR,
                         eval_every=50)
     target = 0.97 * base["best_auc"]
     csv_row(f"# end_to_end {model}/{dataset}: target AUC {target:.4f}")
@@ -57,33 +60,47 @@ def run_one(dataset: str, model: str):
             "final_auc")
 
     rows = {}
-    b_rounds = rounds_to(base["curve"], target) or ROUNDS
+    b_rounds = rounds_to(base["curve"], target) or rounds
     zb = base["z_bytes_per_round"]
     t_van = sim_time(b_rounds, zb, 0.0)
     rows["vanilla"] = (b_rounds, t_van, base["final_auc"])
 
-    fb = run_protocol("fedbcd", data, cfg, R=5, rounds=ROUNDS, lr=LR,
-                      eval_every=50, target_auc=target)
-    fb_rounds = fb["rounds_to_target"] or ROUNDS
-    rows["fedbcd(R=5)"] = (fb_rounds, sim_time(fb_rounds, zb, 5.0),
-                           fb["final_auc"])
+    if "fedbcd" in protocols:
+        fb = run_protocol("fedbcd", data, cfg, R=5, rounds=rounds, lr=LR,
+                          eval_every=50, target_auc=target)
+        fb_rounds = fb["rounds_to_target"] or rounds
+        rows["fedbcd(R=5)"] = (fb_rounds, sim_time(fb_rounds, zb, 5.0),
+                               fb["final_auc"])
 
-    for R in (5, 8):
-        ce = run_protocol("celu", data, cfg, R=R, W=5, xi=60.0,
-                          rounds=ROUNDS, lr=LR, eval_every=50,
-                          target_auc=target)
-        ce_rounds = ce["rounds_to_target"] or ROUNDS
-        rows[f"celu(R={R})"] = (ce_rounds,
-                                sim_time(ce_rounds, zb, float(R)),
-                                ce["final_auc"])
+    if "celu" in protocols:
+        for R in (5, 8):
+            ce = run_protocol("celu", data, cfg, R=R, W=5, xi=60.0,
+                              rounds=rounds, lr=LR, eval_every=50,
+                              target_auc=target)
+            ce_rounds = ce["rounds_to_target"] or rounds
+            rows[f"celu(R={R})"] = (ce_rounds,
+                                    sim_time(ce_rounds, zb, float(R)),
+                                    ce["final_auc"])
 
     for name, (r, t, a) in rows.items():
         csv_row(name, r, f"{t:.1f}", f"{t_van / t:.2f}x", f"{a:.4f}")
 
 
-def main():
-    run_one("criteo", "wdl")
-    run_one("avazu", "dssm")
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--protocol", default="all",
+                    choices=("all", "vanilla", "fedbcd", "celu"))
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--dataset", default="all",
+                    choices=("all", "criteo", "avazu"))
+    args = ap.parse_args(argv)
+    protocols = ("vanilla", "fedbcd", "celu") if args.protocol == "all" \
+        else (args.protocol,)
+    if args.dataset in ("all", "criteo"):
+        run_one("criteo", "wdl", protocols, args.rounds)
+    if args.dataset in ("all", "avazu"):
+        run_one("avazu", "dssm", protocols, args.rounds)
 
 
 if __name__ == "__main__":

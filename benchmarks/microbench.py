@@ -81,14 +81,20 @@ def bench_adagrad():
 
 
 def bench_protocol_round():
-    """Per-round step cost of the three protocols (CPU wall, WDL small)."""
+    """Per-round step cost of the engine's protocol presets (CPU wall, WDL
+    small).  The celu row runs twice: fused Algorithm-2 hot path (Pallas
+    weighted-cotangent) vs the pure-jnp reference composition."""
     from .common import default_workload, run_protocol
     spec, data, cfg = default_workload("wdl", "criteo")
-    for proto_name, kw in (("vanilla", {}), ("fedbcd", {"R": 5}),
-                           ("celu", {"R": 5, "W": 5})):
+    for name, proto_name, kw in (
+            ("vanilla", "vanilla", {}),
+            ("fedbcd", "fedbcd", {"R": 5}),
+            ("celu", "celu", {"R": 5, "W": 5}),
+            ("celu_ref_weighting", "celu",
+             {"R": 5, "W": 5, "fused_weighting": False})):
         r = run_protocol(proto_name, data, cfg, rounds=30, eval_every=30,
                          **kw)
-        csv_row(f"round_wall_{proto_name}",
+        csv_row(f"round_wall_{name}",
                 f"{r['wall_s'] / 30 * 1e3:.1f}ms",
                 f"z_bytes={r['z_bytes_per_round']}")
 

@@ -3,7 +3,9 @@ labels), each A with its own workset table and Algorithm-2 weighting; B
 weights instances by the MINIMUM per-party derivative cosine.
 
 The paper defers K>1 feature parties to future work (§6); this example
-runs the extension end-to-end on a 3-way vertical split.
+runs the extension end-to-end on a 3-way vertical split, constructing the
+rounds directly on the K-party engine (K=2 feature parties over a
+SimWANTransport).
 
     PYTHONPATH=src python examples/multiparty_vfl.py
 """
@@ -17,7 +19,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs.base import CELUConfig  # noqa: E402
-from repro.core import multiparty as MP  # noqa: E402
+from repro.core import engine  # noqa: E402
 from repro.data.synthetic import TabularSpec, aligned_batches, \
     make_tabular  # noqa: E402
 from repro.models.tabular import DLRMConfig, _mlp, _mlp_init, _tower, \
@@ -53,10 +55,11 @@ def main():
             jnp.exp(-jnp.abs(logit)))
         return li, jnp.float32(0.0)
 
-    task = MP.MultiVFLTask(forward_a, loss_b)
+    task = engine.KPartyTask(forward_a, loss_b)
     params = {"a": [pa1, pa2], "b": pb}
     celu = CELUConfig(R=3, W=3, xi_degrees=60.0)
     opt = make_optimizer("adagrad", 0.01)
+    transport = engine.SimWANTransport(celu)
 
     split = lambda ba, bb: (
         [{"x_a": jnp.asarray(ba["x_a"][:, :4])},
@@ -65,8 +68,8 @@ def main():
     it = aligned_batches(data["train"], 256, seed=0)
     _, ba, bb = next(it)
     bas, b = split(ba, bb)
-    state = MP.init_state(task, params, opt, celu, bas, b)
-    rnd = MP.make_round(task, opt, celu)
+    state = engine.init_state(task, params, opt, celu, bas, b)
+    rnd = engine.make_round(task, opt, celu, transport=transport)
 
     it = aligned_batches(data["train"], 256, seed=0)
     print("3-party CELU-VFL (A1: 4 fields, A2: 4 fields, B: 4 + labels)")
@@ -91,8 +94,10 @@ def main():
             a = auc(np.asarray(logit), te["y"])
             print(f"  round {i+1:4d}  loss {float(m['loss']):.4f}  "
                   f"AUC {a:.4f}")
+    zb = transport.round_bytes([(256, cfg.z_dim)] * 2)
     print(f"communication rounds: {int(state['comm_rounds'])} "
-          f"(each funds {1 + celu.R} updates/party)")
+          f"(each funds {1 + celu.R} updates/party; "
+          f"{zb / 1e3:.0f} KB/round over K=2 uplink+downlink pairs)")
 
 
 if __name__ == "__main__":

@@ -2,8 +2,10 @@
 workload (synthetic, far-from-convergence regime like the paper's 41M-row
 stream).
 
-All three protocols get the SAME communication budget (400 rounds = the
-same WAN bytes); CELU funds 1+R model updates per round from its workset.
+All three protocols are presets of the same K-party round engine
+(``repro.core.engine``) over a ``SimWANTransport``; they get the SAME
+communication budget (400 rounds = the same WAN bytes), and CELU funds
+1+R model updates per round from its workset.
 
     PYTHONPATH=src python examples/quickstart.py
 """

@@ -1,3 +1,6 @@
-"""CELU-VFL core: workset table, instance weighting, training protocols."""
-from . import protocol, weighting, workset  # noqa: F401
+"""CELU-VFL core: K-party round engine, workset table, instance weighting,
+protocol presets."""
+from . import engine, protocol, weighting, workset  # noqa: F401
+from .engine import (KPartyTask, PodTransport, SimWANTransport,  # noqa: F401
+                     preset_config)
 from .protocol import VFLTask, init_state, make_round, protocol_config  # noqa: F401

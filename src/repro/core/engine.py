@@ -1,0 +1,560 @@
+"""The K-party CELU-VFL round engine — the ONE implementation of the
+paper's round structure (arXiv:2207.14628, Algorithms 1-2).
+
+A *round* is: exchange ⟨Z_i, ∇Z_i⟩ once for every feature party A_i
+(i = 1..K), apply the fresh SGD step to all parties, insert the released
+statistics into each party's device-resident workset table, then run up to
+``R`` staleness-weighted local updates per party from that table.  The
+named protocols are presets of this one structure:
+
+  * Vanilla  = ``local_steps=0`` (exchange every model update);
+  * FedBCD   = ``W=1`` consecutive sampling, no weighting;
+  * CELU-VFL = round-robin sampling over W slots + Algorithm-2 weighting.
+
+Two axes of parameterization:
+
+**K feature parties.**  ``K`` is inferred from ``state["params"]["a"]`` (a
+list of per-party pytrees).  ``K=1`` is the paper's two-party setting and
+reproduces the historical ``core.protocol`` implementation bit-for-bit
+(``tests/test_engine.py`` pins this against golden traces recorded from the
+seed implementation).  ``K>=2`` is the multi-party extension the paper
+defers to future work (§6): Party B weights each cached instance by the
+MINIMUM per-party derivative cosine — an instance is only trusted if it is
+fresh w.r.t. EVERY party's cut tensor.
+
+**Transport.**  How the cut tensors move between parties is pluggable:
+
+  * :class:`SimWANTransport` — in-process simulated WAN: wire-dtype
+    quantization (bf16 wire halves bytes), optional Gaussian-mechanism DP
+    noise, and byte accounting.  Subsumes the old ``protocol`` /
+    ``multiparty`` paths.
+  * :class:`PodTransport` — ``lax.ppermute`` over the pod mesh axis for
+    the SPMD party-to-pod mapping (:func:`make_pod_round`); the slow
+    inter-pod DCN link plays the WAN.  Subsumes the old ``pod_protocol``
+    exchange.
+
+The Algorithm-2 weighting hot path routes through the fused Pallas kernel
+``kernels.ops.weighted_cotangent`` (cosine + threshold + cotangent scale in
+one VMEM pass; bit-exact with the reference composition).  Pass
+``fused_weighting=False`` to pin the pure-jnp reference path (the parity
+oracle).
+
+The whole round is ONE jitted function (exchange + ``lax.scan`` over local
+steps) so XLA's latency-hiding scheduler can overlap the cross-party
+transfer with the local-update chain — the SPMD analogue of the paper's
+background communication worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, \
+    Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import CELUConfig
+from ..optim import Optimizer, apply_updates
+from .weighting import instance_weights, xi_to_cos
+from .workset import workset_init, workset_insert, workset_sample
+
+
+class KPartyTask(NamedTuple):
+    """K-party split-model interface (information-flow discipline at
+    function granularity — no function sees two parties' raw features):
+
+        forward_a(params_a_i, batch_a_i) -> Z_i
+        loss_b(params_b, [Z_1..Z_K], batch_b) -> (per-instance loss, aux)
+    """
+    forward_a: Callable[[Any, Any], jnp.ndarray]
+    loss_b: Callable[[Any, Sequence[jnp.ndarray], Any],
+                     Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def lift_two_party(task) -> KPartyTask:
+    """Adapt a two-party task (``loss_b`` over one Z_A) to the K-party
+    interface (``loss_b`` over ``[Z_1..Z_K]``, K=1)."""
+    return KPartyTask(
+        task.forward_a,
+        lambda pb, z_list, batch_b: task.loss_b(pb, z_list[0], batch_b))
+
+
+def lift_two_party_params(params: Dict[str, Any]) -> Dict[str, Any]:
+    """{"a": pa, "b": pb} -> the engine's {"a": [pa], "b": pb}."""
+    return {"a": [params["a"]], "b": params["b"]}
+
+
+def unlift_params(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Engine {"a": [pa], "b": pb} -> the two-party {"a": pa, "b": pb}."""
+    (pa,) = params["a"]
+    return {"a": pa, "b": params["b"]}
+
+
+# --------------------------------------------------------------------------
+# Transports
+# --------------------------------------------------------------------------
+class SimWANTransport:
+    """In-process slow link: each released message is round-tripped through
+    the wire dtype (simulating quantized transmission) after optional
+    DP noising; byte accounting follows the wire precision.
+
+    The noised + quantized value is what BOTH sides see and what gets
+    cached, so local updates reuse already-released messages at no extra
+    privacy cost."""
+
+    def __init__(self, celu: CELUConfig):
+        self.celu = celu
+        self.wire = jnp.dtype(celu.wire_dtype)
+
+    def send(self, rng, x):
+        """The message actually released across the link."""
+        if self.celu.dp_sigma > 0.0:
+            from .privacy import DPConfig, privatize
+            x = privatize(rng, x, DPConfig(clip=self.celu.dp_clip,
+                                           sigma=self.celu.dp_sigma))
+        if x.dtype != self.wire:
+            x = x.astype(self.wire).astype(x.dtype)
+        return x
+
+    def message_bytes(self, z_shape) -> int:
+        import numpy as np
+        return int(np.prod(z_shape)) * self.wire.itemsize
+
+    def round_bytes(self, z_shapes: Sequence) -> int:
+        """Bytes per communication round: Z_i up + ∇Z_i down for each
+        feature party."""
+        return sum(2 * self.message_bytes(s) for s in z_shapes)
+
+
+class PodTransport:
+    """Cut-tensor exchange as ``lax.ppermute`` over the pod mesh axis (the
+    ONLY collectives crossing the slow inter-pod link).  Party A lives on
+    pod 0, Party B on pod 1 by default."""
+
+    def __init__(self, axis: str = "pod",
+                 up: Sequence[Tuple[int, int]] = ((0, 1), (1, 0)),
+                 down: Sequence[Tuple[int, int]] = ((1, 0), (0, 1))):
+        self.axis = axis
+        self.up = [tuple(p) for p in up]
+        self.down = [tuple(p) for p in down]
+
+    def send_up(self, z):
+        """Z_A: feature pod -> label pod."""
+        return jax.lax.ppermute(z, self.axis, self.up)
+
+    def send_down(self, dz):
+        """∇Z_A: label pod -> feature pod."""
+        return jax.lax.ppermute(dz, self.axis, self.down)
+
+
+# --------------------------------------------------------------------------
+# Algorithm-2 weighting (the shared hot path)
+# --------------------------------------------------------------------------
+def _bcast(w, like):
+    """(B,) weights -> broadcastable to ``like``'s shape."""
+    return w.reshape(w.shape + (1,) * (like.ndim - 1)).astype(jnp.float32)
+
+
+def _fusable(x) -> bool:
+    """The Pallas kernel tiles the batch dim at BLOCK_B; odd batch sizes
+    fall back to the reference composition."""
+    from ..kernels.cosine_weight import BLOCK_B
+    B = x.shape[0]
+    return B % min(BLOCK_B, B) == 0
+
+
+def staleness_weights(ad_hoc, stale, cos_xi: float, *,
+                      fused: bool = False) -> jnp.ndarray:
+    """Algorithm-2 ``InsWeight``: per-instance cosine floored at cos ξ."""
+    if fused and _fusable(ad_hoc):
+        from ..kernels import ops as kops
+        return kops.cosine_weight(ad_hoc, stale, cos_xi)
+    return instance_weights(ad_hoc, stale, cos_xi)
+
+
+def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
+                       fused: bool = True
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """InsWeight + weights ⊙ ∇Z -> (weights (B,), fp32 weighted cotangent).
+
+    ``fused=True`` runs the single-VMEM-pass Pallas kernel; the reference
+    composition is its bit-exact oracle."""
+    if fused and _fusable(ad_hoc):
+        from ..kernels import ops as kops
+        return kops.weighted_cotangent(ad_hoc, stale,
+                                       dz.astype(jnp.float32), cos_xi)
+    w = instance_weights(ad_hoc, stale, cos_xi)
+    return w, _bcast(w, dz) * dz.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Local-update gradients (Algorithm 2) — shared by every protocol shape
+# --------------------------------------------------------------------------
+def local_grad_a(forward_a, params_a, entry, cos_xi: float, *,
+                 weighting: bool = True, fused: bool = True, mask=None):
+    """Feature-party local update: ad-hoc forward on the cached batch,
+    stale cotangent ∇Z^(i) weighted by cos(Z^(i,j), Z^(i)).
+
+    ``entry`` is a workset row {"z": stale Z, "dz": stale ∇Z, "batch": own
+    features}.  ``mask`` (scalar 0/1, optional) zeroes the whole draw (a
+    round-robin bubble).  Returns (grads, weights)."""
+    z_new, vjp = jax.vjp(lambda p: forward_a(p, entry["batch"]), params_a)
+    if weighting:
+        w, cot = weighted_cotangent(z_new, entry["z"], entry["dz"], cos_xi,
+                                    fused=fused)
+    else:
+        w = jnp.ones((z_new.shape[0],), jnp.float32)
+        cot = _bcast(w, z_new) * entry["dz"].astype(jnp.float32)
+    if mask is not None:
+        w = w * mask
+        cot = cot * mask
+    (g,) = vjp(cot.astype(z_new.dtype))
+    return g, w
+
+
+def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
+                 weighting: bool = True, fused: bool = True, mask=None):
+    """Label-party local update: stale Z_i's + ad-hoc own features; the
+    ad-hoc ∇Z_i^(i,j) is computed only to measure staleness (paper
+    footnote 2), then the weighted per-instance losses drive the backward
+    pass.  K>1 composes conservatively: the instance weight is the MINIMUM
+    cosine over parties.  Returns (grads, weights)."""
+    zs, dzs, batch_b = entry["z"], entry["dz"], entry["batch"]
+    if weighting:
+        dz_new = jax.grad(
+            lambda zl: jnp.mean(loss_b(params_b, zl, batch_b)[0]))(
+            [z.astype(jnp.float32) for z in zs])
+        w = staleness_weights(dz_new[0], dzs[0], cos_xi, fused=fused)
+        for i in range(1, len(zs)):
+            w = jnp.minimum(
+                w, staleness_weights(dz_new[i], dzs[i], cos_xi, fused=fused))
+    else:
+        w = jnp.ones((zs[0].shape[0],), jnp.float32)
+    if mask is not None:
+        w = w * mask
+
+    def weighted(p):
+        li, aux = loss_b(p, zs, batch_b)
+        return jnp.mean(w * li) + aux
+
+    g = jax.grad(weighted)(params_b)
+    return g, w
+
+
+# --------------------------------------------------------------------------
+# State
+# --------------------------------------------------------------------------
+def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
+               celu: CELUConfig, batches_a: Sequence[Any], batch_b):
+    """Build the K-party training state.
+
+    ``params = {"a": [pa_1..pa_K], "b": pb}``; ``batches_a`` are K example
+    batches (abstract ok) used to size the workset ring buffers."""
+    K = len(params["a"])
+    zs = [jax.eval_shape(task.forward_a, params["a"][i], batches_a[i])
+          for i in range(K)]
+    z_like = [jnp.zeros(z.shape, z.dtype) for z in zs]
+    ws_a = [workset_init(celu.W, {"z": z_like[i], "dz": z_like[i],
+                                  "batch": batches_a[i]})
+            for i in range(K)]
+    ws_b = workset_init(celu.W, {"z": list(z_like), "dz": list(z_like),
+                                 "batch": batch_b})
+    return {
+        "params": {"a": list(params["a"]), "b": params["b"]},
+        "opt": {"a": [opt.init(p) for p in params["a"]],
+                "b": opt.init(params["b"])},
+        "ws": {"a": ws_a, "b": ws_b},
+        "steps": {"a": [jnp.int32(0) for _ in range(K)], "b": jnp.int32(0)},
+        "comm_rounds": jnp.int32(0),
+    }
+
+
+# --------------------------------------------------------------------------
+# One full communication round (exchange + R local updates per party)
+# --------------------------------------------------------------------------
+def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
+               local_steps: int = -1, transport=None,
+               fused_weighting: bool = True, jit: bool = True,
+               donate: bool = False):
+    """fn(state, batches_a: list, batch_b, batch_idx) -> (state, metrics).
+
+    ``local_steps`` defaults to R (steady state: one fresh insert funds R
+    uses); Vanilla training = ``local_steps=0``.  ``transport`` defaults to
+    :class:`SimWANTransport` over ``celu``'s wire settings."""
+    n_local = celu.R if local_steps < 0 else local_steps
+    cos_xi = xi_to_cos(celu.xi_degrees)
+    tp = transport if transport is not None else SimWANTransport(celu)
+    fused = fused_weighting
+
+    def exchange(state, batches_a, batch_b, batch_idx):
+        pas, pb = state["params"]["a"], state["params"]["b"]
+        K = len(pas)
+        rng = jax.random.fold_in(jax.random.PRNGKey(17),
+                                 state["comm_rounds"])
+        keys = jax.random.split(rng, 2 * K)
+
+        # uplinks: every A_i's forward -> Z_i, released in wire precision
+        zs, vjps = [], []
+        for i in range(K):
+            z, vjp = jax.vjp(
+                lambda p, i=i: task.forward_a(p, batches_a[i]), pas[i])
+            zs.append(tp.send(keys[2 * i], z))
+            vjps.append(vjp)
+
+        # Party B: loss + grads wrt (params_b, all Z_i); ∇Z_i are downlinks
+        def mean_loss(p, z_list):
+            li, aux = task.loss_b(p, z_list, batch_b)
+            return jnp.mean(li) + aux
+        loss, (g_b, dzs) = jax.value_and_grad(
+            mean_loss, argnums=(0, 1))(pb, zs)
+        dzs = [tp.send(keys[2 * i + 1], dz) for i, dz in enumerate(dzs)]
+
+        # every A_i's backward with its (wire-precision) cotangent
+        new_pas, new_oas = [], []
+        for i in range(K):
+            (g_a,) = vjps[i](dzs[i].astype(zs[i].dtype))
+            upd, oa = opt.update(g_a, state["opt"]["a"][i], pas[i])
+            new_pas.append(apply_updates(pas[i], upd))
+            new_oas.append(oa)
+        upd_b, ob = opt.update(g_b, state["opt"]["b"], pb)
+
+        ws_a = [workset_insert(state["ws"]["a"][i],
+                               {"z": zs[i], "dz": dzs[i],
+                                "batch": batches_a[i]}, batch_idx)
+                for i in range(K)]
+        ws_b = workset_insert(state["ws"]["b"],
+                              {"z": zs, "dz": dzs, "batch": batch_b},
+                              batch_idx)
+        new_state = {
+            "params": {"a": new_pas, "b": apply_updates(pb, upd_b)},
+            "opt": {"a": new_oas, "b": ob},
+            "ws": {"a": ws_a, "b": ws_b},
+            "steps": {"a": [s + 1 for s in state["steps"]["a"]],
+                      "b": state["steps"]["b"] + 1},
+            "comm_rounds": state["comm_rounds"] + 1,
+        }
+        return new_state, {"loss": loss}
+
+    def round_fn(state, batches_a, batch_b, batch_idx):
+        state, m = exchange(state, batches_a, batch_b, batch_idx)
+        K = len(state["params"]["a"])
+        if n_local == 0:
+            zero = jnp.float32(0.0)
+            m.update({"local_steps": jnp.int32(0), "w_mean": zero,
+                      "w_zero_frac": zero})
+            return state, m
+
+        scale = jnp.float32(1.0 / (K + 1))
+
+        def body(carry, _):
+            pas, oas, wsas, nas, pb, ob, wsb, nb = carry
+            pas, oas, wsas, nas = list(pas), list(oas), list(wsas), list(nas)
+            w_means, w_zeros = [], []
+            for i in range(K):
+                wsas[i], e, _, valid = workset_sample(wsas[i], celu.R,
+                                                      celu.sampling)
+                vf = valid.astype(jnp.float32)
+                g, w = local_grad_a(task.forward_a, pas[i], e, cos_xi,
+                                    weighting=celu.weighting, fused=fused,
+                                    mask=vf)
+                upd, oas[i] = opt.update(g, oas[i], pas[i])
+                upd = jax.tree_util.tree_map(lambda u: u * vf, upd)
+                pas[i] = apply_updates(pas[i], upd)
+                nas[i] = nas[i] + valid.astype(jnp.int32)
+                w_means.append(jnp.mean(w))
+                w_zeros.append(jnp.mean(w == 0.0))
+
+            wsb, e, _, valid = workset_sample(wsb, celu.R, celu.sampling)
+            vf = valid.astype(jnp.float32)
+            g, w = local_grad_b(task.loss_b, pb, e, cos_xi,
+                                weighting=celu.weighting, fused=fused,
+                                mask=vf)
+            upd, ob = opt.update(g, ob, pb)
+            upd = jax.tree_util.tree_map(lambda u: u * vf, upd)
+            pb = apply_updates(pb, upd)
+            nb = nb + valid.astype(jnp.int32)
+            w_means.append(jnp.mean(w))
+            w_zeros.append(jnp.mean(w == 0.0))
+
+            lm = {"w_mean": sum(w_means) * scale,
+                  "w_zero_frac": sum(w_zeros) * scale}
+            return (pas, oas, wsas, nas, pb, ob, wsb, nb), lm
+
+        init = (state["params"]["a"], state["opt"]["a"], state["ws"]["a"],
+                [jnp.int32(0) for _ in range(K)],
+                state["params"]["b"], state["opt"]["b"], state["ws"]["b"],
+                jnp.int32(0))
+        (pas, oas, wsas, nas, pb, ob, wsb, nb), lm = jax.lax.scan(
+            body, init, None, length=n_local)
+        state = {
+            "params": {"a": pas, "b": pb},
+            "opt": {"a": oas, "b": ob},
+            "ws": {"a": wsas, "b": wsb},
+            "steps": {"a": [s + n for s, n in zip(state["steps"]["a"], nas)],
+                      "b": state["steps"]["b"] + nb},
+            "comm_rounds": state["comm_rounds"],
+        }
+        m.update({"local_steps": sum(nas) + nb,
+                  "w_mean": jnp.mean(lm["w_mean"]),
+                  "w_zero_frac": jnp.mean(lm["w_zero_frac"])})
+        return state, m
+
+    if jit:
+        return jax.jit(round_fn, donate_argnums=(0,) if donate else ())
+    return round_fn
+
+
+# --------------------------------------------------------------------------
+# Named protocol presets (the paper's three competitors)
+# --------------------------------------------------------------------------
+def preset_config(name: str, base: CELUConfig) -> Tuple[CELUConfig, int]:
+    """-> (celu_cfg, local_steps) for name in {vanilla, fedbcd, celu}."""
+    if name == "vanilla":
+        return dataclasses.replace(base, weighting=False), 0
+    if name == "fedbcd":
+        return dataclasses.replace(base, W=1, weighting=False,
+                                   sampling="consecutive"), base.R
+    if name == "celu":
+        return base, base.R
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# SPMD party-to-pod round (PodTransport over the pod mesh axis)
+# --------------------------------------------------------------------------
+def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
+                   weighting: bool = True, tower_fwd=None, top_loss=None,
+                   transport: Optional[PodTransport] = None,
+                   fused_weighting: bool = False):
+    """Build the jitted multi-pod CELU round (party p's weights live on
+    pod p; the exchange is the transport's ppermute pair).
+
+    ``tower_fwd(tower_params, x) -> Z`` and
+    ``top_loss(top_params, z_a, z_b, y) -> per-instance loss`` define the
+    party-stacked model (see ``core.pod_protocol`` for the WDL demo).
+
+    State pytree (all party-stacked, party axis over ``pod``):
+      params:   {"tower": (2,...), "top": (2,...)}
+      opt:      accumulators, same structure
+      ws:       workset ring buffers (2, W, B_local, ...) — per-party caches
+    Batch: x (2, B, F) int32 — party p's features on pod p;
+           y (2, B) — labels valid on party 1's slot only.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    assert tower_fwd is not None and top_loss is not None
+    tp = transport if transport is not None else PodTransport()
+    fused = fused_weighting
+
+    def b_loss(pb, z_list, batch):
+        """Party B's towers as a K-party loss_b over pb={"top","tower"}."""
+        z_b = tower_fwd(pb["tower"], batch["x"])
+        return top_loss(pb["top"], z_list[0], z_b, batch["y"]), \
+            jnp.float32(0.0)
+
+    def exchange_and_local(params, opt_state, ws, x, y):
+        """Runs per-pod (inside shard_map, pod axis size 2).
+
+        Shapes here are the PER-POD view: params leaves (1, ...), x (1,B,F).
+        """
+        pod = jax.lax.axis_index(tp.axis)
+        tower = jax.tree_util.tree_map(lambda a: a[0], params["tower"])
+        top = jax.tree_util.tree_map(lambda a: a[0], params["top"])
+        xb = x[0]                                   # (B, F)
+        yb = y[0]                                   # (B,)
+
+        # ---- fresh exchange (the paper's communication worker) ----------
+        z_mine, tower_vjp = jax.vjp(lambda tpm: tower_fwd(tpm, xb), tower)
+        # Z_A: pod0 -> pod1 (pod0 receives pod1's Z_B slot, unused)
+        z_a_at_b = tp.send_up(z_mine)                # on pod 1: Z_A
+
+        def loss_fn(top_p, z_a):
+            return jnp.mean(top_loss(top_p, z_a, z_mine, yb))
+        (loss, (g_top, dz_a)) = (loss_fn(top, z_a_at_b),
+                                 jax.grad(loss_fn, argnums=(0, 1))(
+                                     top, z_a_at_b))
+        # ∇Z_A: pod1 -> pod0 (the symmetric permute)
+        dz_back = tp.send_down(dz_a)
+
+        is_a = (pod == 0)
+        # Party A's tower cotangent is the received ∇Z_A; Party B's is its
+        # local ∂loss/∂Z_B.  Both computed, selected by pod id.
+        dz_b_local = jax.grad(
+            lambda z_b: jnp.mean(top_loss(top, z_a_at_b, z_b, yb)))(z_mine)
+        cot = jnp.where(is_a, dz_back, dz_b_local)
+        (g_tower,) = tower_vjp(cot)
+        g_top = jax.tree_util.tree_map(
+            lambda g: jnp.where(is_a, 0.0, g), g_top)
+
+        # ---- update + insert into the device-resident workset -----------
+        grads = {"tower": jax.tree_util.tree_map(lambda g: g[None], g_tower),
+                 "top": jax.tree_util.tree_map(lambda g: g[None], g_top)}
+        upd, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, upd)
+
+        W = ws["z"].shape[1]
+        slot = jnp.mod(ws["time"][0], W)
+        ws = dict(ws)
+        # cache: stale z (own Z for A's weighting / Z_A for B), stale dz,
+        # own features (+ labels at B)
+        z_cache = jnp.where(is_a, z_mine, z_a_at_b)
+        dz_cache = jnp.where(is_a, dz_back, dz_a)
+        ws["z"] = jax.lax.dynamic_update_index_in_dim(
+            ws["z"], z_cache[None], slot, 1)
+        ws["dz"] = jax.lax.dynamic_update_index_in_dim(
+            ws["dz"], dz_cache[None], slot, 1)
+        ws["x"] = jax.lax.dynamic_update_index_in_dim(
+            ws["x"], xb[None], slot, 1)
+        ws["y"] = jax.lax.dynamic_update_index_in_dim(
+            ws["y"], yb[None], slot, 1)
+        ws["time"] = ws["time"] + 1
+
+        # ---- R local updates, round-robin over the workset ---------------
+        def local_step(carry, j):
+            params, opt_state, cursor = carry
+            t = ws["time"][0]
+            n_alive = jnp.minimum(t, W)
+            slot_j = jnp.mod(cursor, jnp.maximum(n_alive, 1))
+            zs = ws["z"][0, slot_j]
+            dzs = ws["dz"][0, slot_j]
+            xs = ws["x"][0, slot_j]
+            ys_ = ws["y"][0, slot_j]
+            tower_j = jax.tree_util.tree_map(lambda a: a[0],
+                                             params["tower"])
+            top_j = jax.tree_util.tree_map(lambda a: a[0], params["top"])
+
+            # Party A: ad-hoc forward, cosine vs stale Z, weighted stale ∇Z
+            g_tower_a, _ = local_grad_a(
+                tower_fwd, tower_j, {"z": zs, "dz": dzs, "batch": xs},
+                cos_xi, weighting=weighting, fused=fused)
+
+            # Party B: stale Z_A + ad-hoc own tower; weight by ∇Z_A cosine
+            g_b, _ = local_grad_b(
+                b_loss, {"top": top_j, "tower": tower_j},
+                {"z": [zs], "dz": [dzs], "batch": {"x": xs, "y": ys_}},
+                cos_xi, weighting=weighting, fused=fused)
+            g_top_b, g_tower_b = g_b["top"], g_b["tower"]
+
+            is_a_ = (pod == 0)
+            g_tower_sel = jax.tree_util.tree_map(
+                lambda ga, gb: jnp.where(is_a_, ga, gb)[None],
+                g_tower_a, g_tower_b)
+            g_top_sel = jax.tree_util.tree_map(
+                lambda g: jnp.where(is_a_, 0.0, g)[None], g_top_b)
+            grads_j = {"tower": g_tower_sel, "top": g_top_sel}
+            upd_j, opt_state = opt.update(grads_j, opt_state, params)
+            params = apply_updates(params, upd_j)
+            return (params, opt_state, cursor + 1), None
+
+        (params, opt_state, _), _ = jax.lax.scan(
+            local_step, (params, opt_state, jnp.int32(0)), None, length=R)
+        return params, opt_state, ws, loss[None]
+
+    pp = P(tp.axis)  # every party-stacked leaf shards dim0 over pod
+    fn = shard_map(
+        exchange_and_local, mesh=mesh,
+        in_specs=(pp, pp, pp, pp, pp),
+        out_specs=(pp, pp, pp, pp),
+        check_rep=False)
+    return jax.jit(fn)

@@ -3,8 +3,9 @@
 more Party A's easily ... we would like to leave the extension to
 multi-party VFL training as our future work").
 
-Setting: K feature parties A_1..A_K (disjoint feature sets, no labels) and
-one Party B (features + labels).  Each round:
+This module is now a thin K-party preset over :mod:`repro.core.engine` —
+the task/state layout here IS the engine's native layout, so the functions
+delegate directly.  Semantics (engine round, K feature parties):
 
   * every A_i computes and sends Z_i; B returns ∇Z_i  (K uplinks + K
     downlinks — the WAN cost now scales with K, making the paper's
@@ -20,157 +21,32 @@ one Party B (features + labels).  Each round:
 
 The task interface generalizes :class:`repro.core.protocol.VFLTask`:
 
-    forward_a(params_a_i, batch_a_i) -> Z_i           (same fn, vmapped-by-list)
+    forward_a(params_a_i, batch_a_i) -> Z_i           (same fn, per party)
     loss_b(params_b, [Z_1..Z_K], batch_b) -> (per-instance loss, aux)
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, NamedTuple, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
+from typing import Any, Dict, List
 
 from ..configs.base import CELUConfig
-from ..optim import Optimizer, apply_updates
-from .weighting import instance_weights, xi_to_cos
-from .workset import workset_init, workset_insert, workset_sample
+from ..optim import Optimizer
+from . import engine
 
-
-class MultiVFLTask(NamedTuple):
-    forward_a: Callable[[Any, Dict[str, Any]], jnp.ndarray]
-    loss_b: Callable[[Any, Sequence[jnp.ndarray], Dict[str, Any]],
-                     Tuple[jnp.ndarray, jnp.ndarray]]
-
-
-def _bcast(w, like):
-    return w.reshape(w.shape + (1,) * (like.ndim - 1)).astype(jnp.float32)
+# The K-party task tuple is the engine's native interface.
+MultiVFLTask = engine.KPartyTask
 
 
 def init_state(task: MultiVFLTask, params: Dict[str, Any], opt: Optimizer,
                celu: CELUConfig, batches_a: List[Dict[str, Any]],
                batch_b: Dict[str, Any]):
     """params = {"a": [pa_1..pa_K], "b": pb}."""
-    K = len(params["a"])
-    zs = [jax.eval_shape(task.forward_a, params["a"][i], batches_a[i])
-          for i in range(K)]
-    z_like = [jnp.zeros(z.shape, z.dtype) for z in zs]
-    ws_a = [workset_init(celu.W, {"z": z_like[i], "dz": z_like[i],
-                                  "batch": batches_a[i]})
-            for i in range(K)]
-    ws_b = workset_init(celu.W, {"z": z_like, "dz": z_like,
-                                 "batch": batch_b})
-    return {
-        "params": params,
-        "opt": {"a": [opt.init(p) for p in params["a"]],
-                "b": opt.init(params["b"])},
-        "ws": {"a": ws_a, "b": ws_b},
-        "comm_rounds": jnp.int32(0),
-    }
+    return engine.init_state(task, params, opt, celu, batches_a, batch_b)
 
 
 def make_round(task: MultiVFLTask, opt: Optimizer, celu: CELUConfig,
-               *, local_steps: int = -1, jit: bool = True):
+               *, local_steps: int = -1, jit: bool = True,
+               fused_weighting: bool = True, transport=None):
     """fn(state, batches_a: list, batch_b, batch_idx) -> (state, metrics)."""
-    n_local = celu.R if local_steps < 0 else local_steps
-    cos_xi = xi_to_cos(celu.xi_degrees)
-
-    def exchange(state, batches_a, batch_b, batch_idx):
-        pas, pb = state["params"]["a"], state["params"]["b"]
-        K = len(pas)
-        zs, vjps = [], []
-        for i in range(K):
-            z, vjp = jax.vjp(
-                lambda p, i=i: task.forward_a(p, batches_a[i]), pas[i])
-            zs.append(z)
-            vjps.append(vjp)
-
-        def mean_loss(p, z_list):
-            li, aux = task.loss_b(p, z_list, batch_b)
-            return jnp.mean(li) + aux
-        loss = mean_loss(pb, zs)
-        g_b = jax.grad(mean_loss)(pb, zs)
-        dzs = jax.grad(lambda z_list: mean_loss(pb, z_list))(zs)
-
-        new_pas, new_opt_a = [], []
-        for i in range(K):
-            (g_a,) = vjps[i](dzs[i].astype(zs[i].dtype))
-            upd, oa = opt.update(g_a, state["opt"]["a"][i], pas[i])
-            new_pas.append(apply_updates(pas[i], upd))
-            new_opt_a.append(oa)
-        upd_b, ob = opt.update(g_b, state["opt"]["b"], pb)
-
-        ws_a = [workset_insert(state["ws"]["a"][i],
-                               {"z": zs[i], "dz": dzs[i],
-                                "batch": batches_a[i]}, batch_idx)
-                for i in range(K)]
-        ws_b = workset_insert(state["ws"]["b"],
-                              {"z": zs, "dz": dzs, "batch": batch_b},
-                              batch_idx)
-        state = {
-            "params": {"a": new_pas, "b": apply_updates(pb, upd_b)},
-            "opt": {"a": new_opt_a, "b": ob},
-            "ws": {"a": ws_a, "b": ws_b},
-            "comm_rounds": state["comm_rounds"] + 1,
-        }
-        return state, loss
-
-    def local_step_a(i, pa, oa, ws):
-        ws, e, _, valid = workset_sample(ws, celu.R, celu.sampling)
-        z_new, vjp = jax.vjp(lambda p: task.forward_a(p, e["batch"]), pa)
-        if celu.weighting:
-            w = instance_weights(z_new, e["z"], cos_xi)
-        else:
-            w = jnp.ones((z_new.shape[0],), jnp.float32)
-        w = w * valid.astype(jnp.float32)
-        (g,) = vjp((_bcast(w, z_new) * e["dz"].astype(jnp.float32))
-                   .astype(z_new.dtype))
-        upd, oa = opt.update(g, oa, pa)
-        upd = jax.tree_util.tree_map(
-            lambda u: u * valid.astype(jnp.float32), upd)
-        return apply_updates(pa, upd), oa, ws
-
-    def local_step_b(pb, ob, ws):
-        ws, e, _, valid = workset_sample(ws, celu.R, celu.sampling)
-        zs, dzs, batch_b = e["z"], e["dz"], e["batch"]
-        if celu.weighting:
-            dz_new = jax.grad(lambda z_list: jnp.mean(
-                task.loss_b(pb, z_list, batch_b)[0]))(
-                [z.astype(jnp.float32) for z in zs])
-            # conservative composition: trust an instance only if it is
-            # fresh w.r.t. EVERY party's derivative direction
-            w = jnp.ones((zs[0].shape[0],), jnp.float32)
-            for i in range(len(zs)):
-                w = jnp.minimum(w, instance_weights(dz_new[i], dzs[i],
-                                                    cos_xi))
-        else:
-            w = jnp.ones((zs[0].shape[0],), jnp.float32)
-        w = w * valid.astype(jnp.float32)
-
-        def weighted(p):
-            li, aux = task.loss_b(p, zs, batch_b)
-            return jnp.mean(w * li) + aux
-        g = jax.grad(weighted)(pb)
-        upd, ob = opt.update(g, ob, pb)
-        upd = jax.tree_util.tree_map(
-            lambda u: u * valid.astype(jnp.float32), upd)
-        return apply_updates(pb, upd), ob, ws
-
-    def round_fn(state, batches_a, batch_b, batch_idx):
-        state, loss = exchange(state, batches_a, batch_b, batch_idx)
-        K = len(state["params"]["a"])
-        for _ in range(n_local):   # unrolled: K small, R small
-            pas, oas, wsa = state["params"]["a"], state["opt"]["a"], \
-                state["ws"]["a"]
-            new = [local_step_a(i, pas[i], oas[i], wsa[i])
-                   for i in range(K)]
-            pb, ob, wsb = local_step_b(state["params"]["b"],
-                                       state["opt"]["b"], state["ws"]["b"])
-            state = {
-                "params": {"a": [n[0] for n in new], "b": pb},
-                "opt": {"a": [n[1] for n in new], "b": ob},
-                "ws": {"a": [n[2] for n in new], "b": wsb},
-                "comm_rounds": state["comm_rounds"],
-            }
-        return state, {"loss": loss}
-
-    return jax.jit(round_fn) if jit else round_fn
+    return engine.make_round(task, opt, celu, local_steps=local_steps,
+                             transport=transport,
+                             fused_weighting=fused_weighting, jit=jit)

@@ -3,35 +3,39 @@
 DESIGN §2: the production mesh is (pod=2, data=16, model=16); the slow
 inter-pod DCN link plays the paper's WAN.  Party A lives on pod 0, Party B
 on pod 1.  The cut-tensor exchange ⟨Z_A, ∇Z_A⟩ is a pair of
-``lax.ppermute``s over the ``pod`` axis — the ONLY collectives that cross
-the slow link.  Local updates read the device-resident workset table and
-produce zero inter-pod traffic, so collective bytes over ``pod`` per model
-update drop by ~(R+1)× (verified from the lowered HLO by
-benchmarks/roofline.py).
+``lax.ppermute``s over the ``pod`` axis (``engine.PodTransport``) — the
+ONLY collectives that cross the slow link.  Local updates read the
+device-resident workset table and produce zero inter-pod traffic, so
+collective bytes over ``pod`` per model update drop by ~(R+1)× (verified
+from the lowered HLO by benchmarks/roofline.py).
 
-Implementation: both parties' towers are expressed as ONE party-stacked
-pytree with a leading party axis sharded over ``pod`` (party p's weights
-physically live on pod p).  Each pod computes ITS party's function on its
-shard inside ``shard_map``; Party A's head produces Z_A, permuted to pod 1;
-pod 1 computes the top model + per-instance loss, takes ∇Z_A, and permutes
-it back.  Labels are carried in Party B's feature slot, so pod 0 never sees
-them — the information-flow discipline holds at the device-placement level,
-not just module level.
+The round itself is built by :func:`repro.core.engine.make_pod_round` —
+the same exchange / Algorithm-2 weighting / local-update logic as the
+host-sim engine path, specialised to the SPMD party-stacked layout.  This
+module keeps the demo model: both parties' towers expressed as ONE
+party-stacked pytree with a leading party axis sharded over ``pod``
+(party p's weights physically live on pod p).  Each pod computes ITS
+party's function on its shard inside ``shard_map``; Party A's head
+produces Z_A, permuted to pod 1; pod 1 computes the top model +
+per-instance loss, takes ∇Z_A, and permutes it back.  Labels are carried
+in Party B's feature slot, so pod 0 never sees them — the
+information-flow discipline holds at the device-placement level, not just
+module level.
 
 The demo task is the paper's WDL DLRM with equal-width towers (field counts
 padded to max(F_A, F_B) with a dead field so the stacked shapes agree).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from ..optim import Optimizer, apply_updates
+from ..optim import Optimizer
+from . import engine
+from .engine import PodTransport  # re-export (historical import site)
 
 
 # --------------------------------------------------------------------------
@@ -89,148 +93,15 @@ def _top_loss(top, z_a, z_b, y):
 
 
 # --------------------------------------------------------------------------
-# One communication round inside shard_map
+# One communication round inside shard_map (delegates to the engine)
 # --------------------------------------------------------------------------
 def make_pod_round(mesh: Mesh, opt: Optimizer, *, R: int, cos_xi: float,
-                   weighting: bool = True):
-    """Build the jitted multi-pod CELU round.
-
-    State pytree (all party-stacked, party axis over ``pod``):
-      params:   {"tower": (2,...), "top": (2,...)}
-      opt:      AdaGrad accumulators, same structure
-      ws:       workset ring buffers (2, W, B_local, ...) — per-party caches
-    Batch: x (2, B, F) int32 — party p's features on pod p;
-           y (2, B) — labels valid on party 1's slot only.
-    """
-    def exchange_and_local(params, opt_state, ws, x, y):
-        """Runs per-pod (inside shard_map, pod axis size 2).
-
-        Shapes here are the PER-POD view: params leaves (1, ...), x (1,B,F).
-        """
-        pod = jax.lax.axis_index("pod")
-        tower = jax.tree_util.tree_map(lambda a: a[0], params["tower"])
-        top = jax.tree_util.tree_map(lambda a: a[0], params["top"])
-        xb = x[0]                                   # (B, F)
-        yb = y[0]                                   # (B,)
-
-        # ---- fresh exchange (the paper's communication worker) ----------
-        z_mine, tower_vjp = jax.vjp(lambda tp: _tower_fwd(tp, xb), tower)
-        # Z_A: pod0 -> pod1 (pod0 receives pod1's Z_B slot, unused)
-        z_recv = jax.lax.ppermute(z_mine, "pod", [(0, 1), (1, 0)])
-        z_a_at_b = z_recv                            # on pod 1: Z_A
-
-        def loss_fn(top_p, z_a):
-            li = _top_loss(top_p, z_a, z_mine, yb)
-            return jnp.mean(li)
-        (loss, (g_top, dz_a)) = (loss_fn(top, z_a_at_b),
-                                 jax.grad(loss_fn, argnums=(0, 1))(
-                                     top, z_a_at_b))
-        # ∇Z_A: pod1 -> pod0 (the symmetric permute)
-        dz_back = jax.lax.ppermute(dz_a, "pod", [(1, 0), (0, 1)])
-
-        is_a = (pod == 0)
-        # Party A's tower cotangent is the received ∇Z_A; Party B's is its
-        # local ∂loss/∂Z_B.  Both computed, selected by pod id.
-        dz_b_local = jax.grad(
-            lambda z_b: jnp.mean(_top_loss(top, z_a_at_b, z_b, yb)))(z_mine)
-        cot = jnp.where(is_a, dz_back, dz_b_local)
-        (g_tower,) = tower_vjp(cot)
-        g_top = jax.tree_util.tree_map(
-            lambda g: jnp.where(is_a, 0.0, g), g_top)
-
-        # ---- update + insert into the device-resident workset -----------
-        grads = {"tower": jax.tree_util.tree_map(lambda g: g[None], g_tower),
-                 "top": jax.tree_util.tree_map(lambda g: g[None], g_top)}
-        upd, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, upd)
-
-        W = ws["z"].shape[1]
-        slot = jnp.mod(ws["time"][0], W)
-        ws = dict(ws)
-        # cache: stale z (own Z for A's weighting / Z_A for B), stale dz,
-        # own features (+ labels at B)
-        z_cache = jnp.where(is_a, z_mine, z_a_at_b)
-        dz_cache = jnp.where(is_a, dz_back, dz_a)
-        ws["z"] = jax.lax.dynamic_update_index_in_dim(
-            ws["z"], z_cache[None], slot, 1)
-        ws["dz"] = jax.lax.dynamic_update_index_in_dim(
-            ws["dz"], dz_cache[None], slot, 1)
-        ws["x"] = jax.lax.dynamic_update_index_in_dim(
-            ws["x"], xb[None], slot, 1)
-        ws["y"] = jax.lax.dynamic_update_index_in_dim(
-            ws["y"], yb[None], slot, 1)
-        ws["time"] = ws["time"] + 1
-
-        # ---- R local updates, round-robin over the workset ---------------
-        def local_step(carry, j):
-            params, opt_state, cursor = carry
-            t = ws["time"][0]
-            n_alive = jnp.minimum(t, W)
-            slot_j = jnp.mod(cursor, jnp.maximum(n_alive, 1))
-            zs = ws["z"][0, slot_j]
-            dzs = ws["dz"][0, slot_j]
-            xs = ws["x"][0, slot_j]
-            ys_ = ws["y"][0, slot_j]
-            tower_j = jax.tree_util.tree_map(lambda a: a[0],
-                                             params["tower"])
-            top_j = jax.tree_util.tree_map(lambda a: a[0], params["top"])
-
-            # Party A: ad-hoc forward, cosine vs stale Z, weighted stale ∇Z
-            z_new, vjp_j = jax.vjp(lambda tp: _tower_fwd(tp, xs), tower_j)
-            if weighting:
-                num = jnp.sum(z_new * zs, axis=1)
-                den = jnp.sqrt(jnp.sum(z_new * z_new, axis=1)
-                               * jnp.sum(zs * zs, axis=1))
-                w_a = num / jnp.maximum(den, 1e-12)
-                w_a = jnp.where(w_a < cos_xi, 0.0, w_a)
-            else:
-                w_a = jnp.ones(z_new.shape[0], jnp.float32)
-
-            # Party B: stale Z_A + ad-hoc own tower; weight by ∇Z_A cosine
-            def loss_b(top_p, tower_p, w):
-                z_b = _tower_fwd(tower_p, xs)
-                li = _top_loss(top_p, zs, z_b, ys_)
-                return jnp.mean(w * li)
-            dz_new = jax.grad(
-                lambda z: jnp.mean(_top_loss(top_j, z,
-                                             _tower_fwd(tower_j, xs), ys_))
-            )(zs)
-            if weighting:
-                num = jnp.sum(dz_new * dzs, axis=1)
-                den = jnp.sqrt(jnp.sum(dz_new * dz_new, axis=1)
-                               * jnp.sum(dzs * dzs, axis=1))
-                w_b = num / jnp.maximum(den, 1e-12)
-                w_b = jnp.where(w_b < cos_xi, 0.0, w_b)
-            else:
-                w_b = jnp.ones(dz_new.shape[0], jnp.float32)
-
-            (g_tower_a,) = vjp_j(w_a[:, None] * dzs)
-            g_top_b, g_tower_b = jax.grad(loss_b, argnums=(0, 1))(
-                top_j, tower_j, w_b)
-
-            is_a_ = (pod == 0)
-            g_tower_sel = jax.tree_util.tree_map(
-                lambda ga, gb: jnp.where(is_a_, ga, gb)[None],
-                g_tower_a, g_tower_b)
-            g_top_sel = jax.tree_util.tree_map(
-                lambda g: jnp.where(is_a_, 0.0, g)[None], g_top_b)
-            grads_j = {"tower": g_tower_sel, "top": g_top_sel}
-            upd_j, opt_state = opt.update(grads_j, opt_state, params)
-            params = apply_updates(params, upd_j)
-            return (params, opt_state, cursor + 1), None
-
-        (params, opt_state, _), _ = jax.lax.scan(
-            local_step, (params, opt_state, jnp.int32(0)), None, length=R)
-        return params, opt_state, ws, loss[None]
-
-    pp = P("pod")
-    specs_state = pp  # every party-stacked leaf shards dim0 over pod
-    fn = shard_map(
-        exchange_and_local, mesh=mesh,
-        in_specs=(pp, pp, pp, pp, pp),
-        out_specs=(pp, pp, pp, pp),
-        check_rep=False)
-    return jax.jit(fn)
+                   weighting: bool = True,
+                   transport: Optional[PodTransport] = None):
+    """Build the jitted multi-pod CELU round over the WDL demo model."""
+    return engine.make_pod_round(mesh, opt, R=R, cos_xi=cos_xi,
+                                 weighting=weighting, tower_fwd=_tower_fwd,
+                                 top_loss=_top_loss, transport=transport)
 
 
 def init_pod_state(rng, mesh: Mesh, opt: Optimizer, *, n_fields: int,

@@ -1,4 +1,16 @@
-"""VFL training protocols: Vanilla, FedBCD, CELU-VFL (the paper's Section 3).
+"""Two-party VFL protocols: Vanilla, FedBCD, CELU-VFL (paper Section 3).
+
+This module is now a thin two-party preset over :mod:`repro.core.engine` —
+the single K-party round engine that owns exchange, workset insert/sample,
+Algorithm-2 weighting, and the local-update scan.  The public API
+(``VFLTask`` / ``init_state`` / ``make_round`` / ``protocol_config`` /
+``exchange_bytes``) and the top-level state structure
+(``params/opt/ws/steps`` keyed ``"a"``/``"b"`` with scalar step counters)
+are unchanged from the original implementation — only the workset
+ring-buffer entry keys moved to the engine's generic schema (``"z"`` /
+``"dz"`` instead of ``"z_a"`` / ``"dz_a"``; B's slots hold K-lists).
+``tests/test_engine.py`` pins the engine's K=1 path against golden traces
+recorded from the pre-engine implementation.
 
 A *task* is the minimal two-party interface (information-flow discipline is
 kept at function granularity — no function sees both parties' raw data):
@@ -15,28 +27,22 @@ staleness-aware instance weighting (Algorithms 1-2):
   * FedBCD   = consecutive sampling (W=1 semantics) + no weighting;
   * CELU-VFL = round-robin sampling over W slots + cosine weighting.
 
-The whole round is ONE jitted function (exchange + scan over local steps) so
-XLA's latency-hiding scheduler can overlap the cross-party transfer with the
-local-update chain — the SPMD analogue of the paper's background
-communication worker (DESIGN §2).
-
 Communication accounting: each round moves ``bytes(Z_A) + bytes(∇Z_A)``
-across the slow link; the simulated-WAN wall-clock model used by the
-benchmarks is ``t_round = bytes / bandwidth + 2 * latency`` (Section 2.1's
-213 ms example reproduces with bandwidth=300 Mbps).
+across the slow link (``engine.SimWANTransport``); the simulated-WAN
+wall-clock model used by the benchmarks is ``t_round = bytes / bandwidth +
+2 * latency`` (Section 2.1's 213 ms example reproduces with
+bandwidth=300 Mbps).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import CELUConfig
-from ..optim import Optimizer, apply_updates
-from .weighting import instance_weights, xi_to_cos
-from .workset import workset_init, workset_insert, workset_sample
+from ..optim import Optimizer
+from . import engine
 
 
 class VFLTask(NamedTuple):
@@ -46,32 +52,38 @@ class VFLTask(NamedTuple):
                      Tuple[jnp.ndarray, jnp.ndarray]]
 
 
-def _bcast(w, like):
-    """(B,) weights -> broadcastable to ``like``'s shape."""
-    return w.reshape(w.shape + (1,) * (like.ndim - 1)).astype(jnp.float32)
+# --------------------------------------------------------------------------
+# State (two-party layout <-> engine K=1 layout)
+# --------------------------------------------------------------------------
+def _to_engine(state):
+    return {
+        "params": {"a": [state["params"]["a"]], "b": state["params"]["b"]},
+        "opt": {"a": [state["opt"]["a"]], "b": state["opt"]["b"]},
+        "ws": {"a": [state["ws"]["a"]], "b": state["ws"]["b"]},
+        "steps": {"a": [state["steps"]["a"]], "b": state["steps"]["b"]},
+        "comm_rounds": state["comm_rounds"],
+    }
 
 
-# --------------------------------------------------------------------------
-# State
-# --------------------------------------------------------------------------
+def _from_engine(st):
+    return {
+        "params": {"a": st["params"]["a"][0], "b": st["params"]["b"]},
+        "opt": {"a": st["opt"]["a"][0], "b": st["opt"]["b"]},
+        "ws": {"a": st["ws"]["a"][0], "b": st["ws"]["b"]},
+        "steps": {"a": st["steps"]["a"][0], "b": st["steps"]["b"]},
+        "comm_rounds": st["comm_rounds"],
+    }
+
+
 def init_state(task: VFLTask, params: Dict[str, Any], opt: Optimizer,
                celu: CELUConfig, batch_a: Dict[str, Any],
                batch_b: Dict[str, Any]):
     """Build the full training state.  ``batch_a/b`` are example (abstract ok)
     batches used to size the workset ring buffers."""
-    z_a = jax.eval_shape(task.forward_a, params["a"], batch_a)
-    z_like = jnp.zeros(z_a.shape, z_a.dtype) if not isinstance(
-        z_a, jnp.ndarray) else z_a
-    entry_a = {"z_a": z_like, "dz_a": z_like, "batch": batch_a}
-    entry_b = {"z_a": z_like, "dz_a": z_like, "batch": batch_b}
-    return {
-        "params": params,
-        "opt": {"a": opt.init(params["a"]), "b": opt.init(params["b"])},
-        "ws": {"a": workset_init(celu.W, entry_a),
-               "b": workset_init(celu.W, entry_b)},
-        "steps": {"a": jnp.int32(0), "b": jnp.int32(0)},
-        "comm_rounds": jnp.int32(0),
-    }
+    st = engine.init_state(engine.lift_two_party(task),
+                           engine.lift_two_party_params(params),
+                           opt, celu, [batch_a], batch_b)
+    return _from_engine(st)
 
 
 def exchange_bytes(z_shape, dtype_bytes: int = 4,
@@ -79,200 +91,29 @@ def exchange_bytes(z_shape, dtype_bytes: int = 4,
     """Bytes moved per communication round (Z_A + ∇Z_A).  The paper sends
     fp32; the beyond-paper bf16 wire halves it."""
     import numpy as np
-    n = int(np.prod(z_shape))
-    b = jnp.dtype(wire_dtype).itemsize if wire_dtype else dtype_bytes
-    return 2 * n * b
-
-
-# --------------------------------------------------------------------------
-# The fresh exchange (one communication round's synchronous part)
-# --------------------------------------------------------------------------
-def make_exchange_step(task: VFLTask, opt: Optimizer, celu: CELUConfig):
-    """Returns fn(state, batch_a, batch_b, batch_idx) -> (state, metrics).
-
-    Computes the exact two-phase propagation (Z_A forward, ∇Z_A backward),
-    applies a plain SGD step to BOTH parties, and inserts the fresh
-    statistics + own features into each party's workset."""
-
-    wire = jnp.dtype(celu.wire_dtype)
-
-    def _quantize(x):
-        """Simulate the wire: round-trip through the wire dtype."""
-        if x.dtype == wire:
-            return x
-        return x.astype(wire).astype(x.dtype)
-
-    def _release(x, rng):
-        """The message actually released: DP-noised (optional) + wire
-        precision.  The noised value is also what gets cached."""
-        if celu.dp_sigma > 0.0:
-            from .privacy import DPConfig, privatize
-            x = privatize(rng, x, DPConfig(clip=celu.dp_clip,
-                                           sigma=celu.dp_sigma))
-        return _quantize(x)
-
-    def step(state, batch_a, batch_b, batch_idx):
-        pa, pb = state["params"]["a"], state["params"]["b"]
-        rng = jax.random.fold_in(jax.random.PRNGKey(17),
-                                 state["comm_rounds"])
-        rng_up, rng_down = jax.random.split(rng)
-
-        # Party A forward -> Z_A (the uplink message, in wire precision)
-        z_a, vjp_a = jax.vjp(lambda p: task.forward_a(p, batch_a), pa)
-        z_a = _release(z_a, rng_up)
-
-        # Party B: loss + grads wrt (params_b, Z_A); ∇Z_A is the downlink
-        def mean_loss(p, z):
-            li, aux = task.loss_b(p, z, batch_b)
-            return jnp.mean(li) + aux, li
-        (loss, li), grads = jax.value_and_grad(
-            mean_loss, argnums=(0, 1), has_aux=True)(pb, z_a)
-        g_b, dz_a = grads
-        dz_a = _release(dz_a, rng_down)
-
-        # Party A backward with the (wire-precision) cotangent
-        (g_a,) = vjp_a(dz_a.astype(z_a.dtype))
-
-        upd_a, opt_a = opt.update(g_a, state["opt"]["a"], pa)
-        upd_b, opt_b = opt.update(g_b, state["opt"]["b"], pb)
-
-        ws_a = workset_insert(state["ws"]["a"],
-                              {"z_a": z_a, "dz_a": dz_a, "batch": batch_a},
-                              batch_idx)
-        ws_b = workset_insert(state["ws"]["b"],
-                              {"z_a": z_a, "dz_a": dz_a, "batch": batch_b},
-                              batch_idx)
-        new_state = {
-            "params": {"a": apply_updates(pa, upd_a),
-                       "b": apply_updates(pb, upd_b)},
-            "opt": {"a": opt_a, "b": opt_b},
-            "ws": {"a": ws_a, "b": ws_b},
-            "steps": {"a": state["steps"]["a"] + 1,
-                      "b": state["steps"]["b"] + 1},
-            "comm_rounds": state["comm_rounds"] + 1,
-        }
-        return new_state, {"loss": loss}
-
-    return step
-
-
-# --------------------------------------------------------------------------
-# Local updates (Algorithm 2)
-# --------------------------------------------------------------------------
-def make_local_step_a(task: VFLTask, opt: Optimizer, celu: CELUConfig):
-    """Party A local update: ad-hoc forward on the cached batch, stale
-    cotangent ``∇Z_A^(i)`` weighted by cos(Z_A^(i,j), Z_A^(i))."""
-    cos_xi = xi_to_cos(celu.xi_degrees)
-
-    def step(params_a, opt_a, ws_a, n_steps):
-        ws_a, entry, _, valid = workset_sample(ws_a, celu.R, celu.sampling)
-        z_new, vjp_a = jax.vjp(
-            lambda p: task.forward_a(p, entry["batch"]), params_a)
-        if celu.weighting:
-            w = instance_weights(z_new, entry["z_a"], cos_xi)
-        else:
-            w = jnp.ones((z_new.shape[0],), jnp.float32)
-        w = w * valid.astype(jnp.float32)
-        cot = (_bcast(w, z_new) * entry["dz_a"].astype(jnp.float32))
-        (g_a,) = vjp_a(cot.astype(z_new.dtype))
-        upd, opt_a = opt.update(g_a, opt_a, params_a)
-        # no-op if the table had nothing alive
-        upd = jax.tree_util.tree_map(
-            lambda u: u * valid.astype(jnp.float32), upd)
-        params_a = apply_updates(params_a, upd)
-        metrics = {"w_mean": jnp.mean(w), "w_zero_frac": jnp.mean(w == 0.0),
-                   "valid": valid.astype(jnp.float32)}
-        return params_a, opt_a, ws_a, n_steps + valid.astype(jnp.int32), \
-            metrics
-
-    return step
-
-
-def make_local_step_b(task: VFLTask, opt: Optimizer, celu: CELUConfig):
-    """Party B local update: stale ``Z_A^(i)`` + ad-hoc own features; the
-    ad-hoc ∇Z_A^(i,j) is computed only to measure staleness (footnote 2),
-    then the weighted per-instance losses drive the backward pass."""
-    cos_xi = xi_to_cos(celu.xi_degrees)
-
-    def step(params_b, opt_b, ws_b, n_steps):
-        ws_b, entry, _, valid = workset_sample(ws_b, celu.R, celu.sampling)
-        z_stale = entry["z_a"]
-        batch_b = entry["batch"]
-
-        if celu.weighting:
-            # ad-hoc derivatives wrt the (stale) activations
-            dz_new = jax.grad(
-                lambda z: jnp.mean(task.loss_b(params_b, z, batch_b)[0])
-            )(z_stale.astype(jnp.float32))
-            w = instance_weights(dz_new, entry["dz_a"], cos_xi)
-        else:
-            w = jnp.ones((z_stale.shape[0],), jnp.float32)
-        w = w * valid.astype(jnp.float32)
-
-        def weighted_loss(p):
-            li, aux = task.loss_b(p, z_stale, batch_b)
-            return jnp.mean(w * li) + aux
-        g_b = jax.grad(weighted_loss)(params_b)
-        upd, opt_b = opt.update(g_b, opt_b, params_b)
-        upd = jax.tree_util.tree_map(
-            lambda u: u * valid.astype(jnp.float32), upd)
-        params_b = apply_updates(params_b, upd)
-        metrics = {"w_mean": jnp.mean(w), "w_zero_frac": jnp.mean(w == 0.0),
-                   "valid": valid.astype(jnp.float32)}
-        return params_b, opt_b, ws_b, n_steps + valid.astype(jnp.int32), \
-            metrics
-
-    return step
+    if not wire_dtype:
+        return 2 * int(np.prod(z_shape)) * dtype_bytes
+    tp = engine.SimWANTransport(CELUConfig(wire_dtype=wire_dtype))
+    return tp.round_bytes([z_shape])
 
 
 # --------------------------------------------------------------------------
 # One full communication round (exchange + R local updates per party)
 # --------------------------------------------------------------------------
 def make_round(task: VFLTask, opt: Optimizer, celu: CELUConfig,
-               *, local_steps: int = -1, jit: bool = True):
+               *, local_steps: int = -1, jit: bool = True,
+               fused_weighting: bool = True, transport=None):
     """fn(state, batch_a, batch_b, batch_idx) -> (state, metrics).
 
     ``local_steps`` defaults to R (steady state: one fresh insert funds R
     uses).  Vanilla training = ``local_steps=0``."""
-    n_local = celu.R if local_steps < 0 else local_steps
-    exchange = make_exchange_step(task, opt, celu)
-    la = make_local_step_a(task, opt, celu)
-    lb = make_local_step_b(task, opt, celu)
+    eng = engine.make_round(engine.lift_two_party(task), opt, celu,
+                            local_steps=local_steps, transport=transport,
+                            fused_weighting=fused_weighting, jit=False)
 
     def round_fn(state, batch_a, batch_b, batch_idx):
-        state, m = exchange(state, batch_a, batch_b, batch_idx)
-        if n_local == 0:
-            zero = jnp.float32(0.0)
-            m.update({"local_steps": jnp.int32(0), "w_mean": zero,
-                      "w_zero_frac": zero})
-            return state, m
-
-        def body(carry, _):
-            pa, oa, wsa, na, pb, ob, wsb, nb = carry
-            pa, oa, wsa, na, ma = la(pa, oa, wsa, na)
-            pb, ob, wsb, nb, mb = lb(pb, ob, wsb, nb)
-            return (pa, oa, wsa, na, pb, ob, wsb, nb), \
-                {"w_mean": (ma["w_mean"] + mb["w_mean"]) * 0.5,
-                 "w_zero_frac": (ma["w_zero_frac"] + mb["w_zero_frac"]) * 0.5}
-
-        init = (state["params"]["a"], state["opt"]["a"], state["ws"]["a"],
-                jnp.int32(0),
-                state["params"]["b"], state["opt"]["b"], state["ws"]["b"],
-                jnp.int32(0))
-        (pa, oa, wsa, na, pb, ob, wsb, nb), lm = jax.lax.scan(
-            body, init, None, length=n_local)
-        state = {
-            "params": {"a": pa, "b": pb},
-            "opt": {"a": oa, "b": ob},
-            "ws": {"a": wsa, "b": wsb},
-            "steps": {"a": state["steps"]["a"] + na,
-                      "b": state["steps"]["b"] + nb},
-            "comm_rounds": state["comm_rounds"],
-        }
-        m.update({"local_steps": na + nb,
-                  "w_mean": jnp.mean(lm["w_mean"]),
-                  "w_zero_frac": jnp.mean(lm["w_zero_frac"])})
-        return state, m
+        st, m = eng(_to_engine(state), [batch_a], batch_b, batch_idx)
+        return _from_engine(st), m
 
     return jax.jit(round_fn, donate_argnums=(0,)) if jit else round_fn
 
@@ -280,14 +121,4 @@ def make_round(task: VFLTask, opt: Optimizer, celu: CELUConfig,
 # --------------------------------------------------------------------------
 # Named protocol presets (the paper's three competitors)
 # --------------------------------------------------------------------------
-def protocol_config(name: str, base: CELUConfig) -> Tuple[CELUConfig, int]:
-    """-> (celu_cfg, local_steps) for name in {vanilla, fedbcd, celu}."""
-    import dataclasses
-    if name == "vanilla":
-        return dataclasses.replace(base, weighting=False), 0
-    if name == "fedbcd":
-        return dataclasses.replace(base, W=1, weighting=False,
-                                   sampling="consecutive"), base.R
-    if name == "celu":
-        return base, base.R
-    raise ValueError(name)
+protocol_config = engine.preset_config

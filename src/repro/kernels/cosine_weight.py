@@ -29,19 +29,51 @@ EPS = 1e-12
 BLOCK_B = 128
 
 
-def _kernel(a_ref, s_ref, dz_ref, thresh_ref, w_ref, out_ref):
+def _row_weights(a_ref, s_ref, thresh_ref):
+    """Shared kernel body: row cosines floored at the threshold."""
     a = a_ref[...].astype(jnp.float32)           # (BLOCK_B, F)
     s = s_ref[...].astype(jnp.float32)
-    dz = dz_ref[...].astype(jnp.float32)
     thresh = thresh_ref[0]
 
     num = jnp.sum(a * s, axis=1)                 # lane reduction -> (BLOCK_B,)
     den = jnp.sqrt(jnp.sum(a * a, axis=1) * jnp.sum(s * s, axis=1))
     w = num / jnp.maximum(den, EPS)
-    w = jnp.where(w < thresh, 0.0, w)
+    return jnp.where(w < thresh, 0.0, w)
 
+
+def _kernel(a_ref, s_ref, dz_ref, thresh_ref, w_ref, out_ref):
+    w = _row_weights(a_ref, s_ref, thresh_ref)
+    dz = dz_ref[...].astype(jnp.float32)
     w_ref[...] = w
     out_ref[...] = (dz * w[:, None]).astype(out_ref.dtype)
+
+
+def _kernel_weights_only(a_ref, s_ref, thresh_ref, w_ref):
+    w_ref[...] = _row_weights(a_ref, s_ref, thresh_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cosine_weights_2d(ad_hoc, stale, cos_xi, *, interpret: bool = True):
+    """Weights-only variant: loads 2 (B, F) operands, writes only the (B,)
+    weights — for the label party's InsWeight, where no cotangent scale
+    follows (the weighted loss drives the backward pass instead)."""
+    B, F = ad_hoc.shape
+    bb = min(BLOCK_B, B)
+    assert B % bb == 0, (B, bb)
+    thresh = jnp.asarray([cos_xi], jnp.float32)
+
+    return pl.pallas_call(
+        _kernel_weights_only,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, F), lambda i: (i, 0)),
+            pl.BlockSpec((bb, F), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(ad_hoc, stale, thresh)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

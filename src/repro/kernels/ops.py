@@ -21,13 +21,12 @@ INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "") == ""
 
 
 def cosine_weight(ad_hoc, stale, cos_xi):
-    """Algorithm-2 InsWeight: -> (B,) float32 weights."""
+    """Algorithm-2 InsWeight: -> (B,) float32 weights (weights-only kernel:
+    no cotangent operand/result moves through VMEM)."""
     B = ad_hoc.shape[0]
-    a2 = ad_hoc.reshape(B, -1)
-    s2 = stale.reshape(B, -1)
-    w, _ = _cw.cosine_weight_2d(a2, s2, jnp.zeros_like(a2),
-                                jnp.float32(cos_xi), interpret=INTERPRET)
-    return w
+    return _cw.cosine_weights_2d(ad_hoc.reshape(B, -1),
+                                 stale.reshape(B, -1),
+                                 jnp.float32(cos_xi), interpret=INTERPRET)
 
 
 def weighted_cotangent(ad_hoc, stale, dz, cos_xi):

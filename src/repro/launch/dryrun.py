@@ -51,6 +51,23 @@ _SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
                        r"pred|c64|c128)\[([0-9,]*)\]")
 
 
+def _cost_dict(cost) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions: older
+    releases return one dict, JAX 0.4.3x returns a LIST of per-program
+    dicts, and some backends return None.  Sum numeric fields across
+    programs into a single flat dict."""
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return cost
+    merged: Dict[str, float] = {}
+    for prog in cost:
+        for k, v in (prog or {}).items():
+            if isinstance(v, (int, float)):
+                merged[k] = merged.get(k, 0.0) + float(v)
+    return merged
+
+
 def _shape_bytes(m) -> int:
     dt, dims = m.group(1), m.group(2)
     n = 1
@@ -321,7 +338,7 @@ def dryrun(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     coll_total = sum(coll.values())

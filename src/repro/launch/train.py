@@ -27,6 +27,7 @@ import numpy as np
 
 from ..configs import SHAPES, get_config
 from ..configs.base import ArchConfig, CELUConfig
+from ..core import engine
 from ..core import protocol as proto
 from ..data import synthetic as synth
 from ..models import vfl
@@ -72,17 +73,20 @@ def train_dlrm(args) -> Dict[str, Any]:
 
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
                       weighting=not args.no_weighting)
-    celu_cfg, n_local = proto.protocol_config(args.protocol, base)
+    celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = init_fn(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
 
     it = synth.aligned_batches(data["train"], args.batch_size,
                                seed=args.seed)
     _, ba0, bb0 = next(it)
-    state = proto.init_state(task, params, opt, celu_cfg, _as_jax(ba0),
-                             _as_jax(bb0))
-    rnd = proto.make_round(task, opt, celu_cfg, local_steps=n_local)
-    z_bytes = proto.exchange_bytes((args.batch_size, cfg.z_dim))
+    etask = engine.lift_two_party(task)
+    transport = engine.SimWANTransport(celu_cfg)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, celu_cfg, [_as_jax(ba0)], _as_jax(bb0))
+    rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
+                            transport=transport, donate=True)
+    z_bytes = transport.round_bytes([(args.batch_size, cfg.z_dim)])
 
     te = data["test"]
     tea, teb = ({"x_a": jnp.asarray(te["x_a"])},
@@ -93,9 +97,10 @@ def train_dlrm(args) -> Dict[str, Any]:
     history = []
     for i in range(args.rounds):
         bi, ba, bb = next(it)
-        state, m = rnd(state, _as_jax(ba), _as_jax(bb), bi)
+        state, m = rnd(state, [_as_jax(ba)], _as_jax(bb), bi)
         if (i + 1) % max(1, args.rounds // 10) == 0:
-            logits = predict(state["params"], cfg, tea, teb)
+            logits = predict(engine.unlift_params(state["params"]), cfg,
+                             tea, teb)
             a = auc(np.asarray(logits), te["y"])
             history.append((i + 1, float(m["loss"]), a))
             print(f"round {i+1:6d} loss {float(m['loss']):.4f} "
@@ -130,20 +135,22 @@ def train_llm(args) -> Dict[str, Any]:
     task = llm_task(cfg)
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
                       weighting=not args.no_weighting)
-    celu_cfg, n_local = proto.protocol_config(args.protocol, base)
+    celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = vfl.init_all(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
 
     it = synth.token_batches(data, B, seed=args.seed)
     _, ba0, bb0 = next(it)
-    state = proto.init_state(task, params, opt, celu_cfg, _as_jax(ba0),
-                             _as_jax(bb0))
-    rnd = proto.make_round(task, opt, celu_cfg, local_steps=n_local)
+    etask = engine.lift_two_party(task)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, celu_cfg, [_as_jax(ba0)], _as_jax(bb0))
+    rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
+                            donate=True)
     it = synth.token_batches(data, B, seed=args.seed)
     losses = []
     for i in range(args.rounds):
         bi, ba, bb = next(it)
-        state, m = rnd(state, _as_jax(ba), _as_jax(bb), bi)
+        state, m = rnd(state, [_as_jax(ba)], _as_jax(bb), bi)
         losses.append(float(m["loss"]))
         if (i + 1) % max(1, args.rounds // 10) == 0:
             print(f"round {i+1:4d} loss {losses[-1]:.4f}", flush=True)

@@ -1,0 +1,222 @@
+"""K-party round engine: golden-trace parity with the pre-engine seed
+implementation, fused-vs-reference weighting equivalence, and transport
+byte accounting.
+
+``golden/two_party_trace.json`` was recorded from the ORIGINAL (pre-engine)
+``core.protocol`` implementation at the seed commit — the engine's K=1 path
+must reproduce those metrics bit-for-bit for all three protocol presets,
+whether constructed through the ``core.protocol`` shim or directly on the
+engine.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CELUConfig
+from repro.core import engine
+from repro.core import protocol as P
+from repro.core.weighting import instance_weights
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.models.tabular import DLRMConfig, make_dlrm
+from repro.optim import make_optimizer
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "two_party_trace.json")
+
+
+def _workload():
+    """The exact tiny workload the golden traces were recorded on."""
+    spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
+                       n_train=2048, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=32, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    return data, cfg
+
+
+def _run_trace(protocol, *, via_shim, fused=True, rounds=20):
+    data, cfg = _workload()
+    init_fn, task, predict = make_dlrm(cfg)
+    base = CELUConfig(R=3, W=3, xi_degrees=60.0)
+    ccfg, nloc = engine.preset_config(protocol, base)
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", 0.05)
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+
+    if via_shim:
+        state = P.init_state(task, params, opt, ccfg, asj(ba), asj(bb))
+        rnd = P.make_round(task, opt, ccfg, local_steps=nloc,
+                           fused_weighting=fused)
+        step = lambda st, ba, bb, bi: rnd(st, asj(ba), asj(bb), bi)
+        steps_of = lambda st: (int(st["steps"]["a"]),
+                               int(st["steps"]["b"]))
+    else:
+        etask = engine.lift_two_party(task)
+        state = engine.init_state(etask,
+                                  engine.lift_two_party_params(params),
+                                  opt, ccfg, [asj(ba)], asj(bb))
+        rnd = engine.make_round(etask, opt, ccfg, local_steps=nloc,
+                                fused_weighting=fused)
+        step = lambda st, ba, bb, bi: rnd(st, [asj(ba)], asj(bb), bi)
+        steps_of = lambda st: (int(st["steps"]["a"][0]),
+                               int(st["steps"]["b"]))
+
+    it = aligned_batches(data["train"], 64, seed=0)
+    rows = []
+    for i in range(rounds):
+        bi, ba, bb = next(it)
+        state, m = step(state, ba, bb, bi)
+        rows.append({"loss": float(np.float32(m["loss"])),
+                     "w_mean": float(np.float32(m["w_mean"])),
+                     "w_zero_frac": float(np.float32(m["w_zero_frac"])),
+                     "local_steps": int(m["local_steps"])})
+    sa, sb = steps_of(state)
+    rows.append({"steps_a": sa, "steps_b": sb,
+                 "comm_rounds": int(state["comm_rounds"])})
+    return rows
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("protocol", ["vanilla", "fedbcd", "celu"])
+def test_golden_trace_parity_via_protocol_shim(protocol, golden):
+    """core.protocol (now a preset shim) reproduces the seed implementation
+    bit-for-bit: identical loss/weight metrics over 20 rounds."""
+    got = _run_trace(protocol, via_shim=True)
+    assert got == golden[protocol]
+
+
+@pytest.mark.parametrize("protocol", ["vanilla", "fedbcd", "celu"])
+def test_golden_trace_parity_direct_engine(protocol, golden):
+    """Constructing K=1 rounds directly on the engine gives the same
+    trace as the shim (and hence the seed)."""
+    got = _run_trace(protocol, via_shim=False)
+    assert got == golden[protocol]
+
+
+def test_fused_weighting_matches_reference_trace(golden):
+    """The fused Pallas weighted-cotangent hot path and the pure-jnp
+    reference composition produce identical training traces."""
+    ref = _run_trace("celu", via_shim=False, fused=False, rounds=10)
+    fused = _run_trace("celu", via_shim=False, fused=True, rounds=10)
+    assert ref == fused
+    # and both match the golden prefix
+    assert ref[:10] == golden["celu"][:10]
+
+
+def test_fused_weighting_kernel_equivalence():
+    """Direct kernel-level check: engine.weighted_cotangent fused path ==
+    reference composition (weights AND cotangent).  Single-tile shapes
+    (B <= BLOCK_B) are bit-exact; tiled grids may reassociate the row
+    reduction, so they get a float32-ulp tolerance."""
+    from repro.kernels.cosine_weight import BLOCK_B
+    rng = np.random.default_rng(3)
+    for B, F in ((64, 8), (128, 32), (256, 16)):
+        a = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        s = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        dz = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        w_f, cot_f = engine.weighted_cotangent(a, s, dz, 0.5, fused=True)
+        w_r, cot_r = engine.weighted_cotangent(a, s, dz, 0.5, fused=False)
+        if B <= BLOCK_B:
+            np.testing.assert_array_equal(np.asarray(w_f), np.asarray(w_r))
+            np.testing.assert_array_equal(np.asarray(cot_f),
+                                          np.asarray(cot_r))
+        else:
+            np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r),
+                                       rtol=3e-7, atol=3e-7)
+            np.testing.assert_allclose(np.asarray(cot_f), np.asarray(cot_r),
+                                       rtol=3e-7, atol=3e-7)
+        np.testing.assert_allclose(
+            np.asarray(engine.staleness_weights(a, s, 0.5, fused=True)),
+            np.asarray(instance_weights(a, s, 0.5)), rtol=3e-7, atol=3e-7)
+
+
+def test_fused_weighting_odd_batch_falls_back():
+    """Batch sizes the Pallas tiling can't split fall back to the
+    reference path instead of failing."""
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.normal(size=(37, 8)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(37, 8)), jnp.float32)
+    dz = jnp.asarray(rng.normal(size=(37, 8)), jnp.float32)
+    w, cot = engine.weighted_cotangent(a, s, dz, 0.5, fused=True)
+    assert w.shape == (37,) and cot.shape == (37, 8)
+
+
+def test_sim_wan_transport_byte_accounting():
+    t32 = engine.SimWANTransport(CELUConfig(wire_dtype="float32"))
+    t16 = engine.SimWANTransport(CELUConfig(wire_dtype="bfloat16"))
+    # paper §2.1 geometry: Z_A (4096 x 256 fp32) -> 8 MB both ways
+    assert t32.round_bytes([(4096, 256)]) == 2 * 4096 * 256 * 4
+    assert t16.round_bytes([(4096, 256)]) == t32.round_bytes([(4096, 256)]) // 2
+    # K feature parties: K uplink+downlink pairs
+    assert t32.round_bytes([(64, 8)] * 3) == 3 * 2 * 64 * 8 * 4
+
+
+def test_engine_three_party_trains_and_counts_steps():
+    """K=2 feature parties on the engine: loss falls, per-party step
+    counters track 1 fresh + R local updates per round."""
+    spec = TabularSpec("t", fields_a=8, fields_b=4, vocab=64,
+                       n_train=4096, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 4, vocab=64, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    init_fn, _, _ = make_dlrm(cfg)
+    from repro.models.tabular import _mlp, _mlp_init, _tower
+    pa1 = init_fn(jax.random.PRNGKey(0), cfg)["a"]
+    pa2 = init_fn(jax.random.PRNGKey(1), cfg)["a"]
+    pb = dict(init_fn(jax.random.PRNGKey(2), cfg)["b"])
+    pb["top"] = _mlp_init(jax.random.PRNGKey(3), [3 * cfg.z_dim, 16, 1])
+
+    def forward_a(pa, batch_a):
+        return _tower(pa["tower"], batch_a["x_a"])
+
+    def loss_b(pb_, z_list, batch_b):
+        z_b = _tower(pb_["tower"], batch_b["x_b"])
+        h = jnp.concatenate([z.astype(jnp.float32) for z in z_list] + [z_b],
+                            axis=-1)
+        logit = _mlp(pb_["top"], h)[:, 0]
+        F = batch_b["x_b"].shape[1]
+        wide = pb_["wide"][jnp.arange(F)[None, :], batch_b["x_b"]].sum(1)
+        logit = logit + wide + pb_["bias"]
+        y = batch_b["y"]
+        li = jnp.maximum(logit, 0) - logit * y + jnp.log1p(
+            jnp.exp(-jnp.abs(logit)))
+        return li, jnp.float32(0.0)
+
+    task = engine.KPartyTask(forward_a, loss_b)
+    celu = CELUConfig(R=2, W=2, xi_degrees=60.0)
+    opt = make_optimizer("adagrad", 0.02)
+    split = lambda ba, bb: (
+        [{"x_a": jnp.asarray(ba["x_a"][:, :4])},
+         {"x_a": jnp.asarray(ba["x_a"][:, 4:])}],
+        {"x_b": jnp.asarray(bb["x_b"]), "y": jnp.asarray(bb["y"])})
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    bas, b = split(ba, bb)
+    state = engine.init_state(task, {"a": [pa1, pa2], "b": pb}, opt, celu,
+                              bas, b)
+    rnd = engine.make_round(task, opt, celu)
+    it = aligned_batches(data["train"], 64, seed=0)
+    losses = []
+    n_rounds = 20
+    for i in range(n_rounds):
+        bi, ba, bb = next(it)
+        bas, b = split(ba, bb)
+        state, m = rnd(state, bas, b, bi)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    assert int(state["comm_rounds"]) == n_rounds
+    for s in state["steps"]["a"]:
+        assert n_rounds < int(s) <= n_rounds * (1 + celu.R)
+    assert n_rounds < int(state["steps"]["b"]) <= n_rounds * (1 + celu.R)
