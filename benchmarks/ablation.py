@@ -1,10 +1,15 @@
 """Paper Table 2 / Figure 5: ablations over R (local updates), W (workset
-size / sampling strategy), and ξ (instance weighting threshold).
+size / sampling strategy), and ξ (instance weighting threshold) — plus the
+beyond-paper compressed-wire axis (bytes-to-target-loss, Compressed-VFL).
 
 Each block reproduces one Table-2 row group: communication rounds required
-to reach a shared target AUC, relative to the no-technique baseline.
+to reach a shared target AUC, relative to the no-technique baseline.  The
+``compression`` block instead self-calibrates a target LOSS from the
+identity-wire celu run and compares bytes spent to reach it.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from .common import csv_row, default_workload, rounds_to, run_protocol
 
@@ -84,6 +89,63 @@ def bench_instance_weighting(data, cfg, target, base):
                 f"{r['final_auc']:.4f}")
 
 
+COMP_ROUNDS = 300
+SMOOTH_W = 25            # rounds of training-loss smoothing
+
+
+def _smooth(losses, w: int = SMOOTH_W):
+    """Trailing moving average of the per-round training loss."""
+    xs = np.asarray(losses, np.float64)
+    c = np.cumsum(np.concatenate([[0.0], xs]))
+    n = np.minimum(np.arange(1, len(xs) + 1), w)
+    lo = np.arange(1, len(xs) + 1) - n
+    return (c[np.arange(1, len(xs) + 1)] - c[lo]) / n
+
+
+def bench_compression(data, cfg, compression: str = "int8_topk",
+                      batch: int = 256):
+    """Bytes-to-target-loss: the celu preset over the identity wire vs a
+    compressed wire (top-k / low-bit sketches with error feedback).
+
+    Both wires get the SAME WAN byte budget — the compressed wire's
+    cheaper rounds buy it proportionally more of them (that is the whole
+    trade: a compressed round carries less fresh signal, so convergence
+    takes more rounds but fewer bytes).  Target = the identity run's final
+    smoothed training loss; the compressed wire 'keeps convergence' when
+    it reaches that target inside the shared budget, and the win is
+    bytes-to-target."""
+    from repro.configs.base import CELUConfig
+    from repro.core import engine
+    z_shape = (batch, cfg.z_dim)
+    wire_bytes = {
+        name: engine.make_transport(CELUConfig(), name).round_bytes([z_shape])
+        for name in ("identity", compression)}
+    budget = COMP_ROUNDS * wire_bytes["identity"]   # equal bytes per wire
+    runs = {name: run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
+                               rounds=budget // zb, lr=LR, eval_every=200,
+                               batch=batch, compression=name)
+            for name, zb in wire_bytes.items()}
+    target = float(_smooth(runs["identity"]["loss_curve"])[-1])
+    csv_row(f"# compression: celu R=5 W=5 xi=60, equal byte budget "
+            f"{budget / 1e6:.1f} MB, target loss {target:.4f} "
+            f"(identity final, smoothed over {SMOOTH_W} rounds)")
+    csv_row("wire", "bytes_per_round", "round_budget",
+            "rounds_to_target_loss", "bytes_to_target", "final_loss",
+            "final_auc")
+    for name, r in runs.items():
+        sm = _smooth(r["loss_curve"])
+        hit = np.nonzero(sm <= target)[0]
+        rt = int(hit[0]) + 1 if hit.size else None
+        zb = r["z_bytes_per_round"]
+        csv_row(name, zb, len(sm),
+                rt if rt is not None else f">{len(sm)}",
+                zb * rt if rt is not None else "-",
+                f"{sm[-1]:.4f}", f"{r['final_auc']:.4f}")
+    id_b, c_b = wire_bytes["identity"], wire_bytes[compression]
+    csv_row(f"# {compression}: {id_b / c_b:.2f}x fewer bytes-per-round "
+            f"than identity")
+
+
 BLOCKS = {
     "local_update": bench_local_update,
     "local_sampling": bench_local_sampling,
@@ -94,14 +156,26 @@ BLOCKS = {
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--block", default="all",
-                    choices=("all",) + tuple(BLOCKS),
-                    help="run one Table-2 block instead of all three")
+    ap.add_argument("--block", default=None,
+                    choices=("all", "compression") + tuple(BLOCKS),
+                    help="run one block instead of all")
+    ap.add_argument("--compression", default=None, metavar="CODEC",
+                    help="wire codec for the compression block, e.g. "
+                         "int8_topk (implies --block compression; see "
+                         "repro.core.compression.CODEC_SPECS)")
     args = ap.parse_args(argv)
+    if args.compression and args.block not in (None, "all", "compression"):
+        ap.error(f"--compression only applies to the compression block, "
+                 f"not --block {args.block}")
+    block = args.block or ("compression" if args.compression else "all")
     spec, data, cfg = default_workload("wdl", "criteo")
+    if block in ("all", "compression"):
+        bench_compression(data, cfg, args.compression or "int8_topk")
+        if block == "compression":
+            return
     target, base = _target(data, cfg)
     for name, fn in BLOCKS.items():
-        if args.block in ("all", name):
+        if block in ("all", name):
             fn(data, cfg, target, base)
 
 

@@ -40,11 +40,13 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
                  weighting=True, sampling=None, rounds=400, batch=256,
                  lr=0.01, optimizer="adagrad", seed=0, eval_every=25,
                  target_auc: Optional[float] = None,
-                 fused_weighting: bool = True
+                 fused_weighting: bool = True,
+                 compression: Optional[str] = None
                  ) -> Dict[str, object]:
     """Train with one protocol preset of the K-party round engine; return
     the AUC-vs-round curve and (if target_auc given) the first round
-    reaching it."""
+    reaching it.  ``compression`` selects a wire codec
+    (``core.compression.CODEC_SPECS``) for the simulated WAN."""
     init_fn, task, predict = make_dlrm(cfg)
     base = CELUConfig(R=R, W=W, xi_degrees=xi, weighting=weighting,
                       sampling=sampling or "round_robin")
@@ -57,9 +59,10 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     _, ba, bb = next(it)
     asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
     etask = engine.lift_two_party(task)
-    transport = engine.SimWANTransport(ccfg)
+    transport = engine.make_transport(ccfg, compression)
     state = engine.init_state(etask, engine.lift_two_party_params(params),
-                              opt, ccfg, [asj(ba)], asj(bb))
+                              opt, ccfg, [asj(ba)], asj(bb),
+                              transport=transport)
     rnd = engine.make_round(etask, opt, ccfg, local_steps=nloc,
                             transport=transport,
                             fused_weighting=fused_weighting, donate=True)
@@ -69,11 +72,13 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     tea = {"x_a": jnp.asarray(te["x_a"])}
     teb = {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])}
     curve: List[Tuple[int, float]] = []
+    losses: List[float] = []
     reached = None
     t0 = time.time()
     for i in range(rounds):
         bi, ba, bb = next(it)
         state, m = rnd(state, [asj(ba)], asj(bb), bi)
+        losses.append(m["loss"])       # device array: no per-round sync
         if (i + 1) % eval_every == 0 or i + 1 == rounds:
             a = auc(np.asarray(predict(engine.unlift_params(state["params"]),
                                        cfg, tea, teb)),
@@ -86,6 +91,8 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
         "weighting": weighting, "curve": curve,
         "final_auc": curve[-1][1], "best_auc": max(a for _, a in curve),
         "rounds_to_target": reached, "wall_s": time.time() - t0,
+        "loss_curve": [float(x) for x in losses],
+        "compression": compression or "",
         "z_bytes_per_round": transport.round_bytes([(batch, cfg.z_dim)]),
     }
 

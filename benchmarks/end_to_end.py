@@ -21,13 +21,25 @@ WAN_LAT = 0.01               # s/direction
 # §2.1) with V100-scale compute (a few ms/update, >90% of time is
 # communication).  Local updates overlap the in-flight exchange (the
 # paper's two-worker design), so only overlap-excess compute is charged.
+PAPER_Z_SHAPE = (4096, 256)          # the paper's per-message geometry
 PAPER_Z_BYTES = 2 * 4096 * 256 * 4   # the paper's per-round messages
 GPU_COMPUTE_PER_UPDATE = 0.005       # s — conservative V100-scale estimate
 
 
+def paper_round_bytes(compression: str = "") -> int:
+    """Per-round wire bytes at the paper's deployment geometry for a given
+    wire codec ('' = the plain fp32 wire -> PAPER_Z_BYTES)."""
+    from repro.configs.base import CELUConfig
+    from repro.core import engine
+    tp = engine.make_transport(CELUConfig(), compression)
+    return tp.round_bytes([PAPER_Z_SHAPE])
+
+
 def sim_time(rounds: int, z_bytes: int, local_ratio: float,
              compute_per_round: float = GPU_COMPUTE_PER_UPDATE) -> float:
-    comm = rounds * (PAPER_Z_BYTES / WAN_BW + 2 * WAN_LAT)
+    """``z_bytes`` is the PAPER-geometry per-round wire size (see
+    ``paper_round_bytes`` — compressed wires shrink it)."""
+    comm = rounds * (z_bytes / WAN_BW + 2 * WAN_LAT)
     compute = rounds * compute_per_round * (1.0 + local_ratio)
     return comm + max(0.0, compute - comm)
 
@@ -48,9 +60,13 @@ def hard_workload(model: str, dataset: str, seed: int = 0):
 
 
 def run_one(dataset: str, model: str, protocols=("vanilla", "fedbcd",
-                                                 "celu"), rounds=ROUNDS):
+                                                 "celu"), rounds=ROUNDS,
+            compression: str = ""):
     """All rounds are constructed through the K-party engine (the vanilla
-    baseline always runs — it calibrates the shared target AUC)."""
+    baseline always runs — it calibrates the shared target AUC).  With
+    ``compression``, a celu run over the compressed wire joins the table:
+    its sim-WAN time is charged at the CODEC's paper-geometry bytes, so
+    the speedup composes round savings x wire savings."""
     spec, data, cfg = hard_workload(model, dataset)
     base = run_protocol("vanilla", data, cfg, rounds=rounds, lr=LR,
                         eval_every=50)
@@ -61,7 +77,7 @@ def run_one(dataset: str, model: str, protocols=("vanilla", "fedbcd",
 
     rows = {}
     b_rounds = rounds_to(base["curve"], target) or rounds
-    zb = base["z_bytes_per_round"]
+    zb = paper_round_bytes()
     t_van = sim_time(b_rounds, zb, 0.0)
     rows["vanilla"] = (b_rounds, t_van, base["final_auc"])
 
@@ -81,6 +97,14 @@ def run_one(dataset: str, model: str, protocols=("vanilla", "fedbcd",
             rows[f"celu(R={R})"] = (ce_rounds,
                                     sim_time(ce_rounds, zb, float(R)),
                                     ce["final_auc"])
+        if compression:
+            cc = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
+                              rounds=rounds, lr=LR, eval_every=50,
+                              target_auc=target, compression=compression)
+            cc_rounds = cc["rounds_to_target"] or rounds
+            czb = paper_round_bytes(compression)
+            rows[f"celu(R=5,{compression})"] = (
+                cc_rounds, sim_time(cc_rounds, czb, 5.0), cc["final_auc"])
 
     for name, (r, t, a) in rows.items():
         csv_row(name, r, f"{t:.1f}", f"{t_van / t:.2f}x", f"{a:.4f}")
@@ -94,13 +118,20 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=ROUNDS)
     ap.add_argument("--dataset", default="all",
                     choices=("all", "criteo", "avazu"))
+    ap.add_argument("--compression", default="", metavar="CODEC",
+                    help="also run celu over this wire codec (e.g. "
+                         "int8_topk; see repro.core.compression.CODEC_SPECS)")
     args = ap.parse_args(argv)
     protocols = ("vanilla", "fedbcd", "celu") if args.protocol == "all" \
         else (args.protocol,)
+    if args.compression and "celu" not in protocols:
+        import sys
+        sys.exit("--compression measures the celu preset over the "
+                 "compressed wire: rerun with --protocol celu (or all)")
     if args.dataset in ("all", "criteo"):
-        run_one("criteo", "wdl", protocols, args.rounds)
+        run_one("criteo", "wdl", protocols, args.rounds, args.compression)
     if args.dataset in ("all", "avazu"):
-        run_one("avazu", "dssm", protocols, args.rounds)
+        run_one("avazu", "dssm", protocols, args.rounds, args.compression)
 
 
 if __name__ == "__main__":

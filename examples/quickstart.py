@@ -29,9 +29,14 @@ def main():
           f"equal budget: {ROUNDS} communication rounds each\n")
 
     results = {}
-    for name, proto, kw in (("vanilla", "vanilla", {}),
-                            ("fedbcd R=5", "fedbcd", dict(R=5)),
-                            ("celu   R=5", "celu", dict(R=5, W=5, xi=60.0))):
+    for name, proto, kw in (
+            ("vanilla", "vanilla", {}),
+            ("fedbcd R=5", "fedbcd", dict(R=5)),
+            ("celu   R=5", "celu", dict(R=5, W=5, xi=60.0)),
+            # the compressed wire: top-k+int8 sketches up, dense int8 down,
+            # error feedback carrying the compression error between rounds
+            ("celu   R=5 int8_topk", "celu",
+             dict(R=5, W=5, xi=60.0, compression="int8_topk"))):
         r = run_protocol(proto, data, cfg, rounds=ROUNDS, lr=0.003,
                          eval_every=100, **kw)
         results[name] = r
@@ -39,10 +44,13 @@ def main():
         print(f"{name}:  {curve}")
 
     zb = results["vanilla"]["z_bytes_per_round"]
-    print(f"\nWAN bytes spent by each: {ROUNDS * zb / 1e6:.1f} MB "
+    czb = results["celu   R=5 int8_topk"]["z_bytes_per_round"]
+    print(f"\nWAN bytes spent by the fp32 wire: {ROUNDS * zb / 1e6:.1f} MB "
           f"({zb / 1e3:.0f} KB/round); CELU extracted "
           f"{1 + 5}x the model updates from them.")
-    print("bf16 wire (CELUConfig.wire_dtype) halves the bytes again — "
+    print(f"int8_topk wire: {czb / 1e3:.1f} KB/round "
+          f"({zb / czb:.1f}x fewer bytes at the same round budget); "
+          "bf16 wire (CELUConfig.wire_dtype) is the lighter-touch option — "
           "see benchmarks `beyond` block.")
 
 

@@ -187,6 +187,11 @@ class CELUConfig:
     # updates reuse already-released messages at no extra privacy cost.
     dp_sigma: float = 0.0
     dp_clip: float = 1.0
+    # BEYOND-PAPER: wire codec spec for the compressed transport
+    # (Compressed-VFL-style top-k / low-bit sketches with error feedback).
+    # "" = plain SimWANTransport; see core/compression.py CODEC_SPECS for
+    # names ("int8", "int4", "topk", "int8_topk", "up/down" pairs, ...).
+    compression: str = ""
 
 
 @dataclass(frozen=True)

@@ -1,6 +1,7 @@
 """CELU-VFL core: K-party round engine, workset table, instance weighting,
-protocol presets."""
-from . import engine, protocol, weighting, workset  # noqa: F401
-from .engine import (KPartyTask, PodTransport, SimWANTransport,  # noqa: F401
+wire compression, protocol presets."""
+from . import compression, engine, protocol, weighting, workset  # noqa: F401
+from .engine import (CompressedWANTransport, KPartyTask,  # noqa: F401
+                     PodTransport, SimWANTransport, make_transport,
                      preset_config)
 from .protocol import VFLTask, init_state, make_round, protocol_config  # noqa: F401

@@ -28,10 +28,33 @@ fresh w.r.t. EVERY party's cut tensor.
     quantization (bf16 wire halves bytes), optional Gaussian-mechanism DP
     noise, and byte accounting.  Subsumes the old ``protocol`` /
     ``multiparty`` paths.
+  * :class:`CompressedWANTransport` — SimWAN plus a pluggable wire codec
+    per direction (``core.compression``): top-k sparsification and/or
+    int8/int4 stochastic-rounding quantization of every released message,
+    with per-direction error-feedback residuals carried in the round
+    state.
   * :class:`PodTransport` — ``lax.ppermute`` over the pod mesh axis for
     the SPMD party-to-pod mapping (:func:`make_pod_round`); the slow
     inter-pod DCN link plays the WAN.  Subsumes the old ``pod_protocol``
     exchange.
+
+**Transports & compression.**  A transport exposes
+``send(rng, x, res, direction) -> (wire_value, new_res)`` plus byte
+accounting split by direction — ``uplink_bytes(shape)`` (Z_i, A_i -> B),
+``downlink_bytes(shape)`` (∇Z_i, B -> A_i) and ``round_bytes(z_shapes) =
+Σ_i up_i + down_i`` — so asymmetric wires (sparse top-k sketches up, dense
+low-bit down) account exactly.  Codec selection: set
+``CELUConfig.compression`` (or pass ``compression=`` to
+:func:`make_round`) to a spec from ``core.compression.CODEC_SPECS``
+("int8", "int4", "topk", "int8_topk" = top-k+int8 up / dense int8 down,
+"up/down" picks each direction) and build the transport with
+:func:`make_transport`.  Lossy codecs keep one error-feedback residual
+per feature party per direction in ``state["transport"]`` (zeros from
+``init_state(..., transport=...)``): each round the transport sends
+``decode(encode(x + r))`` and carries ``r' = (x + r) - decoded`` forward,
+so the decoded messages telescope to the uncompressed sum and compression
+error is a one-round delay, not a loss.  The identity codec is
+bit-identical to plain :class:`SimWANTransport` (golden-trace pinned).
 
 The Algorithm-2 weighting hot path routes through the fused Pallas kernel
 ``kernels.ops.weighted_cotangent`` (cosine + threshold + cotangent scale in
@@ -106,24 +129,111 @@ class SimWANTransport:
         self.celu = celu
         self.wire = jnp.dtype(celu.wire_dtype)
 
-    def send(self, rng, x):
-        """The message actually released across the link."""
+    @property
+    def stateful_directions(self):
+        """Directions ("up"/"down") whose per-round state must exist in
+        ``state["transport"]`` (none: this transport is stateless)."""
+        return ()
+
+    def init_state(self, z_examples: Sequence) -> Dict[str, Any]:
+        """Per-round transport state (empty: this transport is stateless)."""
+        return {}
+
+    def send(self, rng, x, res=None, direction: str = "up"):
+        """The message actually released across the link.  ``res`` is the
+        per-message error-feedback residual (unused here — threaded through
+        for stateful transports).  -> (wire value, new residual)."""
         if self.celu.dp_sigma > 0.0:
             from .privacy import DPConfig, privatize
             x = privatize(rng, x, DPConfig(clip=self.celu.dp_clip,
                                            sigma=self.celu.dp_sigma))
         if x.dtype != self.wire:
             x = x.astype(self.wire).astype(x.dtype)
-        return x
+        return x, res
 
     def message_bytes(self, z_shape) -> int:
         import numpy as np
         return int(np.prod(z_shape)) * self.wire.itemsize
 
+    def uplink_bytes(self, z_shape) -> int:
+        """Bytes of one released Z_i (feature party -> label party)."""
+        return self.message_bytes(z_shape)
+
+    def downlink_bytes(self, z_shape) -> int:
+        """Bytes of one released ∇Z_i (label party -> feature party)."""
+        return self.message_bytes(z_shape)
+
     def round_bytes(self, z_shapes: Sequence) -> int:
-        """Bytes per communication round: Z_i up + ∇Z_i down for each
-        feature party."""
-        return sum(2 * self.message_bytes(s) for s in z_shapes)
+        """Bytes per communication round: the message count is explicit —
+        one uplink (Z_i) plus one downlink (∇Z_i) per feature party —
+        so transports with asymmetric up/down payloads account correctly."""
+        return sum(self.uplink_bytes(s) + self.downlink_bytes(s)
+                   for s in z_shapes)
+
+
+class CompressedWANTransport(SimWANTransport):
+    """Compressed wire (Compressed-VFL): every released message passes the
+    SimWAN pipeline (DP noise + wire dtype) and then a per-direction codec
+    from :mod:`repro.core.compression` under error feedback.
+
+    Lossy directions carry one residual per feature party in the engine's
+    ``state["transport"]`` (``{"up": [r_1..r_K], "down": [...]}`` — built
+    by :meth:`init_state`); each send compresses ``x + r`` and keeps the
+    compression error as the next round's residual.  With the identity
+    codec the pipeline is bit-identical to plain :class:`SimWANTransport`
+    and no residual state is kept."""
+
+    def __init__(self, celu: CELUConfig, up_codec=None, down_codec=None):
+        super().__init__(celu)
+        from .compression import IdentityCodec
+        up = up_codec if up_codec is not None else IdentityCodec()
+        self.codecs = {"up": up,
+                       "down": down_codec if down_codec is not None else up}
+
+    @property
+    def stateful_directions(self):
+        return tuple(d for d, c in self.codecs.items() if not c.lossless)
+
+    def init_state(self, z_examples: Sequence) -> Dict[str, Any]:
+        """Zero error-feedback residuals, one per party per lossy
+        direction; ``z_examples`` are the K cut-tensor avals."""
+        return {d: [jnp.zeros(z.shape, jnp.float32) for z in z_examples]
+                for d in self.stateful_directions}
+
+    def send(self, rng, x, res=None, direction: str = "up"):
+        x, _ = super().send(rng, x, None, direction)
+        codec = self.codecs[direction]
+        if getattr(codec, "exact", False):
+            # bitwise round-trip (identity): nothing to encode — this is
+            # what keeps the identity wire golden-trace-identical to
+            # SimWANTransport.  Merely-lossless codecs (fp32-rounding
+            # round-trips like a chain ending in identity) still run
+            # encode/decode so the wire matches the byte accounting.
+            return x, res
+        e = x.astype(jnp.float32)
+        if res is not None:
+            e = e + res
+        payload = codec.encode(jax.random.fold_in(rng, 1), e)
+        y = codec.decode(payload, e)
+        return y.astype(x.dtype), None if res is None else e - y
+
+    def uplink_bytes(self, z_shape) -> int:
+        return self.codecs["up"].wire_bytes(z_shape, self.wire)
+
+    def downlink_bytes(self, z_shape) -> int:
+        return self.codecs["down"].wire_bytes(z_shape, self.wire)
+
+
+def make_transport(celu: CELUConfig, compression: Optional[str] = None):
+    """Transport factory for the simulated WAN.  ``compression`` (falling
+    back to ``celu.compression``) is a codec spec from
+    ``core.compression.CODEC_SPECS``; empty -> plain SimWANTransport."""
+    name = celu.compression if compression is None else compression
+    if not name:
+        return SimWANTransport(celu)
+    from .compression import make_codec_pair
+    up, down = make_codec_pair(name)
+    return CompressedWANTransport(celu, up, down)
 
 
 class PodTransport:
@@ -245,11 +355,16 @@ def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
 # State
 # --------------------------------------------------------------------------
 def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
-               celu: CELUConfig, batches_a: Sequence[Any], batch_b):
+               celu: CELUConfig, batches_a: Sequence[Any], batch_b,
+               transport=None, compression: Optional[str] = None):
     """Build the K-party training state.
 
     ``params = {"a": [pa_1..pa_K], "b": pb}``; ``batches_a`` are K example
-    batches (abstract ok) used to size the workset ring buffers."""
+    batches (abstract ok) used to size the workset ring buffers.
+    ``transport``/``compression`` must mirror what :func:`make_round` gets
+    (both default to :func:`make_transport` over ``celu``): the transport
+    sizes the per-direction error-feedback residuals carried in
+    ``state["transport"]`` (empty for stateless transports)."""
     K = len(params["a"])
     zs = [jax.eval_shape(task.forward_a, params["a"][i], batches_a[i])
           for i in range(K)]
@@ -266,6 +381,9 @@ def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
         "ws": {"a": ws_a, "b": ws_b},
         "steps": {"a": [jnp.int32(0) for _ in range(K)], "b": jnp.int32(0)},
         "comm_rounds": jnp.int32(0),
+        "transport": (transport if transport is not None
+                      else make_transport(celu, compression)
+                      ).init_state(z_like),
     }
 
 
@@ -274,16 +392,19 @@ def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
 # --------------------------------------------------------------------------
 def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
                local_steps: int = -1, transport=None,
+               compression: Optional[str] = None,
                fused_weighting: bool = True, jit: bool = True,
                donate: bool = False):
     """fn(state, batches_a: list, batch_b, batch_idx) -> (state, metrics).
 
     ``local_steps`` defaults to R (steady state: one fresh insert funds R
     uses); Vanilla training = ``local_steps=0``.  ``transport`` defaults to
-    :class:`SimWANTransport` over ``celu``'s wire settings."""
+    :func:`make_transport` over ``celu`` — i.e. :class:`SimWANTransport`
+    unless ``compression`` (or ``celu.compression``) names a wire codec."""
     n_local = celu.R if local_steps < 0 else local_steps
     cos_xi = xi_to_cos(celu.xi_degrees)
-    tp = transport if transport is not None else SimWANTransport(celu)
+    tp = transport if transport is not None \
+        else make_transport(celu, compression)
     fused = fused_weighting
 
     def exchange(state, batches_a, batch_b, batch_idx):
@@ -292,13 +413,24 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
         rng = jax.random.fold_in(jax.random.PRNGKey(17),
                                  state["comm_rounds"])
         keys = jax.random.split(rng, 2 * K)
+        tstate = state.get("transport", {})
+        missing = [d for d in getattr(tp, "stateful_directions", ())
+                   if d not in tstate]
+        if missing:
+            raise ValueError(
+                f"transport keeps error-feedback residuals for "
+                f"{missing} but the round state has none — pass the same "
+                f"transport (or compression spec) to init_state")
+        up_res = list(tstate["up"]) if "up" in tstate else [None] * K
+        down_res = list(tstate["down"]) if "down" in tstate else [None] * K
 
         # uplinks: every A_i's forward -> Z_i, released in wire precision
         zs, vjps = [], []
         for i in range(K):
             z, vjp = jax.vjp(
                 lambda p, i=i: task.forward_a(p, batches_a[i]), pas[i])
-            zs.append(tp.send(keys[2 * i], z))
+            z, up_res[i] = tp.send(keys[2 * i], z, up_res[i], "up")
+            zs.append(z)
             vjps.append(vjp)
 
         # Party B: loss + grads wrt (params_b, all Z_i); ∇Z_i are downlinks
@@ -307,7 +439,15 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             return jnp.mean(li) + aux
         loss, (g_b, dzs) = jax.value_and_grad(
             mean_loss, argnums=(0, 1))(pb, zs)
-        dzs = [tp.send(keys[2 * i + 1], dz) for i, dz in enumerate(dzs)]
+        dzs = list(dzs)
+        for i in range(K):
+            dzs[i], down_res[i] = tp.send(keys[2 * i + 1], dzs[i],
+                                          down_res[i], "down")
+        new_tstate = dict(tstate)
+        if "up" in tstate:
+            new_tstate["up"] = up_res
+        if "down" in tstate:
+            new_tstate["down"] = down_res
 
         # every A_i's backward with its (wire-precision) cotangent
         new_pas, new_oas = [], []
@@ -332,6 +472,7 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             "steps": {"a": [s + 1 for s in state["steps"]["a"]],
                       "b": state["steps"]["b"] + 1},
             "comm_rounds": state["comm_rounds"] + 1,
+            "transport": new_tstate,
         }
         return new_state, {"loss": loss}
 
@@ -393,6 +534,7 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             "steps": {"a": [s + n for s, n in zip(state["steps"]["a"], nas)],
                       "b": state["steps"]["b"] + nb},
             "comm_rounds": state["comm_rounds"],
+            "transport": state["transport"],
         }
         m.update({"local_steps": sum(nas) + nb,
                   "w_mean": jnp.mean(lm["w_mean"]),

@@ -38,15 +38,20 @@ MultiVFLTask = engine.KPartyTask
 
 def init_state(task: MultiVFLTask, params: Dict[str, Any], opt: Optimizer,
                celu: CELUConfig, batches_a: List[Dict[str, Any]],
-               batch_b: Dict[str, Any]):
+               batch_b: Dict[str, Any], transport=None, compression=None):
     """params = {"a": [pa_1..pa_K], "b": pb}."""
-    return engine.init_state(task, params, opt, celu, batches_a, batch_b)
+    return engine.init_state(task, params, opt, celu, batches_a, batch_b,
+                             transport=transport, compression=compression)
 
 
 def make_round(task: MultiVFLTask, opt: Optimizer, celu: CELUConfig,
                *, local_steps: int = -1, jit: bool = True,
-               fused_weighting: bool = True, transport=None):
-    """fn(state, batches_a: list, batch_b, batch_idx) -> (state, metrics)."""
+               fused_weighting: bool = True, transport=None,
+               compression=None):
+    """fn(state, batches_a: list, batch_b, batch_idx) -> (state, metrics).
+
+    ``compression`` names a wire codec (``core.compression.CODEC_SPECS``)
+    when no explicit ``transport`` is given."""
     return engine.make_round(task, opt, celu, local_steps=local_steps,
-                             transport=transport,
+                             transport=transport, compression=compression,
                              fused_weighting=fused_weighting, jit=jit)

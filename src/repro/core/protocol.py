@@ -62,6 +62,7 @@ def _to_engine(state):
         "ws": {"a": [state["ws"]["a"]], "b": state["ws"]["b"]},
         "steps": {"a": [state["steps"]["a"]], "b": state["steps"]["b"]},
         "comm_rounds": state["comm_rounds"],
+        "transport": state.get("transport", {}),
     }
 
 
@@ -72,17 +73,21 @@ def _from_engine(st):
         "ws": {"a": st["ws"]["a"][0], "b": st["ws"]["b"]},
         "steps": {"a": st["steps"]["a"][0], "b": st["steps"]["b"]},
         "comm_rounds": st["comm_rounds"],
+        "transport": st.get("transport", {}),
     }
 
 
 def init_state(task: VFLTask, params: Dict[str, Any], opt: Optimizer,
                celu: CELUConfig, batch_a: Dict[str, Any],
-               batch_b: Dict[str, Any]):
+               batch_b: Dict[str, Any], transport=None, compression=None):
     """Build the full training state.  ``batch_a/b`` are example (abstract ok)
-    batches used to size the workset ring buffers."""
+    batches used to size the workset ring buffers;
+    ``transport``/``compression`` must mirror :func:`make_round`'s (error
+    feedback residuals live in the state)."""
     st = engine.init_state(engine.lift_two_party(task),
                            engine.lift_two_party_params(params),
-                           opt, celu, [batch_a], batch_b)
+                           opt, celu, [batch_a], batch_b,
+                           transport=transport, compression=compression)
     return _from_engine(st)
 
 
@@ -102,13 +107,17 @@ def exchange_bytes(z_shape, dtype_bytes: int = 4,
 # --------------------------------------------------------------------------
 def make_round(task: VFLTask, opt: Optimizer, celu: CELUConfig,
                *, local_steps: int = -1, jit: bool = True,
-               fused_weighting: bool = True, transport=None):
+               fused_weighting: bool = True, transport=None,
+               compression=None):
     """fn(state, batch_a, batch_b, batch_idx) -> (state, metrics).
 
     ``local_steps`` defaults to R (steady state: one fresh insert funds R
-    uses).  Vanilla training = ``local_steps=0``."""
+    uses).  Vanilla training = ``local_steps=0``.  ``compression`` names a
+    wire codec (``core.compression.CODEC_SPECS``) when no explicit
+    ``transport`` is given."""
     eng = engine.make_round(engine.lift_two_party(task), opt, celu,
                             local_steps=local_steps, transport=transport,
+                            compression=compression,
                             fused_weighting=fused_weighting, jit=False)
 
     def round_fn(state, batch_a, batch_b, batch_idx):

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import cosine_weight as _cw
 from . import flash_attention as _fa
 from . import fused_adagrad as _ag
+from . import quantize as _qz
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "") == ""
 
@@ -37,6 +38,15 @@ def weighted_cotangent(ad_hoc, stale, dz, cos_xi):
                                   stale.reshape(B, -1), dz.reshape(B, -1),
                                   jnp.float32(cos_xi), interpret=INTERPRET)
     return w, out.reshape(shape)
+
+
+def quantize_stochastic(x, u, levels):
+    """Fused per-tile absmax-scale stochastic-rounding quantizer.
+
+    x: (T, L) value tiles, u: (T, L) uniforms in [0, 1), levels: max code
+    magnitude (127 = int8, 7 = int4).  -> (codes int8 (T, L), fp32 scales
+    (T,)); bit-exact with ``kernels.ref.quantize_sr_ref``."""
+    return _qz.quantize_sr_2d(x, u, levels, interpret=INTERPRET)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):

@@ -1,0 +1,76 @@
+"""Fused stochastic-rounding quantize-with-scale kernel (the compressed
+wire's encode hot path).
+
+The naive composition (per-tile absmax reduction, scale division, add
+uniform noise, floor, clip, narrow) makes three HBM round-trips over the
+(T, L) value tiles.  This kernel fuses all of it into ONE VMEM pass: each
+grid step loads a (BLOCK_T, L) block of value tiles plus the matching
+pre-drawn uniforms, reduces the per-tile absmax on the VPU, and writes the
+int8 codes and the (BLOCK_T,) fp32 scales.
+
+Layout decisions for TPU:
+  * quantization tiles on the sublane axis, the L values of a tile on the
+    lane axis — the absmax is a lane reduction, natively supported;
+  * the uniform noise is an OPERAND, not in-kernel PRNG: the caller draws
+    it with ``jax.random`` so the kernel is a deterministic function of
+    (x, u) and bit-exact against the pure-jnp oracle
+    (``kernels.ref.quantize_sr_ref``) — the parity tests rely on this;
+  * ``levels`` rides in as a (1,) operand (127 for int8, 7 for int4), so
+    one compiled kernel serves every bit width;
+  * fp32 scale math regardless of input dtype (bf16 upcast in VMEM).
+
+Callers flatten/pad to (T, L) tiles (see ``core.compression``); T not
+divisible by BLOCK_T falls back to the reference there.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-12
+BLOCK_T = 128
+
+
+def _kernel(x_ref, u_ref, levels_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)           # (BLOCK_T, L)
+    u = u_ref[...].astype(jnp.float32)
+    levels = levels_ref[0]
+
+    amax = jnp.max(jnp.abs(x), axis=1)           # lane reduction -> (BLOCK_T,)
+    scale = jnp.maximum(amax, EPS) / levels
+    q = jnp.floor(x / scale[:, None] + u)        # stochastic rounding
+    q = jnp.clip(q, -levels, levels)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_sr_2d(x, u, levels, *, interpret: bool = True):
+    """x: (T, L) values, u: (T, L) uniforms in [0, 1), levels: scalar max
+    code magnitude.  -> (codes int8 (T, L), scales fp32 (T,))."""
+    T, L = x.shape
+    bt = min(BLOCK_T, T)
+    assert T % bt == 0, (T, bt)
+    lv = jnp.asarray([levels], jnp.float32)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(T // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, L), lambda i: (i, 0)),
+            pl.BlockSpec((bt, L), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, L), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, L), jnp.int8),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, u, lv)

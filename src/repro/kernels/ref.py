@@ -33,6 +33,22 @@ def weighted_cotangent_ref(ad_hoc, stale, dz, cos_xi: float):
     return (dz.astype(jnp.float32) * w).astype(dz.dtype)
 
 
+def quantize_sr_ref(x, u, levels):
+    """Per-tile absmax scale + stochastic rounding to signed integer codes
+    (the compressed-wire encode hot path).
+
+    x, u: (T, L) — T quantization tiles of L values each, u ~ U[0, 1).
+    -> (codes int8 (T, L), scales fp32 (T,)); decode is codes * scales[:,
+    None].  ``floor(x/s + u)`` is unbiased: E[codes * s] == x."""
+    x = x.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    levels = jnp.float32(levels)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(amax, EPS) / levels
+    q = jnp.clip(jnp.floor(x / scale[:, None] + u), -levels, levels)
+    return q.astype(jnp.int8), scale
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """Dense softmax attention oracle.  q,k,v: (B, S, H, hd) (GQA: kv heads
     already repeated).  fp32 softmax internals."""

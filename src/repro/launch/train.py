@@ -72,7 +72,8 @@ def train_dlrm(args) -> Dict[str, Any]:
     init_fn, task, predict = make_dlrm(cfg)
 
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
-                      weighting=not args.no_weighting)
+                      weighting=not args.no_weighting,
+                      compression=args.compression)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = init_fn(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
@@ -81,9 +82,10 @@ def train_dlrm(args) -> Dict[str, Any]:
                                seed=args.seed)
     _, ba0, bb0 = next(it)
     etask = engine.lift_two_party(task)
-    transport = engine.SimWANTransport(celu_cfg)
+    transport = engine.make_transport(celu_cfg)
     state = engine.init_state(etask, engine.lift_two_party_params(params),
-                              opt, celu_cfg, [_as_jax(ba0)], _as_jax(bb0))
+                              opt, celu_cfg, [_as_jax(ba0)], _as_jax(bb0),
+                              transport=transport)
     rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
                             transport=transport, donate=True)
     z_bytes = transport.round_bytes([(args.batch_size, cfg.z_dim)])
@@ -134,7 +136,8 @@ def train_llm(args) -> Dict[str, Any]:
                                    cfg.aux_vocab_size, seed=args.seed)
     task = llm_task(cfg)
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
-                      weighting=not args.no_weighting)
+                      weighting=not args.no_weighting,
+                      compression=args.compression)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = vfl.init_all(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
@@ -171,6 +174,9 @@ def main(argv=None):
     ap.add_argument("--W", type=int, default=5)
     ap.add_argument("--xi", type=float, default=60.0)
     ap.add_argument("--no-weighting", action="store_true")
+    ap.add_argument("--compression", default="", metavar="CODEC",
+                    help="wire codec for the simulated WAN (e.g. int8_topk;"
+                         " see repro.core.compression.CODEC_SPECS)")
     ap.add_argument("--optimizer", default="adagrad")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)

@@ -1,0 +1,267 @@
+"""Wire-codec and compressed-transport invariants.
+
+Deterministic pins always run: exact byte accounting
+(``wire_bytes() == sum of payload nbytes``), quantization error bounds,
+top-k selection, fused-Pallas-vs-jnp quantizer parity (including the
+odd-tile-count fallback, mirroring
+``test_fused_weighting_odd_batch_falls_back``), stochastic-rounding
+unbiasedness under vmapped keys, and error-feedback telescoping.  The
+randomized sweeps at the bottom are hypothesis-guarded like
+``test_property.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CELUConfig
+from repro.core import compression as C
+from repro.core import engine
+from repro.kernels import ops as kops
+from repro.kernels.ref import quantize_sr_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SHAPES = [(256, 32), (64, 8), (37, 5), (1, 1), (3, 7, 11)]
+
+
+def _x(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def _codecs_of(spec):
+    up, down = C.make_codec_pair(spec)
+    return [("up", up), ("down", down)]
+
+
+# --------------------------------------------------------------------------
+# Byte accounting: wire_bytes is the ACTUAL payload size
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", C.CODEC_SPECS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_wire_bytes_matches_payload_nbytes(spec, shape):
+    rng = jax.random.PRNGKey(1)
+    for _, codec in _codecs_of(spec):
+        payload = codec.encode(rng, _x(shape))
+        assert codec.wire_bytes(shape, jnp.float32) == \
+            C.payload_nbytes(payload), (spec, shape)
+
+
+def test_topk_index_dtype_shrinks_with_message():
+    small = C.TopKCodec(0.25)
+    p = small.encode(jax.random.PRNGKey(0), _x((64, 8)))
+    assert p["idx"].dtype == jnp.int16
+    big = small.encode(jax.random.PRNGKey(0), _x((1024, 64)))
+    assert big["idx"].dtype == jnp.int32
+
+
+# --------------------------------------------------------------------------
+# Quantization: per-tile error bound + decode(encode) structure
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_roundtrip_error_bounded_by_tile_scale(bits):
+    codec = C.StochasticQuantCodec(bits)
+    x = _x((256, 32), seed=2)
+    xh = codec.decode(codec.encode(jax.random.PRNGKey(3), x), x)
+    # stochastic rounding moves each value by < 1 code step = tile scale
+    flat = np.asarray(x).ravel()
+    n, tile = flat.size, codec.tile
+    T = -(-n // tile)
+    pad = np.pad(flat, (0, T * tile - n)).reshape(T, tile)
+    scale = np.maximum(np.abs(pad).max(axis=1), 1e-12) / codec.levels
+    err = np.abs(np.asarray(xh).ravel() - flat).reshape(-1)
+    bound = np.repeat(scale, tile)[:n] * (1 + 1e-6)
+    assert (err <= bound).all(), (bits, err.max(), bound.min())
+
+
+def test_int4_packs_two_codes_per_byte():
+    codec = C.StochasticQuantCodec(4)
+    x = _x((8, 32), seed=4)
+    p = codec.encode(jax.random.PRNGKey(5), x)
+    assert p["q"].dtype == jnp.uint8
+    assert p["q"].shape[-1] == codec.tile // 2
+    # wire cost is half of int8's code bytes (scales identical)
+    b8 = C.StochasticQuantCodec(8).wire_bytes(x.shape, jnp.float32)
+    b4 = codec.wire_bytes(x.shape, jnp.float32)
+    T = -(-x.size // codec.tile)
+    assert b8 - b4 == T * codec.tile // 2
+
+
+def test_stochastic_rounding_unbiased_under_vmapped_keys():
+    codec = C.StochasticQuantCodec(8)
+    x = _x((4, 16), seed=6)
+    keys = jax.random.split(jax.random.PRNGKey(7), 1024)
+    dec = jax.vmap(lambda k: codec.decode(codec.encode(k, x), x))(keys)
+    scale = float(jnp.max(jnp.abs(x))) / codec.levels
+    bias = float(jnp.max(jnp.abs(dec.mean(axis=0) - x)))
+    # SR variance per element <= scale^2/4 -> 5 sigma of the mean over
+    # 1024 keys is ~0.08 * scale
+    assert bias <= 0.15 * scale, (bias, scale)
+
+
+# --------------------------------------------------------------------------
+# Top-k: keeps exactly the k largest magnitudes
+# --------------------------------------------------------------------------
+def test_topk_preserves_k_largest_magnitudes():
+    codec = C.TopKCodec(0.25)
+    x = _x((16, 16), seed=8)
+    xh = np.asarray(codec.decode(codec.encode(jax.random.PRNGKey(9), x), x))
+    flat = np.asarray(x).ravel()
+    k = codec.k_of(flat.size)
+    top = set(np.argsort(-np.abs(flat))[:k].tolist())
+    kept = set(np.nonzero(xh.ravel())[0].tolist())
+    assert kept == top
+    np.testing.assert_array_equal(xh.ravel()[sorted(kept)],
+                                  flat[sorted(kept)])
+    assert (xh.ravel()[sorted(set(range(flat.size)) - kept)] == 0).all()
+
+
+def test_chain_codec_refines_single_stage():
+    """Residual chaining: int4x2's reconstruction beats one int4 pass, and
+    a chain ending in identity is exact (and flagged lossless)."""
+    x = _x((64, 32), seed=10)
+    rng = jax.random.PRNGKey(11)
+    one = C.StochasticQuantCodec(4)
+    two = C.ChainCodec([C.StochasticQuantCodec(4), C.StochasticQuantCodec(4)])
+    e1 = float(jnp.abs(one.decode(one.encode(rng, x), x) - x).max())
+    e2 = float(jnp.abs(two.decode(two.encode(rng, x), x) - x).max())
+    assert e2 < e1, (e2, e1)
+    # a chain ending in identity reconstructs to fp32 rounding (the
+    # identity stage's payload carries the whole remaining residual)
+    exact = C.ChainCodec([C.StochasticQuantCodec(4), C.IdentityCodec()])
+    assert exact.lossless
+    np.testing.assert_allclose(
+        np.asarray(exact.decode(exact.encode(rng, x), x)), np.asarray(x),
+        rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Fused Pallas quantizer vs the jnp reference
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(8, 16), (64, 128), (256, 64)])
+@pytest.mark.parametrize("levels", [127, 7])
+def test_fused_quantize_kernel_matches_ref(shape, levels):
+    """Bit-exact, including multi-block grids (per-tile ops only — no
+    cross-tile reassociation)."""
+    x = _x(shape, seed=12)
+    u = jax.random.uniform(jax.random.PRNGKey(13), shape, jnp.float32)
+    qk, sk = kops.quantize_stochastic(x, u, levels)
+    qr, sr = quantize_sr_ref(x, u, levels)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+
+def test_fused_quantize_odd_tile_count_falls_back():
+    """Tile counts the Pallas grid can't split fall back to the reference
+    path inside the codec instead of failing (the quantizer analogue of
+    test_fused_weighting_odd_batch_falls_back)."""
+    from repro.kernels.quantize import BLOCK_T
+    codec = C.StochasticQuantCodec(8)
+    n = (BLOCK_T + 1) * codec.tile          # T = BLOCK_T + 1: not tileable
+    x = _x((n,), seed=14)
+    rng = jax.random.PRNGKey(15)
+    p = codec.encode(rng, x)
+    assert p["q"].shape == (BLOCK_T + 1, codec.tile)
+    assert codec.wire_bytes(x.shape, jnp.float32) == C.payload_nbytes(p)
+    # the fallback IS the reference: reproduce it exactly
+    u = jax.random.uniform(rng, (BLOCK_T + 1, codec.tile), jnp.float32)
+    qr, sr = quantize_sr_ref(x.reshape(BLOCK_T + 1, codec.tile), u, 127)
+    np.testing.assert_array_equal(np.asarray(p["q"]), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(p["scale"]), np.asarray(sr))
+
+
+# --------------------------------------------------------------------------
+# Error feedback: decoded messages telescope to the uncompressed sum
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", ["int8", "topk", "topk_int8"])
+def test_error_feedback_residuals_telescope(spec):
+    """With error feedback, sum(decoded) + final residual == sum(sent):
+    compression error is delayed into later messages, never lost — so the
+    decoded stream is an unbiased estimate of the identity transport's."""
+    up, _ = C.make_codec_pair(spec)
+    tp = engine.CompressedWANTransport(CELUConfig(), up)
+    (res,) = tp.init_state([jnp.zeros((16, 8))])["up"]
+    total_in = jnp.zeros((16, 8))
+    total_out = jnp.zeros((16, 8))
+    for t in range(12):
+        x = _x((16, 8), seed=100 + t)
+        y, res = tp.send(jax.random.PRNGKey(200 + t), x, res, "up")
+        total_in = total_in + x
+        total_out = total_out + y
+    np.testing.assert_allclose(np.asarray(total_out + res),
+                               np.asarray(total_in), rtol=1e-5, atol=1e-5)
+    # and the residual stays bounded (error feedback is stable)
+    assert float(jnp.abs(res).max()) < 10 * float(jnp.abs(total_in).max())
+
+
+def test_identity_codec_send_is_bitwise_simwan():
+    for wire in ("float32", "bfloat16"):
+        celu = CELUConfig(wire_dtype=wire)
+        plain = engine.SimWANTransport(celu)
+        ident = engine.make_transport(celu, "identity")
+        assert isinstance(ident, engine.CompressedWANTransport)
+        assert ident.init_state([jnp.zeros((8, 4))]) == {}
+        x = _x((32, 8), seed=16)
+        rng = jax.random.PRNGKey(17)
+        yp, _ = plain.send(rng, x, None, "up")
+        yc, _ = ident.send(rng, x, None, "up")
+        np.testing.assert_array_equal(np.asarray(yp), np.asarray(yc))
+        assert ident.round_bytes([(32, 8)]) == plain.round_bytes([(32, 8)])
+
+
+# --------------------------------------------------------------------------
+# Hypothesis sweeps (guarded like test_property.py)
+# --------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sampled_from(C.CODEC_SPECS), st.integers(1, 48),
+           st.integers(1, 48), st.integers(0, 2 ** 31 - 1))
+    def test_prop_wire_bytes_exact(spec, B, F, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        for _, codec in _codecs_of(spec):
+            p = codec.encode(jax.random.PRNGKey(seed % 997), x)
+            assert codec.wire_bytes(x.shape, jnp.float32) == \
+                C.payload_nbytes(p)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sampled_from([8, 4]), st.integers(1, 40), st.integers(1, 40),
+           st.integers(0, 2 ** 31 - 1))
+    def test_prop_quant_error_bounded(bits, B, F, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        codec = C.StochasticQuantCodec(bits)
+        xh = codec.decode(codec.encode(jax.random.PRNGKey(seed % 997), x), x)
+        flat = np.asarray(x).ravel()
+        T = -(-flat.size // codec.tile)
+        pad = np.pad(flat, (0, T * codec.tile - flat.size))
+        scale = np.maximum(
+            np.abs(pad.reshape(T, codec.tile)).max(axis=1),
+            1e-12) / codec.levels
+        err = np.abs(np.asarray(xh).ravel() - flat)
+        bound = np.repeat(scale, codec.tile)[:flat.size] * (1 + 1e-6)
+        assert (err <= bound).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.floats(0.05, 1.0), st.integers(2, 40), st.integers(1, 24),
+           st.integers(0, 2 ** 31 - 1))
+    def test_prop_topk_keeps_largest(ratio, B, F, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        codec = C.TopKCodec(ratio)
+        xh = np.asarray(
+            codec.decode(codec.encode(jax.random.PRNGKey(seed % 997), x), x))
+        flat = np.asarray(x).ravel()
+        k = codec.k_of(flat.size)
+        kept = np.nonzero(xh.ravel())[0]
+        # every kept magnitude >= every dropped magnitude
+        dropped = np.setdiff1d(np.arange(flat.size), kept)
+        if kept.size and dropped.size:
+            assert np.abs(flat[kept]).min() >= np.abs(flat[dropped]).max() \
+                - 1e-7
+        assert kept.size <= k

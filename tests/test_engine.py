@@ -26,6 +26,8 @@ from repro.optim import make_optimizer
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "two_party_trace.json")
+GOLDEN3 = os.path.join(os.path.dirname(__file__), "golden",
+                       "three_party_trace.json")
 
 
 def _workload():
@@ -38,7 +40,8 @@ def _workload():
     return data, cfg
 
 
-def _run_trace(protocol, *, via_shim, fused=True, rounds=20):
+def _run_trace(protocol, *, via_shim, fused=True, rounds=20,
+               compression=None):
     data, cfg = _workload()
     init_fn, task, predict = make_dlrm(cfg)
     base = CELUConfig(R=3, W=3, xi_degrees=60.0)
@@ -48,11 +51,14 @@ def _run_trace(protocol, *, via_shim, fused=True, rounds=20):
     it = aligned_batches(data["train"], 64, seed=0)
     _, ba, bb = next(it)
     asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    kw = {} if compression is None else \
+        {"transport": engine.make_transport(ccfg, compression)}
 
     if via_shim:
-        state = P.init_state(task, params, opt, ccfg, asj(ba), asj(bb))
+        state = P.init_state(task, params, opt, ccfg, asj(ba), asj(bb),
+                             **kw)
         rnd = P.make_round(task, opt, ccfg, local_steps=nloc,
-                           fused_weighting=fused)
+                           fused_weighting=fused, **kw)
         step = lambda st, ba, bb, bi: rnd(st, asj(ba), asj(bb), bi)
         steps_of = lambda st: (int(st["steps"]["a"]),
                                int(st["steps"]["b"]))
@@ -60,9 +66,9 @@ def _run_trace(protocol, *, via_shim, fused=True, rounds=20):
         etask = engine.lift_two_party(task)
         state = engine.init_state(etask,
                                   engine.lift_two_party_params(params),
-                                  opt, ccfg, [asj(ba)], asj(bb))
+                                  opt, ccfg, [asj(ba)], asj(bb), **kw)
         rnd = engine.make_round(etask, opt, ccfg, local_steps=nloc,
-                                fused_weighting=fused)
+                                fused_weighting=fused, **kw)
         step = lambda st, ba, bb, bi: rnd(st, [asj(ba)], asj(bb), bi)
         steps_of = lambda st: (int(st["steps"]["a"][0]),
                                int(st["steps"]["b"]))
@@ -101,6 +107,16 @@ def test_golden_trace_parity_direct_engine(protocol, golden):
     """Constructing K=1 rounds directly on the engine gives the same
     trace as the shim (and hence the seed)."""
     got = _run_trace(protocol, via_shim=False)
+    assert got == golden[protocol]
+
+
+@pytest.mark.parametrize("via_shim", [True, False])
+@pytest.mark.parametrize("protocol", ["vanilla", "celu"])
+def test_identity_codec_transport_matches_golden(protocol, via_shim,
+                                                 golden):
+    """CompressedWANTransport with the identity codec is the SAME wire as
+    plain SimWANTransport: bit-for-bit on the seed golden traces."""
+    got = _run_trace(protocol, via_shim=via_shim, compression="identity")
     assert got == golden[protocol]
 
 
@@ -162,9 +178,28 @@ def test_sim_wan_transport_byte_accounting():
     assert t32.round_bytes([(64, 8)] * 3) == 3 * 2 * 64 * 8 * 4
 
 
-def test_engine_three_party_trains_and_counts_steps():
-    """K=2 feature parties on the engine: loss falls, per-party step
-    counters track 1 fresh + R local updates per round."""
+def test_round_bytes_counts_asymmetric_messages():
+    """Regression for the old ``2 * message_bytes`` shortcut: a transport
+    with a sparse uplink (top-k indices+values) and a dense downlink must
+    sum the two directions, not double one of them."""
+    celu = CELUConfig()
+    tp = engine.make_transport(celu, "int8_topk")
+    shape = (256, 32)
+    up, down = tp.uplink_bytes(shape), tp.downlink_bytes(shape)
+    assert up != down                       # genuinely asymmetric
+    assert tp.round_bytes([shape]) == up + down
+    assert tp.round_bytes([shape] * 3) == 3 * (up + down)
+    assert tp.round_bytes([shape]) != 2 * tp.message_bytes(shape)
+    # symmetric transports still see one up + one down per party
+    t32 = engine.SimWANTransport(celu)
+    assert t32.round_bytes([shape]) == \
+        t32.uplink_bytes(shape) + t32.downlink_bytes(shape) == \
+        2 * t32.message_bytes(shape)
+
+
+def _three_party_workload():
+    """The exact K=2-feature-party workload (three parties total:
+    A_1, A_2, B) the K=3 golden trace was recorded on."""
     spec = TabularSpec("t", fields_a=8, fields_b=4, vocab=64,
                        n_train=4096, n_test=512)
     data = make_tabular(spec, seed=0)
@@ -200,23 +235,131 @@ def test_engine_three_party_trains_and_counts_steps():
         [{"x_a": jnp.asarray(ba["x_a"][:, :4])},
          {"x_a": jnp.asarray(ba["x_a"][:, 4:])}],
         {"x_b": jnp.asarray(bb["x_b"]), "y": jnp.asarray(bb["y"])})
+    params = {"a": [pa1, pa2], "b": pb}
+    return task, celu, opt, data, split, params
+
+
+def _run_three_party_trace(rounds=20, transport=None):
+    """Run the K=3 workload and return golden-comparable metric rows
+    (same schema as ``_run_trace``, ``steps_a`` is a per-party list)."""
+    task, celu, opt, data, split, params = _three_party_workload()
     it = aligned_batches(data["train"], 64, seed=0)
     _, ba, bb = next(it)
     bas, b = split(ba, bb)
-    state = engine.init_state(task, {"a": [pa1, pa2], "b": pb}, opt, celu,
-                              bas, b)
+    kw = {} if transport is None else {"transport": transport}
+    state = engine.init_state(task, params, opt, celu, bas, b, **kw)
+    rnd = engine.make_round(task, opt, celu, **kw)
+    it = aligned_batches(data["train"], 64, seed=0)
+    rows = []
+    for i in range(rounds):
+        bi, ba, bb = next(it)
+        bas, b = split(ba, bb)
+        state, m = rnd(state, bas, b, bi)
+        rows.append({"loss": float(np.float32(m["loss"])),
+                     "w_mean": float(np.float32(m["w_mean"])),
+                     "w_zero_frac": float(np.float32(m["w_zero_frac"])),
+                     "local_steps": int(m["local_steps"])})
+    rows.append({"steps_a": [int(s) for s in state["steps"]["a"]],
+                 "steps_b": int(state["steps"]["b"]),
+                 "comm_rounds": int(state["comm_rounds"])})
+    return rows
+
+
+def test_engine_three_party_trains_and_counts_steps():
+    """K=2 feature parties on the engine: loss falls, per-party step
+    counters track 1 fresh + R local updates per round."""
+    n_rounds, R = 20, 2
+    rows = _run_three_party_trace(rounds=n_rounds)
+    losses = [r["loss"] for r in rows[:-1]]
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    tail = rows[-1]
+    assert tail["comm_rounds"] == n_rounds
+    for s in tail["steps_a"]:
+        assert n_rounds < s <= n_rounds * (1 + R)
+    assert n_rounds < tail["steps_b"] <= n_rounds * (1 + R)
+
+
+@pytest.fixture(scope="module")
+def golden3():
+    with open(GOLDEN3) as f:
+        return json.load(f)
+
+
+def test_three_party_golden_trace(golden3):
+    """The K=3 multiparty path is pinned bit-for-bit, like K=1
+    (``golden/three_party_trace.json``; regenerate with
+    ``tests/golden/record_three_party.py`` ONLY on intentional numeric
+    changes)."""
+    got = _run_three_party_trace(rounds=20)
+    assert got == golden3["celu"]
+
+
+def test_three_party_golden_identity_codec_transport(golden3):
+    """The identity-codec compressed transport reproduces the K=3 golden
+    trace bit-for-bit too (K residuals per direction collapse to none)."""
+    celu = CELUConfig(R=2, W=2, xi_degrees=60.0)
+    tp = engine.make_transport(celu, "identity")
+    got = _run_three_party_trace(rounds=20, transport=tp)
+    assert got == golden3["celu"]
+
+
+def test_config_driven_compression_keeps_error_feedback():
+    """``celu.compression`` alone (no explicit transport threading) must
+    give init_state and make_round the SAME lossy transport: the round
+    state carries live residuals, not the silent empty-dict fallback."""
+    import dataclasses
+    task, celu, opt, data, split, params = _three_party_workload()
+    celu = dataclasses.replace(celu, compression="int8_topk")
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    bas, b = split(ba, bb)
+    state = engine.init_state(task, params, opt, celu, bas, b)
+    assert sorted(state["transport"]) == ["down", "up"]
     rnd = engine.make_round(task, opt, celu)
+    bi, ba, bb = next(it)
+    bas, b = split(ba, bb)
+    state, m = rnd(state, bas, b, bi)
+    assert float(jnp.abs(state["transport"]["up"][0]).sum()) > 0.0
+
+
+def test_half_threaded_lossy_transport_raises():
+    """Passing a lossy transport to make_round but not init_state would
+    silently drop error feedback — the round must refuse instead."""
+    task, celu, opt, data, split, params = _three_party_workload()
+    it = aligned_batches(data["train"], 64, seed=0)
+    bi, ba, bb = next(it)
+    bas, b = split(ba, bb)
+    state = engine.init_state(task, params, opt, celu, bas, b)  # stateless
+    tp = engine.make_transport(celu, "int8_topk")               # lossy
+    rnd = engine.make_round(task, opt, celu, transport=tp)
+    with pytest.raises(ValueError, match="error-feedback"):
+        rnd(state, bas, b, bi)
+
+
+def test_three_party_compressed_transport_trains():
+    """A genuinely lossy wire (top-k+int8 up, int8 down, error feedback)
+    still trains the K=3 workload: finite losses, downward trend, and one
+    fp32 residual per feature party per direction in the round state."""
+    celu = CELUConfig(R=2, W=2, xi_degrees=60.0)
+    tp = engine.make_transport(celu, "int8_topk")
+    task, _, opt, data, split, params = _three_party_workload()
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    bas, b = split(ba, bb)
+    state = engine.init_state(task, params, opt, celu, bas, b, transport=tp)
+    assert sorted(state["transport"]) == ["down", "up"]
+    assert len(state["transport"]["up"]) == 2
+    rnd = engine.make_round(task, opt, celu, transport=tp)
     it = aligned_batches(data["train"], 64, seed=0)
     losses = []
-    n_rounds = 20
-    for i in range(n_rounds):
+    for i in range(20):
         bi, ba, bb = next(it)
         bas, b = split(ba, bb)
         state, m = rnd(state, bas, b, bi)
         losses.append(float(m["loss"]))
     assert np.isfinite(losses).all()
     assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
-    assert int(state["comm_rounds"]) == n_rounds
-    for s in state["steps"]["a"]:
-        assert n_rounds < int(s) <= n_rounds * (1 + celu.R)
-    assert n_rounds < int(state["steps"]["b"]) <= n_rounds * (1 + celu.R)
+    # error feedback engaged: residuals are live, non-zero state
+    res = state["transport"]["up"][0]
+    assert res.dtype == jnp.float32 and float(jnp.abs(res).sum()) > 0.0
