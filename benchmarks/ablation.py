@@ -146,6 +146,60 @@ def bench_compression(data, cfg, compression: str = "int8_topk",
             f"than identity")
 
 
+ADAPT_ROUNDS = 300
+
+
+def bench_adaptive_topk(data, cfg, batch: int = 256):
+    """Adaptive top-k ratio scheduling (ROADMAP follow-up): start with an
+    aggressive sketch and let the ``PlateauRatioSchedule`` hook loosen the
+    keep-ratio as the smoothed training loss plateaus.
+
+    Three celu wires at the same round budget: a fixed tight sketch
+    (ratio 0.0625 — cheapest, plateaus highest), a fixed loose sketch
+    (ratio 0.25 — the CODEC_SPECS default), and the adaptive wire that
+    starts tight and steps 0.0625 -> 0.5 on plateau.  The adaptive wire
+    should spend close to the tight wire's bytes while reaching close to
+    the loose wire's loss."""
+    from repro.configs.base import CELUConfig
+    from repro.core import engine
+    from repro.core.compression import (PlateauRatioSchedule,
+                                        StochasticQuantCodec, TopKCodec)
+
+    ccfg = CELUConfig()
+
+    def transport(ratio, schedule=None):
+        up = TopKCodec(ratio, value_codec=StochasticQuantCodec(8),
+                       ratio_schedule=schedule)
+        return engine.CompressedWANTransport(ccfg, up,
+                                             StochasticQuantCodec(8))
+
+    runs = {}
+    for name, tp, hook in (
+            ("fixed(0.0625)", transport(0.0625), None),
+            ("fixed(0.25)", transport(0.25), None),
+            ("adaptive(0.0625->0.5)",
+             transport(0.0625, PlateauRatioSchedule(
+                 ratios=(0.0625, 0.125, 0.25, 0.5), patience=2,
+                 min_delta=2e-3)),
+             lambda t, loss: t.scheduled(loss))):
+        runs[name] = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
+                                  rounds=ADAPT_ROUNDS, lr=LR, batch=batch,
+                                  eval_every=25, transport=tp,
+                                  transport_hook=hook)
+    target = float(_smooth(runs["fixed(0.25)"]["loss_curve"])[-1])
+    csv_row(f"# adaptive_topk: celu R=5 W=5, {ADAPT_ROUNDS} rounds, "
+            f"target loss {target:.4f} (fixed(0.25) final, smoothed)")
+    csv_row("wire", "final_bytes_per_round", "total_MB",
+            "rounds_to_target_loss", "final_loss", "final_auc")
+    for name, r in runs.items():
+        sm = _smooth(r["loss_curve"])
+        hit = np.nonzero(sm <= target)[0]
+        rt = int(hit[0]) + 1 if hit.size else f">{len(sm)}"
+        csv_row(name, r["z_bytes_per_round"],
+                f"{r['bytes_total'] / 1e6:.1f}", rt, f"{sm[-1]:.4f}",
+                f"{r['final_auc']:.4f}")
+
+
 BLOCKS = {
     "local_update": bench_local_update,
     "local_sampling": bench_local_sampling,
@@ -157,7 +211,8 @@ def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--block", default=None,
-                    choices=("all", "compression") + tuple(BLOCKS),
+                    choices=("all", "compression", "adaptive_topk")
+                    + tuple(BLOCKS),
                     help="run one block instead of all")
     ap.add_argument("--compression", default=None, metavar="CODEC",
                     help="wire codec for the compression block, e.g. "
@@ -172,6 +227,10 @@ def main(argv=None):
     if block in ("all", "compression"):
         bench_compression(data, cfg, args.compression or "int8_topk")
         if block == "compression":
+            return
+    if block in ("all", "adaptive_topk"):
+        bench_adaptive_topk(data, cfg)
+        if block == "adaptive_topk":
             return
     target, base = _target(data, cfg)
     for name, fn in BLOCKS.items():

@@ -41,15 +41,25 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
                  lr=0.01, optimizer="adagrad", seed=0, eval_every=25,
                  target_auc: Optional[float] = None,
                  fused_weighting: bool = True,
-                 compression: Optional[str] = None
+                 compression: Optional[str] = None,
+                 pipeline_depth: int = 0,
+                 transport=None, transport_hook=None
                  ) -> Dict[str, object]:
     """Train with one protocol preset of the K-party round engine; return
     the AUC-vs-round curve and (if target_auc given) the first round
     reaching it.  ``compression`` selects a wire codec
-    (``core.compression.CODEC_SPECS``) for the simulated WAN."""
+    (``core.compression.CODEC_SPECS``) for the simulated WAN (or pass an
+    explicit ``transport``).  ``pipeline_depth=1`` runs the two-worker
+    pipelined schedule (``engine.PipelinedEngine``): round t+1's exchange
+    overlaps round t's local updates.  ``transport_hook(transport,
+    smoothed_loss) -> transport|None`` is the host-side control plane,
+    consulted at every eval point — returning a NEW transport (e.g. an
+    adaptive top-k ratio step) rebuilds the jitted round around it; the
+    error-feedback residuals in the round state carry over."""
     init_fn, task, predict = make_dlrm(cfg)
     base = CELUConfig(R=R, W=W, xi_degrees=xi, weighting=weighting,
-                      sampling=sampling or "round_robin")
+                      sampling=sampling or "round_robin",
+                      pipeline_depth=pipeline_depth)
     ccfg, nloc = engine.preset_config(protocol, base)
     if sampling is not None and protocol == "celu":
         ccfg = dataclasses.replace(ccfg, sampling=sampling)
@@ -59,13 +69,31 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     _, ba, bb = next(it)
     asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
     etask = engine.lift_two_party(task)
-    transport = engine.make_transport(ccfg, compression)
+    if transport is None:
+        transport = engine.make_transport(ccfg, compression)
+    if transport_hook is not None and pipeline_depth:
+        raise ValueError("transport_hook rebuilds the round between "
+                         "evals — drive it at pipeline_depth=0")
     state = engine.init_state(etask, engine.lift_two_party_params(params),
                               opt, ccfg, [asj(ba)], asj(bb),
                               transport=transport)
-    rnd = engine.make_round(etask, opt, ccfg, local_steps=nloc,
-                            transport=transport,
-                            fused_weighting=fused_weighting, donate=True)
+    z_shapes = [(batch, cfg.z_dim)]
+
+    def build(tp):
+        if pipeline_depth:
+            pe = engine.make_pipeline(etask, opt, ccfg,
+                                      depth=pipeline_depth,
+                                      local_steps=nloc, transport=tp,
+                                      fused_weighting=fused_weighting)
+            return pe
+        return engine.make_round(etask, opt, ccfg, local_steps=nloc,
+                                 transport=tp,
+                                 fused_weighting=fused_weighting,
+                                 donate=transport_hook is None)
+
+    drv = build(transport)
+    if pipeline_depth:
+        rs = drv.init(state)
     it = synth.aligned_batches(data["train"], batch, seed=seed)
 
     te = data["test"]
@@ -73,19 +101,39 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     teb = {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])}
     curve: List[Tuple[int, float]] = []
     losses: List[float] = []
+    bytes_total = 0
+    bytes_curve: List[Tuple[int, int]] = []
     reached = None
     t0 = time.time()
     for i in range(rounds):
         bi, ba, bb = next(it)
-        state, m = rnd(state, [asj(ba)], asj(bb), bi)
+        if pipeline_depth:
+            rs, m = drv.step(rs, [asj(ba)], asj(bb), bi)
+        else:
+            state, m = drv(state, [asj(ba)], asj(bb), bi)
         losses.append(m["loss"])       # device array: no per-round sync
+        bytes_total += transport.round_bytes(z_shapes)
         if (i + 1) % eval_every == 0 or i + 1 == rounds:
-            a = auc(np.asarray(predict(engine.unlift_params(state["params"]),
+            cur = rs.params if pipeline_depth else state["params"]
+            a = auc(np.asarray(predict(engine.unlift_params(cur),
                                        cfg, tea, teb)),
                     te["y"])
             curve.append((i + 1, a))
+            bytes_curve.append((i + 1, bytes_total))
             if target_auc and reached is None and a >= target_auc:
                 reached = i + 1
+            if transport_hook is not None:
+                recent = float(np.mean(
+                    np.asarray(losses[-eval_every:], np.float32)))
+                new_tp = transport_hook(transport, recent)
+                if new_tp is not None and new_tp is not transport:
+                    transport = new_tp
+                    drv = build(transport)
+    if pipeline_depth:
+        rs, _ = drv.flush(rs)
+        state = drv.finalize(rs)
+    up_b = sum(transport.uplink_bytes(s) for s in z_shapes)
+    down_b = sum(transport.downlink_bytes(s) for s in z_shapes)
     return {
         "protocol": protocol, "R": R, "W": W, "xi": xi,
         "weighting": weighting, "curve": curve,
@@ -93,7 +141,12 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
         "rounds_to_target": reached, "wall_s": time.time() - t0,
         "loss_curve": [float(x) for x in losses],
         "compression": compression or "",
-        "z_bytes_per_round": transport.round_bytes([(batch, cfg.z_dim)]),
+        "pipeline_depth": pipeline_depth,
+        "z_bytes_per_round": transport.round_bytes(z_shapes),
+        "uplink_bytes_per_round": up_b,
+        "downlink_bytes_per_round": down_b,
+        "bytes_total": bytes_total,
+        "bytes_curve": bytes_curve,
     }
 
 

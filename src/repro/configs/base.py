@@ -177,7 +177,8 @@ class CELUConfig:
     W: int = 5               # workset table capacity (mini-batches)
     xi_degrees: float = 60.0 # weighting threshold ξ (cos ξ floor)
     weighting: bool = True
-    sampling: str = "round_robin"   # round_robin | consecutive (FedBCD)
+    # round_robin | consecutive (FedBCD) | uniform (random over alive slots)
+    sampling: str = "round_robin"
     # BEYOND-PAPER: wire precision of the exchanged ⟨Z_A, ∇Z_A⟩.  The paper
     # sends fp32; "bfloat16" halves WAN bytes per round (EXPERIMENTS §Perf
     # pair 3 validates convergence parity).
@@ -192,6 +193,13 @@ class CELUConfig:
     # "" = plain SimWANTransport; see core/compression.py CODEC_SPECS for
     # names ("int8", "int4", "topk", "int8_topk", "up/down" pairs, ...).
     compression: str = ""
+    # Paper §4.1 (Fig. 4): the two-worker pipeline depth.  0 = sequential
+    # rounds (exchange then local updates, the WAN stall serialized with
+    # compute); 1 = round t+1's exchange overlaps round t's local updates
+    # (engine.PipelinedEngine).  The depth is also the extra staleness every
+    # cached entry accrues — it tightens workset validity and attenuates
+    # the Algorithm-2 weights (weighting.pipeline_attenuation).
+    pipeline_depth: int = 0
 
 
 @dataclass(frozen=True)

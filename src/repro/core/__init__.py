@@ -2,6 +2,7 @@
 wire compression, protocol presets."""
 from . import compression, engine, protocol, weighting, workset  # noqa: F401
 from .engine import (CompressedWANTransport, KPartyTask,  # noqa: F401
-                     PodTransport, SimWANTransport, make_transport,
-                     preset_config)
+                     PendingExchange, PipelinedEngine, PodTransport,
+                     RoundState, SimWANTransport, make_pipeline,
+                     make_transport, preset_config)
 from .protocol import VFLTask, init_state, make_round, protocol_config  # noqa: F401

@@ -135,19 +135,99 @@ class StochasticQuantCodec:
         return T * code_bytes + T * 4            # codes + fp32 scales
 
 
+class PlateauRatioSchedule:
+    """Adaptive top-k keep-ratio: loosen sparsity as the loss plateaus.
+
+    Early in training the gradients' energy is concentrated and an
+    aggressive sketch is nearly free; near convergence the signal spreads
+    out and the sparsification error (even under error feedback, a
+    one-round delay) caps the reachable loss.  This host-side control
+    plane watches the (smoothed) training loss between jitted rounds:
+    when ``patience`` consecutive observations fail to improve the best
+    seen loss by ``min_delta``, it steps the keep-ratio up the ``ratios``
+    ladder.  Monotone by construction — sparsity only loosens.
+
+    The schedule lives OUTSIDE the jit: a ratio change re-specializes the
+    round function (``k`` is a static shape), which is cheap because it
+    happens a handful of times per run.  Error-feedback residuals are
+    dense fp32 regardless of ratio, so they carry across the change."""
+
+    def __init__(self, ratios: Sequence[float] = (0.0625, 0.125, 0.25, 0.5),
+                 patience: int = 3, min_delta: float = 1e-3):
+        rs = tuple(float(r) for r in ratios)
+        assert rs == tuple(sorted(rs)) and rs, "ratios must ascend"
+        self.ratios = rs
+        self.patience = patience
+        self.min_delta = min_delta
+        self.idx = 0
+        self.best = float("inf")
+        self.stall = 0
+
+    @property
+    def ratio(self) -> float:
+        return self.ratios[self.idx]
+
+    def update(self, loss) -> Optional[float]:
+        """Observe one smoothed loss; return the NEW ratio when the
+        plateau rule fires (else None)."""
+        loss = float(loss)
+        if loss < self.best - self.min_delta:
+            self.best = loss
+            self.stall = 0
+            return None
+        self.stall += 1
+        if self.stall >= self.patience and self.idx + 1 < len(self.ratios):
+            self.idx += 1
+            self.stall = 0
+            self.best = min(self.best, loss)
+            return self.ratio
+        return None
+
+
 class TopKCodec:
     """Keep the k = ceil(ratio * n) largest-magnitude values; the rest
     decode to zero.  ``value_codec`` compresses the kept-value vector
-    (codec chaining — e.g. top-k indices + int8 values)."""
+    (codec chaining — e.g. top-k indices + int8 values).
+
+    ``ratio_schedule`` (a :class:`PlateauRatioSchedule`-like object) is the
+    adaptive-sparsity hook: callers feed it the training loss via
+    :meth:`scheduled` between rounds and swap in the returned codec when
+    the keep-ratio steps."""
 
     lossless = False
     exact = False
 
     def __init__(self, ratio: float = 0.25,
-                 value_codec: Optional[object] = None):
+                 value_codec: Optional[object] = None,
+                 ratio_schedule: Optional[PlateauRatioSchedule] = None):
         assert 0.0 < ratio <= 1.0, ratio
         self.ratio = ratio
         self.value_codec = value_codec or IdentityCodec()
+        self.ratio_schedule = ratio_schedule
+        if ratio_schedule is not None and ratio_schedule.ratio != ratio:
+            # sync the ladder to the codec's starting ratio, else a fired
+            # step could TIGHTEN the wire (monotone-loosening contract)
+            if ratio not in ratio_schedule.ratios:
+                raise ValueError(
+                    f"codec ratio {ratio} not on the schedule ladder "
+                    f"{ratio_schedule.ratios}")
+            ratio_schedule.idx = ratio_schedule.ratios.index(ratio)
+
+    def with_ratio(self, ratio: float) -> "TopKCodec":
+        """Same codec (and schedule hook) at a different keep-ratio."""
+        return TopKCodec(ratio, value_codec=self.value_codec,
+                         ratio_schedule=self.ratio_schedule)
+
+    def scheduled(self, loss) -> "TopKCodec":
+        """Consult the ratio_schedule with one loss observation; returns
+        ``self`` unchanged or a re-ratioed clone (caller rebuilds the
+        round function around it — error-feedback residuals carry)."""
+        if self.ratio_schedule is None:
+            return self
+        r = self.ratio_schedule.update(loss)
+        if r is None or r == self.ratio:
+            return self
+        return self.with_ratio(r)
 
     def k_of(self, n: int) -> int:
         return max(1, int(math.ceil(n * self.ratio)))

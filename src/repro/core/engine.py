@@ -78,7 +78,7 @@ import jax.numpy as jnp
 
 from ..configs.base import CELUConfig
 from ..optim import Optimizer, apply_updates
-from .weighting import instance_weights, xi_to_cos
+from .weighting import instance_weights, pipeline_attenuation, xi_to_cos
 from .workset import workset_init, workset_insert, workset_sample
 
 
@@ -223,6 +223,26 @@ class CompressedWANTransport(SimWANTransport):
     def downlink_bytes(self, z_shape) -> int:
         return self.codecs["down"].wire_bytes(z_shape, self.wire)
 
+    def scheduled(self, loss) -> "CompressedWANTransport":
+        """Host-side control plane: offer one (smoothed) loss observation
+        to each direction codec's adaptive hook (e.g. the top-k
+        ``ratio_schedule``).  Returns ``self`` when nothing fired, else a
+        new transport around the re-ratioed codecs — rebuild the jitted
+        round with it; the error-feedback residuals in the round state are
+        dense and carry over unchanged."""
+        # consult each DISTINCT codec once: with a symmetric wire both
+        # directions alias one codec object, and double-consulting would
+        # halve the schedule's patience and let the directions diverge
+        seen: Dict[int, Any] = {}
+        for c in self.codecs.values():
+            if id(c) not in seen:
+                seen[id(c)] = c.scheduled(loss) if hasattr(c, "scheduled") \
+                    else c
+        new = {d: seen[id(c)] for d, c in self.codecs.items()}
+        if all(new[d] is self.codecs[d] for d in self.codecs):
+            return self
+        return CompressedWANTransport(self.celu, new["up"], new["down"])
+
 
 def make_transport(celu: CELUConfig, compression: Optional[str] = None):
     """Transport factory for the simulated WAN.  ``compression`` (falling
@@ -275,7 +295,12 @@ def _fusable(x) -> bool:
 
 def staleness_weights(ad_hoc, stale, cos_xi: float, *,
                       fused: bool = False) -> jnp.ndarray:
-    """Algorithm-2 ``InsWeight``: per-instance cosine floored at cos ξ."""
+    """Algorithm-2 ``InsWeight``: per-instance cosine floored at cos ξ.
+
+    NOTE: the pipeline-staleness discount is NOT applied here — callers
+    that need it (``local_grad_b`` after its K-party minimum,
+    ``weighted_cotangent`` for the feature-party path) apply
+    :func:`repro.core.weighting.pipeline_attenuation` exactly once."""
     if fused and _fusable(ad_hoc):
         from ..kernels import ops as kops
         return kops.cosine_weight(ad_hoc, stale, cos_xi)
@@ -283,17 +308,27 @@ def staleness_weights(ad_hoc, stale, cos_xi: float, *,
 
 
 def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
-                       fused: bool = True
+                       fused: bool = True, pipeline_staleness: int = 0
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """InsWeight + weights ⊙ ∇Z -> (weights (B,), fp32 weighted cotangent).
 
     ``fused=True`` runs the single-VMEM-pass Pallas kernel; the reference
-    composition is its bit-exact oracle."""
+    composition is its bit-exact oracle.  ``pipeline_staleness`` composes
+    with the fused kernel as a cheap post-scale: the kernel's (w, w ⊙ ∇Z)
+    becomes (w^(1+s), w^s ⊙ (w ⊙ ∇Z)), so the discounted weight still
+    multiplies the cotangent exactly once."""
     if fused and _fusable(ad_hoc):
         from ..kernels import ops as kops
-        return kops.weighted_cotangent(ad_hoc, stale,
-                                       dz.astype(jnp.float32), cos_xi)
+        w, cot = kops.weighted_cotangent(ad_hoc, stale,
+                                         dz.astype(jnp.float32), cos_xi)
+        if pipeline_staleness:
+            extra = w ** pipeline_staleness
+            w = w * extra
+            cot = cot * _bcast(extra, cot)
+        return w, cot
     w = instance_weights(ad_hoc, stale, cos_xi)
+    if pipeline_staleness:
+        w = pipeline_attenuation(w, pipeline_staleness)
     return w, _bcast(w, dz) * dz.astype(jnp.float32)
 
 
@@ -301,7 +336,8 @@ def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
 # Local-update gradients (Algorithm 2) — shared by every protocol shape
 # --------------------------------------------------------------------------
 def local_grad_a(forward_a, params_a, entry, cos_xi: float, *,
-                 weighting: bool = True, fused: bool = True, mask=None):
+                 weighting: bool = True, fused: bool = True, mask=None,
+                 pipeline_staleness: int = 0):
     """Feature-party local update: ad-hoc forward on the cached batch,
     stale cotangent ∇Z^(i) weighted by cos(Z^(i,j), Z^(i)).
 
@@ -311,7 +347,8 @@ def local_grad_a(forward_a, params_a, entry, cos_xi: float, *,
     z_new, vjp = jax.vjp(lambda p: forward_a(p, entry["batch"]), params_a)
     if weighting:
         w, cot = weighted_cotangent(z_new, entry["z"], entry["dz"], cos_xi,
-                                    fused=fused)
+                                    fused=fused,
+                                    pipeline_staleness=pipeline_staleness)
     else:
         w = jnp.ones((z_new.shape[0],), jnp.float32)
         cot = _bcast(w, z_new) * entry["dz"].astype(jnp.float32)
@@ -323,12 +360,14 @@ def local_grad_a(forward_a, params_a, entry, cos_xi: float, *,
 
 
 def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
-                 weighting: bool = True, fused: bool = True, mask=None):
+                 weighting: bool = True, fused: bool = True, mask=None,
+                 pipeline_staleness: int = 0):
     """Label-party local update: stale Z_i's + ad-hoc own features; the
     ad-hoc ∇Z_i^(i,j) is computed only to measure staleness (paper
     footnote 2), then the weighted per-instance losses drive the backward
     pass.  K>1 composes conservatively: the instance weight is the MINIMUM
-    cosine over parties.  Returns (grads, weights)."""
+    cosine over parties (the pipeline discount is applied once, after the
+    minimum).  Returns (grads, weights)."""
     zs, dzs, batch_b = entry["z"], entry["dz"], entry["batch"]
     if weighting:
         dz_new = jax.grad(
@@ -338,6 +377,8 @@ def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
         for i in range(1, len(zs)):
             w = jnp.minimum(
                 w, staleness_weights(dz_new[i], dzs[i], cos_xi, fused=fused))
+        if pipeline_staleness:
+            w = pipeline_attenuation(w, pipeline_staleness)
     else:
         w = jnp.ones((zs[0].shape[0],), jnp.float32)
     if mask is not None:
@@ -388,32 +429,48 @@ def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
 
 
 # --------------------------------------------------------------------------
-# One full communication round (exchange + R local updates per party)
+# The two round stages (exchange / local updates) — shared by the
+# sequential round and the pipelined scheduler
 # --------------------------------------------------------------------------
-def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
-               local_steps: int = -1, transport=None,
-               compression: Optional[str] = None,
-               fused_weighting: bool = True, jit: bool = True,
-               donate: bool = False):
-    """fn(state, batches_a: list, batch_b, batch_idx) -> (state, metrics).
+def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
+                 n_local: int, tp, fused: bool, pipeline_staleness: int = 0):
+    """Build the round's two first-class stages over the shared state
+    layout:
 
-    ``local_steps`` defaults to R (steady state: one fresh insert funds R
-    uses); Vanilla training = ``local_steps=0``.  ``transport`` defaults to
-    :func:`make_transport` over ``celu`` — i.e. :class:`SimWANTransport`
-    unless ``compression`` (or ``celu.compression``) names a wire codec."""
-    n_local = celu.R if local_steps < 0 else local_steps
+      * ``exchange_compute(params, tstate, batches_a, batch_b,
+        comm_rounds)`` — everything the paper's background communication
+        worker does WITHOUT mutating training state: party forward passes,
+        transport send up (Z_i) and down (∇Z_i), Party B's loss, and all
+        fresh gradients.  Returns the in-flight exchange payload (wire
+        values + gradients + updated transport residuals) — the
+        double-buffered workset slot the pipeline carries while round t's
+        local updates run.
+      * ``exchange_apply(state, fresh, batches_a, batch_b, batch_idx)`` —
+        merge an in-flight exchange into the round state: optimizer steps
+        from the fresh gradients, workset inserts, counters, transport
+        residual adoption.
+      * ``local_scan(state)`` — the R staleness-weighted local updates per
+        party sampled from the workset (Algorithm 2).
+
+    :func:`make_round` composes compute -> apply -> scan inside ONE jit
+    (today's sequential semantics, golden-trace pinned);
+    :class:`PipelinedEngine` jits each stage separately so round t+1's
+    exchange can be dispatched while round t's local scan runs.
+
+    ``pipeline_staleness`` (the scheduler's depth) tightens the workset
+    validity window and attenuates Algorithm-2 instance weights: under a
+    depth-D pipeline every cached entry is D exchanges older (relative to
+    the params it is used against) than the sequential schedule would make
+    it."""
     cos_xi = xi_to_cos(celu.xi_degrees)
-    tp = transport if transport is not None \
-        else make_transport(celu, compression)
-    fused = fused_weighting
+    s_pipe = int(pipeline_staleness)
+    uniform = celu.sampling == "uniform"
 
-    def exchange(state, batches_a, batch_b, batch_idx):
-        pas, pb = state["params"]["a"], state["params"]["b"]
+    def exchange_compute(params, tstate, batches_a, batch_b, comm_rounds):
+        pas, pb = params["a"], params["b"]
         K = len(pas)
-        rng = jax.random.fold_in(jax.random.PRNGKey(17),
-                                 state["comm_rounds"])
+        rng = jax.random.fold_in(jax.random.PRNGKey(17), comm_rounds)
         keys = jax.random.split(rng, 2 * K)
-        tstate = state.get("transport", {})
         missing = [d for d in getattr(tp, "stateful_directions", ())
                    if d not in tstate]
         if missing:
@@ -450,13 +507,21 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             new_tstate["down"] = down_res
 
         # every A_i's backward with its (wire-precision) cotangent
+        g_as = [vjps[i](dzs[i].astype(zs[i].dtype))[0] for i in range(K)]
+        return {"zs": zs, "dzs": dzs, "g_as": g_as, "g_b": g_b,
+                "loss": loss, "tstate": new_tstate}
+
+    def exchange_apply(state, fresh, batches_a, batch_b, batch_idx):
+        pas, pb = state["params"]["a"], state["params"]["b"]
+        K = len(pas)
+        zs, dzs = fresh["zs"], fresh["dzs"]
         new_pas, new_oas = [], []
         for i in range(K):
-            (g_a,) = vjps[i](dzs[i].astype(zs[i].dtype))
-            upd, oa = opt.update(g_a, state["opt"]["a"][i], pas[i])
+            upd, oa = opt.update(fresh["g_as"][i], state["opt"]["a"][i],
+                                 pas[i])
             new_pas.append(apply_updates(pas[i], upd))
             new_oas.append(oa)
-        upd_b, ob = opt.update(g_b, state["opt"]["b"], pb)
+        upd_b, ob = opt.update(fresh["g_b"], state["opt"]["b"], pb)
 
         ws_a = [workset_insert(state["ws"]["a"][i],
                                {"z": zs[i], "dz": dzs[i],
@@ -472,32 +537,41 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             "steps": {"a": [s + 1 for s in state["steps"]["a"]],
                       "b": state["steps"]["b"] + 1},
             "comm_rounds": state["comm_rounds"] + 1,
-            "transport": new_tstate,
+            "transport": fresh["tstate"],
         }
-        return new_state, {"loss": loss}
+        return new_state, {"loss": fresh["loss"]}
 
-    def round_fn(state, batches_a, batch_b, batch_idx):
-        state, m = exchange(state, batches_a, batch_b, batch_idx)
+    def local_scan(state):
         K = len(state["params"]["a"])
         if n_local == 0:
             zero = jnp.float32(0.0)
-            m.update({"local_steps": jnp.int32(0), "w_mean": zero,
-                      "w_zero_frac": zero})
-            return state, m
+            return state, {"local_steps": jnp.int32(0), "w_mean": zero,
+                           "w_zero_frac": zero}
 
         scale = jnp.float32(1.0 / (K + 1))
+        comm_rounds = state["comm_rounds"]
 
         def body(carry, _):
-            pas, oas, wsas, nas, pb, ob, wsb, nb = carry
+            if uniform:
+                pas, oas, wsas, nas, pb, ob, wsb, nb, j = carry
+                draw_key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.PRNGKey(29), comm_rounds),
+                    j)
+            else:
+                pas, oas, wsas, nas, pb, ob, wsb, nb = carry
+                draw_key = None
             pas, oas, wsas, nas = list(pas), list(oas), list(wsas), list(nas)
             w_means, w_zeros = [], []
             for i in range(K):
-                wsas[i], e, _, valid = workset_sample(wsas[i], celu.R,
-                                                      celu.sampling)
+                ki = None if draw_key is None \
+                    else jax.random.fold_in(draw_key, i)
+                wsas[i], e, _, valid = workset_sample(
+                    wsas[i], celu.R, celu.sampling, rng=ki,
+                    pipeline_staleness=s_pipe)
                 vf = valid.astype(jnp.float32)
                 g, w = local_grad_a(task.forward_a, pas[i], e, cos_xi,
                                     weighting=celu.weighting, fused=fused,
-                                    mask=vf)
+                                    mask=vf, pipeline_staleness=s_pipe)
                 upd, oas[i] = opt.update(g, oas[i], pas[i])
                 upd = jax.tree_util.tree_map(lambda u: u * vf, upd)
                 pas[i] = apply_updates(pas[i], upd)
@@ -505,11 +579,15 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
                 w_means.append(jnp.mean(w))
                 w_zeros.append(jnp.mean(w == 0.0))
 
-            wsb, e, _, valid = workset_sample(wsb, celu.R, celu.sampling)
+            kb = None if draw_key is None \
+                else jax.random.fold_in(draw_key, K)
+            wsb, e, _, valid = workset_sample(
+                wsb, celu.R, celu.sampling, rng=kb,
+                pipeline_staleness=s_pipe)
             vf = valid.astype(jnp.float32)
             g, w = local_grad_b(task.loss_b, pb, e, cos_xi,
                                 weighting=celu.weighting, fused=fused,
-                                mask=vf)
+                                mask=vf, pipeline_staleness=s_pipe)
             upd, ob = opt.update(g, ob, pb)
             upd = jax.tree_util.tree_map(lambda u: u * vf, upd)
             pb = apply_updates(pb, upd)
@@ -519,14 +597,19 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
 
             lm = {"w_mean": sum(w_means) * scale,
                   "w_zero_frac": sum(w_zeros) * scale}
-            return (pas, oas, wsas, nas, pb, ob, wsb, nb), lm
+            carry = (pas, oas, wsas, nas, pb, ob, wsb, nb)
+            if uniform:
+                carry = carry + (j + 1,)
+            return carry, lm
 
         init = (state["params"]["a"], state["opt"]["a"], state["ws"]["a"],
                 [jnp.int32(0) for _ in range(K)],
                 state["params"]["b"], state["opt"]["b"], state["ws"]["b"],
                 jnp.int32(0))
-        (pas, oas, wsas, nas, pb, ob, wsb, nb), lm = jax.lax.scan(
-            body, init, None, length=n_local)
+        if uniform:
+            init = init + (jnp.int32(0),)
+        out, lm = jax.lax.scan(body, init, None, length=n_local)
+        pas, oas, wsas, nas, pb, ob, wsb, nb = out[:8]
         state = {
             "params": {"a": pas, "b": pb},
             "opt": {"a": oas, "b": ob},
@@ -536,14 +619,249 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             "comm_rounds": state["comm_rounds"],
             "transport": state["transport"],
         }
-        m.update({"local_steps": sum(nas) + nb,
-                  "w_mean": jnp.mean(lm["w_mean"]),
-                  "w_zero_frac": jnp.mean(lm["w_zero_frac"])})
+        return state, {"local_steps": sum(nas) + nb,
+                       "w_mean": jnp.mean(lm["w_mean"]),
+                       "w_zero_frac": jnp.mean(lm["w_zero_frac"])}
+
+    return exchange_compute, exchange_apply, local_scan
+
+
+# --------------------------------------------------------------------------
+# One full communication round (exchange + R local updates per party)
+# --------------------------------------------------------------------------
+def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
+               local_steps: int = -1, transport=None,
+               compression: Optional[str] = None,
+               fused_weighting: bool = True, jit: bool = True,
+               donate: bool = False):
+    """fn(state, batches_a: list, batch_b, batch_idx) -> (state, metrics).
+
+    ``local_steps`` defaults to R (steady state: one fresh insert funds R
+    uses); Vanilla training = ``local_steps=0``.  ``transport`` defaults to
+    :func:`make_transport` over ``celu`` — i.e. :class:`SimWANTransport`
+    unless ``compression`` (or ``celu.compression``) names a wire codec.
+
+    This is the SEQUENTIAL schedule: the exchange stage and the local-update
+    scan run back-to-back inside one jit (XLA may still hide some latency,
+    but the simulated WAN stall serializes with compute).  For the paper's
+    two-worker overlap, build the same stages through
+    :func:`make_pipeline` / :class:`PipelinedEngine` instead."""
+    n_local = celu.R if local_steps < 0 else local_steps
+    tp = transport if transport is not None \
+        else make_transport(celu, compression)
+    exchange_compute, exchange_apply, local_scan = _make_stages(
+        task, opt, celu, n_local=n_local, tp=tp, fused=fused_weighting)
+
+    def round_fn(state, batches_a, batch_b, batch_idx):
+        fresh = exchange_compute(state["params"], state.get("transport", {}),
+                                 batches_a, batch_b, state["comm_rounds"])
+        state, m = exchange_apply(state, fresh, batches_a, batch_b,
+                                  batch_idx)
+        state, lm = local_scan(state)
+        m.update(lm)
         return state, m
 
     if jit:
         return jax.jit(round_fn, donate_argnums=(0,) if donate else ())
     return round_fn
+
+
+# --------------------------------------------------------------------------
+# The pipelined scheduler (paper §4.1, Fig. 4: the two-worker design)
+# --------------------------------------------------------------------------
+class PendingExchange(NamedTuple):
+    """An in-flight exchange: the double-buffered workset slot.
+
+    ``fresh`` is ``exchange_compute``'s payload — wire-precision ⟨Z_i, ∇Z_i⟩
+    (the statistics that will be inserted), the fresh gradients, Party B's
+    loss, and the updated transport error-feedback residuals (in flight
+    with the exchange: they are not adopted into the round state until the
+    merge).  The batches ride along because the deferred workset insert
+    needs each party's own features."""
+    fresh: Dict[str, Any]
+    batches_a: Sequence[Any]
+    batch_b: Any
+    batch_idx: Any
+
+
+class RoundState(NamedTuple):
+    """Typed round state shared by the two pipeline stages.
+
+    The first six fields mirror the engine's state dict (the canonical
+    wire format of :func:`init_state` — convert with :meth:`from_state` /
+    :meth:`as_state`); ``pending`` is the pipeline's second buffer: the
+    in-flight :class:`PendingExchange` dispatched for round t+1 while round
+    t's local scan runs (``None`` when no exchange is in flight)."""
+    params: Dict[str, Any]
+    opt: Dict[str, Any]
+    ws: Dict[str, Any]
+    steps: Dict[str, Any]
+    comm_rounds: Any
+    transport: Dict[str, Any]
+    pending: Optional[PendingExchange] = None
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any],
+                   pending: Optional[PendingExchange] = None) -> "RoundState":
+        return cls(params=state["params"], opt=state["opt"],
+                   ws=state["ws"], steps=state["steps"],
+                   comm_rounds=state["comm_rounds"],
+                   transport=state.get("transport", {}), pending=pending)
+
+    def as_state(self) -> Dict[str, Any]:
+        return {"params": self.params, "opt": self.opt, "ws": self.ws,
+                "steps": self.steps, "comm_rounds": self.comm_rounds,
+                "transport": self.transport}
+
+
+def _zero_local_metrics():
+    zero = jnp.float32(0.0)
+    return {"local_steps": jnp.int32(0), "w_mean": zero,
+            "w_zero_frac": zero}
+
+
+class PipelinedEngine:
+    """Explicitly staged round scheduler: the paper's two-worker pipeline.
+
+    Depth 0 runs the stages sequentially — dispatch, merge, local scan —
+    and is bit-identical to :func:`make_round`'s fused round on the golden
+    traces.  Depth 1 dispatches round t+1's exchange and runs round t's
+    local scan while it is in flight:
+
+        dispatch(batch t+1)   # exchange_compute — async, never blocked on
+        local()               # round t's R local updates (the overlap)
+        merge()               # adopt the arrived exchange: opt step + insert
+
+    On the host-sim path the overlap is real at the dispatch level — the
+    three stages are separate jits and nothing calls
+    ``jax.block_until_ready`` between them, so XLA's async dispatch queues
+    the exchange behind no host barrier while the local scan is enqueued;
+    the simulated WAN clock (``repro.launch.wan.WANClock``) charges
+    ``max(exchange, local)`` per round instead of the sum.  The pipeline's
+    cost is staleness: round t's local updates sample a workset whose
+    freshest entry is one exchange older than the sequential schedule, and
+    the exchange dispatched for round t+1 computes its forward passes from
+    params that do not yet include round t's local updates.  Both are
+    accounted for by the ``pipeline_staleness = depth`` offset threaded
+    into ``workset_sample`` (validity window) and the Algorithm-2 weights
+    (:func:`repro.core.weighting.pipeline_attenuation`).
+
+    Drive it as::
+
+        pe = make_pipeline(task, opt, celu, depth=1)
+        rs = pe.init(engine.init_state(...))
+        for t, (bi, ba, bb) in enumerate(batches):
+            rs, m = pe.step(rs, ba, bb, bi)
+        rs, m = pe.flush(rs)          # drain the last in-flight local scan
+        state = pe.finalize(rs)
+    """
+
+    def __init__(self, task: KPartyTask, opt: Optimizer, celu: CELUConfig,
+                 *, depth: Optional[int] = None, local_steps: int = -1,
+                 transport=None, compression: Optional[str] = None,
+                 fused_weighting: bool = True, jit: bool = True):
+        if depth is None:
+            depth = celu.pipeline_depth
+        if depth not in (0, 1):
+            raise ValueError(f"pipeline depth must be 0 or 1, got {depth}")
+        self.depth = depth
+        self.celu = celu
+        n_local = celu.R if local_steps < 0 else local_steps
+        self.n_local = n_local
+        tp = transport if transport is not None \
+            else make_transport(celu, compression)
+        self.transport = tp
+        compute, apply_, scan = _make_stages(
+            task, opt, celu, n_local=n_local, tp=tp, fused=fused_weighting,
+            pipeline_staleness=depth)
+        wrap = jax.jit if jit else (lambda f: f)
+        self._compute = wrap(compute)
+        self._apply = wrap(apply_)
+        self._scan = wrap(scan)
+
+    # ---- stages ----------------------------------------------------------
+    def init(self, state: Dict[str, Any]) -> RoundState:
+        """Adopt an :func:`init_state` dict into the scheduler's state."""
+        return RoundState.from_state(state)
+
+    def dispatch(self, rs: RoundState, batches_a, batch_b,
+                 batch_idx) -> RoundState:
+        """Start round t+1's exchange (the background worker): compute the
+        wire statistics and fresh gradients from the CURRENT params.  Does
+        not block — the result is carried in ``rs.pending`` until
+        :meth:`merge`."""
+        if rs.pending is not None:
+            raise RuntimeError("an exchange is already in flight — "
+                               "merge() it before dispatching another "
+                               "(depth-1 pipeline)")
+        fresh = self._compute(rs.params, rs.transport, batches_a, batch_b,
+                              rs.comm_rounds)
+        return rs._replace(pending=PendingExchange(fresh, batches_a,
+                                                   batch_b, batch_idx))
+
+    def local(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
+        """Run the R staleness-weighted local updates (the foreground
+        worker) against the workset as of the last merged exchange."""
+        state, lm = self._scan(rs.as_state())
+        return RoundState.from_state(state, rs.pending), lm
+
+    def merge(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
+        """Adopt the in-flight exchange: fresh optimizer steps (applied to
+        the params as they are NOW — after any overlapped local updates),
+        workset inserts, transport residuals, counters."""
+        if rs.pending is None:
+            raise RuntimeError("no exchange in flight — dispatch() first")
+        p = rs.pending
+        state, m = self._apply(rs.as_state(), p.fresh, p.batches_a,
+                               p.batch_b, p.batch_idx)
+        return RoundState.from_state(state), m
+
+    # ---- schedules -------------------------------------------------------
+    def step(self, rs: RoundState, batches_a, batch_b, batch_idx
+             ) -> Tuple[RoundState, Dict[str, Any]]:
+        """One communication round.  Depth 0: exchange then local scan
+        (sequential).  Depth 1: the local scan of the PREVIOUS round runs
+        between this round's dispatch and merge — its WAN exchange is in
+        flight the whole time."""
+        rs = self.dispatch(rs, batches_a, batch_b, batch_idx)
+        if self.depth == 0:
+            rs, m = self.merge(rs)
+            rs, lm = self.local(rs)
+        else:
+            rs, lm = self.local(rs)
+            rs, m = self.merge(rs)
+        m.update(lm)
+        return rs, m
+
+    def flush(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
+        """Drain the pipeline: at depth 1 the last merged exchange has not
+        had its local scan yet — run it.  Depth 0 is a no-op."""
+        if self.depth == 0:
+            return rs, _zero_local_metrics()
+        rs, lm = self.local(rs)
+        return rs, lm
+
+    def finalize(self, rs: RoundState) -> Dict[str, Any]:
+        """Back to the engine's canonical state dict."""
+        if rs.pending is not None:
+            raise RuntimeError("an exchange is still in flight — merge() "
+                               "or drop it before finalizing")
+        return rs.as_state()
+
+
+def make_pipeline(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
+                  depth: Optional[int] = None, local_steps: int = -1,
+                  transport=None, compression: Optional[str] = None,
+                  fused_weighting: bool = True,
+                  jit: bool = True) -> PipelinedEngine:
+    """Build the staged round scheduler.  ``depth`` defaults to
+    ``celu.pipeline_depth``; depth 0 reproduces :func:`make_round`'s
+    sequential semantics bit-for-bit, depth 1 overlaps round t+1's WAN
+    exchange with round t's local updates (paper §4.1)."""
+    return PipelinedEngine(task, opt, celu, depth=depth,
+                           local_steps=local_steps, transport=transport,
+                           compression=compression,
+                           fused_weighting=fused_weighting, jit=jit)
 
 
 # --------------------------------------------------------------------------
@@ -567,13 +885,25 @@ def preset_config(name: str, base: CELUConfig) -> Tuple[CELUConfig, int]:
 def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
                    weighting: bool = True, tower_fwd=None, top_loss=None,
                    transport: Optional[PodTransport] = None,
-                   fused_weighting: bool = False):
+                   fused_weighting: bool = False,
+                   pipeline_depth: int = 0):
     """Build the jitted multi-pod CELU round (party p's weights live on
     pod p; the exchange is the transport's ppermute pair).
 
     ``tower_fwd(tower_params, x) -> Z`` and
     ``top_loss(top_params, z_a, z_b, y) -> per-instance loss`` define the
     party-stacked model (see ``core.pod_protocol`` for the WDL demo).
+
+    ``pipeline_depth=1`` is the ppermute-overlapped schedule (paper §4.1's
+    two-worker pipeline on the pod path): the round issues the up-permute,
+    then runs the R local updates against the PREVIOUS rounds' workset and
+    the dispatch-time params — the scan has no data dependency on the
+    in-flight collective, so the XLA/Mosaic scheduler overlaps the slow
+    inter-pod DCN transfer with the local compute — and only then consumes
+    the permuted cut tensors (fresh update + insert, applied to the
+    post-scan params).  Depth 0 is the sequential schedule (exchange,
+    insert, then the scan over the just-updated workset) — bit-identical
+    to the historical pod round.
 
     State pytree (all party-stacked, party axis over ``pod``):
       params:   {"tower": (2,...), "top": (2,...)}
@@ -606,10 +936,70 @@ def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
         xb = x[0]                                   # (B, F)
         yb = y[0]                                   # (B,)
 
+        # ---- R local updates, round-robin over the given workset ---------
+        def local_scan(params, opt_state, ws):
+            W = ws["z"].shape[1]
+
+            def local_step(carry, j):
+                params, opt_state, cursor = carry
+                t = ws["time"][0]
+                n_alive = jnp.minimum(t, W)
+                slot_j = jnp.mod(cursor, jnp.maximum(n_alive, 1))
+                zs = ws["z"][0, slot_j]
+                dzs = ws["dz"][0, slot_j]
+                xs = ws["x"][0, slot_j]
+                ys_ = ws["y"][0, slot_j]
+                tower_j = jax.tree_util.tree_map(lambda a: a[0],
+                                                 params["tower"])
+                top_j = jax.tree_util.tree_map(lambda a: a[0],
+                                               params["top"])
+
+                # Party A: ad-hoc forward, cosine vs stale Z, weighted
+                # stale ∇Z
+                g_tower_a, _ = local_grad_a(
+                    tower_fwd, tower_j, {"z": zs, "dz": dzs, "batch": xs},
+                    cos_xi, weighting=weighting, fused=fused,
+                    pipeline_staleness=pipeline_depth)
+
+                # Party B: stale Z_A + ad-hoc own tower; weight by ∇Z_A
+                # cosine
+                g_b, _ = local_grad_b(
+                    b_loss, {"top": top_j, "tower": tower_j},
+                    {"z": [zs], "dz": [dzs], "batch": {"x": xs, "y": ys_}},
+                    cos_xi, weighting=weighting, fused=fused,
+                    pipeline_staleness=pipeline_depth)
+                g_top_b, g_tower_b = g_b["top"], g_b["tower"]
+
+                is_a_ = (pod == 0)
+                g_tower_sel = jax.tree_util.tree_map(
+                    lambda ga, gb: jnp.where(is_a_, ga, gb)[None],
+                    g_tower_a, g_tower_b)
+                g_top_sel = jax.tree_util.tree_map(
+                    lambda g: jnp.where(is_a_, 0.0, g)[None], g_top_b)
+                grads_j = {"tower": g_tower_sel, "top": g_top_sel}
+                upd_j, opt_state = opt.update(grads_j, opt_state, params)
+                params = apply_updates(params, upd_j)
+                return (params, opt_state, cursor + 1), None
+
+            (params, opt_state, _), _ = jax.lax.scan(
+                local_step, (params, opt_state, jnp.int32(0)), None,
+                length=R)
+            return params, opt_state
+
         # ---- fresh exchange (the paper's communication worker) ----------
         z_mine, tower_vjp = jax.vjp(lambda tpm: tower_fwd(tpm, xb), tower)
         # Z_A: pod0 -> pod1 (pod0 receives pod1's Z_B slot, unused)
         z_a_at_b = tp.send_up(z_mine)                # on pod 1: Z_A
+
+        if pipeline_depth:
+            # Overlap window: the scan reads only the dispatch-time params
+            # and the PREVIOUS rounds' workset, so it has no dependency on
+            # the in-flight ppermute — the compiler is free to run the DCN
+            # transfer and the R local updates concurrently.  The fresh
+            # gradients below are still taken at the dispatch-time params
+            # (that is the pipeline's gradient staleness) and applied to
+            # the post-scan params when the stats "arrive".
+            params, opt_state = local_scan(params, opt_state, ws)
 
         def loss_fn(top_p, z_a):
             return jnp.mean(top_loss(top_p, z_a, z_mine, yb))
@@ -652,45 +1042,10 @@ def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
             ws["y"], yb[None], slot, 1)
         ws["time"] = ws["time"] + 1
 
-        # ---- R local updates, round-robin over the workset ---------------
-        def local_step(carry, j):
-            params, opt_state, cursor = carry
-            t = ws["time"][0]
-            n_alive = jnp.minimum(t, W)
-            slot_j = jnp.mod(cursor, jnp.maximum(n_alive, 1))
-            zs = ws["z"][0, slot_j]
-            dzs = ws["dz"][0, slot_j]
-            xs = ws["x"][0, slot_j]
-            ys_ = ws["y"][0, slot_j]
-            tower_j = jax.tree_util.tree_map(lambda a: a[0],
-                                             params["tower"])
-            top_j = jax.tree_util.tree_map(lambda a: a[0], params["top"])
-
-            # Party A: ad-hoc forward, cosine vs stale Z, weighted stale ∇Z
-            g_tower_a, _ = local_grad_a(
-                tower_fwd, tower_j, {"z": zs, "dz": dzs, "batch": xs},
-                cos_xi, weighting=weighting, fused=fused)
-
-            # Party B: stale Z_A + ad-hoc own tower; weight by ∇Z_A cosine
-            g_b, _ = local_grad_b(
-                b_loss, {"top": top_j, "tower": tower_j},
-                {"z": [zs], "dz": [dzs], "batch": {"x": xs, "y": ys_}},
-                cos_xi, weighting=weighting, fused=fused)
-            g_top_b, g_tower_b = g_b["top"], g_b["tower"]
-
-            is_a_ = (pod == 0)
-            g_tower_sel = jax.tree_util.tree_map(
-                lambda ga, gb: jnp.where(is_a_, ga, gb)[None],
-                g_tower_a, g_tower_b)
-            g_top_sel = jax.tree_util.tree_map(
-                lambda g: jnp.where(is_a_, 0.0, g)[None], g_top_b)
-            grads_j = {"tower": g_tower_sel, "top": g_top_sel}
-            upd_j, opt_state = opt.update(grads_j, opt_state, params)
-            params = apply_updates(params, upd_j)
-            return (params, opt_state, cursor + 1), None
-
-        (params, opt_state, _), _ = jax.lax.scan(
-            local_step, (params, opt_state, jnp.int32(0)), None, length=R)
+        if not pipeline_depth:
+            # sequential schedule: the scan runs after the insert, over the
+            # just-refreshed workset and post-exchange params
+            params, opt_state = local_scan(params, opt_state, ws)
         return params, opt_state, ws, loss[None]
 
     pp = P(tp.axis)  # every party-stacked leaf shards dim0 over pod

@@ -97,11 +97,16 @@ def _top_loss(top, z_a, z_b, y):
 # --------------------------------------------------------------------------
 def make_pod_round(mesh: Mesh, opt: Optimizer, *, R: int, cos_xi: float,
                    weighting: bool = True,
-                   transport: Optional[PodTransport] = None):
-    """Build the jitted multi-pod CELU round over the WDL demo model."""
+                   transport: Optional[PodTransport] = None,
+                   pipeline_depth: int = 0):
+    """Build the jitted multi-pod CELU round over the WDL demo model.
+    ``pipeline_depth=1`` issues the cut-tensor ppermute before the local
+    scan so the DCN transfer overlaps the R local updates (engine
+    docstring has the schedule)."""
     return engine.make_pod_round(mesh, opt, R=R, cos_xi=cos_xi,
                                  weighting=weighting, tower_fwd=_tower_fwd,
-                                 top_loss=_top_loss, transport=transport)
+                                 top_loss=_top_loss, transport=transport,
+                                 pipeline_depth=pipeline_depth)
 
 
 def init_pod_state(rng, mesh: Mesh, opt: Optimizer, *, n_fields: int,

@@ -46,6 +46,22 @@ def instance_weights(ad_hoc, stale, cos_xi: float, *,
     return jnp.where(w < cos_xi, 0.0, w)
 
 
+def pipeline_attenuation(w, staleness: int):
+    """Discount Algorithm-2 weights for known extra staleness.
+
+    Under a depth-``s`` pipelined schedule a sampled entry's statistics are
+    ``s`` exchanges older (relative to the params they are used against)
+    than the sequential schedule that Algorithm 2's cosine measure was
+    analysed on.  Model the drift per exchange as the drift the cosine
+    already measured and compound it: ``w -> w^(1+s)``.  This keeps w=1
+    (no measured drift) untouched, preserves zeros (below-threshold
+    instances stay rejected), and shrinks borderline instances smoothly —
+    no new hyper-parameter.  ``staleness=0`` is the identity."""
+    if staleness <= 0:
+        return w
+    return w ** (1 + staleness)
+
+
 def xi_to_cos(xi_degrees: float) -> float:
     """Paper parameterizes the threshold as an angle ξ (e.g. 60°)."""
     import math

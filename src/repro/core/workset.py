@@ -70,30 +70,51 @@ def workset_insert(ws: Dict[str, Any], entry: Dict[str, Any],
     }
 
 
-def _valid_mask(ws: Dict[str, Any], R: int) -> jnp.ndarray:
-    """(W,) bool — alive entries: inserted, not expired, not exhausted."""
+def _valid_mask(ws: Dict[str, Any], R: int,
+                pipeline_staleness: int = 0) -> jnp.ndarray:
+    """(W,) bool — alive entries: inserted, not expired, not exhausted.
+
+    ``pipeline_staleness`` tightens the expiry window: under a depth-D
+    pipelined schedule every cached entry is D exchanges older by the time
+    its sampled round completes, so the oldest D ring slots are retired
+    early to keep the paper's max-staleness bound W."""
     t = ws["time"]
     W = ws["insert_time"].shape[0]
-    alive = ws["insert_time"] >= t - W      # not expired (ring also enforces)
+    # not expired (the ring overwrite also enforces this at staleness 0)
+    alive = ws["insert_time"] >= t - W + pipeline_staleness
     alive &= ws["insert_time"] > INT_MIN    # ever inserted
     alive &= ws["use_count"] < R            # not exhausted
     return alive
 
 
-def workset_sample(ws: Dict[str, Any], R: int, strategy: str
+def workset_sample(ws: Dict[str, Any], R: int, strategy: str, *,
+                   rng=None, pipeline_staleness: int = 0
                    ) -> Tuple[Dict[str, Any], Dict[str, Any], jnp.ndarray,
                               jnp.ndarray]:
     """Draw one entry for a local update.
 
     strategy: "round_robin" — advance the cursor to the next alive slot
     (uniform over the table); "consecutive" — always the freshest slot
-    (FedBCD).  Returns (new_ws, entry, batch_idx, valid) where ``valid`` is
-    a bool scalar (False -> caller must no-op the update).
+    (FedBCD); "uniform" — an independent uniform draw over the alive slots
+    (requires ``rng``; the paper's §3.2 fair-sampling property holds per
+    draw instead of per W-cycle).  Returns (new_ws, entry, batch_idx,
+    valid) where ``valid`` is a bool scalar (False -> caller must no-op
+    the update).
     """
     W = ws["insert_time"].shape[0]
-    alive = _valid_mask(ws, R)
+    alive = _valid_mask(ws, R, pipeline_staleness)
     if strategy == "consecutive":
         slot = jnp.mod(ws["time"] - 1, W)
+        valid = alive[slot]
+        new_cursor = ws["cursor"]
+    elif strategy == "uniform":
+        if rng is None:
+            raise ValueError("uniform sampling needs an rng key")
+        # uniform over alive slots; with none alive the draw is degenerate
+        # and ``valid`` masks it into a no-op
+        logits = jnp.where(alive, 0.0, -jnp.inf)
+        logits = jnp.where(jnp.any(alive), logits, jnp.zeros((W,)))
+        slot = jax.random.categorical(rng, logits)
         valid = alive[slot]
         new_cursor = ws["cursor"]
     elif strategy == "round_robin":

@@ -33,14 +33,12 @@ from ..data import synthetic as synth
 from ..models import vfl
 from ..models.tabular import DLRMConfig, auc, make_dlrm
 from ..optim import make_optimizer
+from .wan import WANClock, transport_round_updown, wan_seconds  # noqa: F401
 
-# Simulated-WAN wall-clock model (paper §2.1: 300 Mbps, gateway latency).
-WAN_BANDWIDTH = 300e6 / 8          # bytes/s
-WAN_LATENCY = 0.01                 # s, per direction
-
-
-def wan_seconds(nbytes: int) -> float:
-    return nbytes / WAN_BANDWIDTH + 2 * WAN_LATENCY
+# Simulated-WAN wall-clock model (paper §2.1: 300 Mbps, gateway latency)
+# lives in launch.wan — per-direction bandwidth + RTT, overlap-aware round
+# latency.  ``wan_seconds(up_bytes, down_bytes)`` is re-exported above.
+DEFAULT_WAN = WANClock()
 
 
 def _as_jax(d: Dict[str, np.ndarray]):
@@ -73,7 +71,8 @@ def train_dlrm(args) -> Dict[str, Any]:
 
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
                       weighting=not args.no_weighting,
-                      compression=args.compression)
+                      compression=args.compression,
+                      pipeline_depth=args.pipeline_depth)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = init_fn(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
@@ -86,9 +85,19 @@ def train_dlrm(args) -> Dict[str, Any]:
     state = engine.init_state(etask, engine.lift_two_party_params(params),
                               opt, celu_cfg, [_as_jax(ba0)], _as_jax(bb0),
                               transport=transport)
-    rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
-                            transport=transport, donate=True)
-    z_bytes = transport.round_bytes([(args.batch_size, cfg.z_dim)])
+    depth = celu_cfg.pipeline_depth
+    if depth:
+        pe = engine.make_pipeline(etask, opt, celu_cfg, depth=depth,
+                                  local_steps=n_local, transport=transport)
+        rs = pe.init(state)
+    else:
+        rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
+                                transport=transport, donate=True)
+    # per-direction wire accounting from the transport's explicit split
+    # (asymmetric codecs: sparse sketches up, dense low-bit down)
+    z_shapes = [(args.batch_size, cfg.z_dim)]
+    up_bytes, down_bytes = transport_round_updown(transport, z_shapes)
+    z_bytes = up_bytes + down_bytes
 
     te = data["test"]
     tea, teb = ({"x_a": jnp.asarray(te["x_a"])},
@@ -99,27 +108,51 @@ def train_dlrm(args) -> Dict[str, Any]:
     history = []
     for i in range(args.rounds):
         bi, ba, bb = next(it)
-        state, m = rnd(state, [_as_jax(ba)], _as_jax(bb), bi)
+        if depth:
+            rs, m = pe.step(rs, [_as_jax(ba)], _as_jax(bb), bi)
+        else:
+            state, m = rnd(state, [_as_jax(ba)], _as_jax(bb), bi)
         if (i + 1) % max(1, args.rounds // 10) == 0:
-            logits = predict(engine.unlift_params(state["params"]), cfg,
-                             tea, teb)
+            cur = rs.params if depth else state["params"]
+            logits = predict(engine.unlift_params(cur), cfg, tea, teb)
             a = auc(np.asarray(logits), te["y"])
             history.append((i + 1, float(m["loss"]), a))
             print(f"round {i+1:6d} loss {float(m['loss']):.4f} "
                   f"AUC {a:.4f} local_steps {int(m.get('local_steps', 0))} "
                   f"w_mean {float(m.get('w_mean', 0)):.3f}", flush=True)
+    if depth:
+        rs, _ = pe.flush(rs)
+        state = pe.finalize(rs)
     wall = time.time() - t0
-    comm_s = args.rounds * wan_seconds(z_bytes)
+    # overlap-aware simulated wall-clock: split the measured compute into
+    # the exchange share (1 fresh update) and the local share (n_local
+    # updates); the clock serializes them with the wire at depth 0 and
+    # charges max(exchange, local) at depth >= 1
+    compute_per_round = wall / max(args.rounds, 1)
+    ex_c = compute_per_round / (1 + n_local)
+    loc_c = compute_per_round - ex_c
+    comm_s = DEFAULT_WAN.time_to_target(
+        args.rounds, up_bytes, down_bytes, exchange_compute_s=ex_c,
+        local_compute_s=loc_c, pipeline_depth=depth)
+    seq_s = DEFAULT_WAN.time_to_target(
+        args.rounds, up_bytes, down_bytes, exchange_compute_s=ex_c,
+        local_compute_s=loc_c, pipeline_depth=0)
     out = {
         "arch": args.arch, "protocol": args.protocol,
         "rounds": args.rounds, "final_auc": history[-1][2] if history else None,
         "comm_bytes": args.rounds * z_bytes,
-        "sim_wan_s": comm_s, "compute_wall_s": wall,
+        "uplink_bytes": args.rounds * up_bytes,
+        "downlink_bytes": args.rounds * down_bytes,
+        "sim_wan_s": comm_s, "sim_wan_sequential_s": seq_s,
+        "pipeline_depth": depth, "compute_wall_s": wall,
         "history": history,
     }
+    pipe_note = (f" (sequential would be {seq_s:.1f}s -> "
+                 f"{seq_s / comm_s:.2f}x overlap win)") if depth else ""
     print(f"[done] {args.protocol}: AUC={out['final_auc']:.4f} "
           f"comm={out['comm_bytes']/1e6:.1f}MB "
-          f"simWAN={comm_s:.1f}s wall={wall:.1f}s")
+          f"(up {up_bytes/1e3:.0f}KB/dn {down_bytes/1e3:.0f}KB per round) "
+          f"simWAN={comm_s:.1f}s wall={wall:.1f}s{pipe_note}")
     return out
 
 
@@ -137,7 +170,8 @@ def train_llm(args) -> Dict[str, Any]:
     task = llm_task(cfg)
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
                       weighting=not args.no_weighting,
-                      compression=args.compression)
+                      compression=args.compression,
+                      pipeline_depth=args.pipeline_depth)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = vfl.init_all(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
@@ -147,16 +181,29 @@ def train_llm(args) -> Dict[str, Any]:
     etask = engine.lift_two_party(task)
     state = engine.init_state(etask, engine.lift_two_party_params(params),
                               opt, celu_cfg, [_as_jax(ba0)], _as_jax(bb0))
-    rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
-                            donate=True)
+    depth = celu_cfg.pipeline_depth
+    if depth:
+        pe = engine.make_pipeline(etask, opt, celu_cfg, depth=depth,
+                                  local_steps=n_local)
+        rs = pe.init(state)
+    else:
+        rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
+                                donate=True)
     it = synth.token_batches(data, B, seed=args.seed)
     losses = []
     for i in range(args.rounds):
         bi, ba, bb = next(it)
-        state, m = rnd(state, [_as_jax(ba)], _as_jax(bb), bi)
+        if depth:
+            rs, m = pe.step(rs, [_as_jax(ba)], _as_jax(bb), bi)
+        else:
+            state, m = rnd(state, [_as_jax(ba)], _as_jax(bb), bi)
         losses.append(float(m["loss"]))
         if (i + 1) % max(1, args.rounds // 10) == 0:
             print(f"round {i+1:4d} loss {losses[-1]:.4f}", flush=True)
+    if depth:
+        rs, _ = pe.flush(rs)       # drain the last in-flight local scan
+        state = pe.finalize(rs)    # train_dlrm pattern: state holds the
+                                   # drained model for future extension
     print(f"[done] {args.arch} {args.protocol}: "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     return {"arch": args.arch, "losses": losses}
@@ -177,6 +224,11 @@ def main(argv=None):
     ap.add_argument("--compression", default="", metavar="CODEC",
                     help="wire codec for the simulated WAN (e.g. int8_topk;"
                          " see repro.core.compression.CODEC_SPECS)")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    choices=(0, 1),
+                    help="0 = sequential rounds; 1 = overlap round t+1's "
+                         "WAN exchange with round t's local updates "
+                         "(paper §4.1 two-worker pipeline)")
     ap.add_argument("--optimizer", default="adagrad")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)

@@ -1,0 +1,99 @@
+"""The simulated WAN clock: per-direction bandwidth + RTT, and the
+overlap-aware round latency model for the pipelined engine.
+
+The container has no real WAN, so benchmarks and the training driver model
+wall-clock from byte counts (paper §2.1: a 300 Mbps gateway-proxied link;
+the 213 ms example for an 8 MB exchange reproduces at the defaults).  Two
+fixes over the historical ``wan_seconds(nbytes)``:
+
+  * **Per-direction bandwidth.**  Cross-silo WAN links are routinely
+    asymmetric, and so are the engine's wires since the compressed
+    transport (sparse top-k sketches up, dense low-bit down) — so the
+    clock takes the transport's explicit ``uplink_bytes`` /
+    ``downlink_bytes`` split instead of one symmetric total.  Within a
+    round the two legs serialize (∇Z_i cannot leave Party B before Z_i
+    arrives), so wire time is ``up/bw_up + down/bw_down + 2·latency``.
+
+  * **Overlap-aware round latency.**  The sequential schedule
+    (``engine.make_round``) pays ``exchange_compute + wire + local``
+    per round; the depth-1 pipelined schedule
+    (``engine.PipelinedEngine``) hides the wire behind the local scan, so
+    a steady-state round costs ``max(exchange_compute + wire, local)``.
+    Benchmarks must charge the schedule they actually ran — the historical
+    model silently assumed full overlap for every protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class WANClock:
+    """Simulated cross-silo WAN link (paper §2.1 defaults: 300 Mbps each
+    direction, 10 ms one-way gateway latency)."""
+    up_bandwidth: float = 300e6 / 8      # bytes/s, feature party -> label
+    down_bandwidth: float = 300e6 / 8    # bytes/s, label party -> feature
+    latency: float = 0.01                # s, one way
+
+    @property
+    def rtt(self) -> float:
+        return 2.0 * self.latency
+
+    def up_seconds(self, nbytes: float) -> float:
+        """One uplink leg (Z_i), excluding latency."""
+        return nbytes / self.up_bandwidth
+
+    def down_seconds(self, nbytes: float) -> float:
+        """One downlink leg (∇Z_i), excluding latency."""
+        return nbytes / self.down_bandwidth
+
+    def wire_seconds(self, up_bytes: float, down_bytes: float) -> float:
+        """One full exchange: the legs serialize (the downlink cotangent
+        depends on the uplinked Z), plus one RTT of gateway latency."""
+        return self.up_seconds(up_bytes) + self.down_seconds(down_bytes) \
+            + self.rtt
+
+    def round_seconds(self, up_bytes: float, down_bytes: float, *,
+                      exchange_compute_s: float = 0.0,
+                      local_compute_s: float = 0.0,
+                      pipeline_depth: int = 0) -> float:
+        """Latency of ONE communication round under the given schedule.
+
+        Sequential (depth 0): the WAN stall serializes with both compute
+        phases.  Pipelined (depth >= 1): round t+1's exchange (compute +
+        wire) runs concurrently with round t's local updates, so the
+        steady-state round costs whichever worker is slower."""
+        wire = self.wire_seconds(up_bytes, down_bytes)
+        if pipeline_depth <= 0:
+            return exchange_compute_s + wire + local_compute_s
+        return max(exchange_compute_s + wire, local_compute_s)
+
+    def time_to_target(self, rounds: int, up_bytes: float,
+                       down_bytes: float, **kw) -> float:
+        """Overlap-aware simulated wall-clock for ``rounds`` rounds."""
+        return rounds * self.round_seconds(up_bytes, down_bytes, **kw)
+
+    def with_bandwidth(self, up: float, down: float = None) -> "WANClock":
+        return dataclasses.replace(self, up_bandwidth=up,
+                                   down_bandwidth=up if down is None
+                                   else down)
+
+
+DEFAULT_CLOCK = WANClock()
+
+
+def transport_round_updown(transport, z_shapes):
+    """Per-round (uplink, downlink) byte totals for a transport over the K
+    cut-tensor shapes — the per-direction split ``round_bytes`` sums."""
+    up = sum(transport.uplink_bytes(s) for s in z_shapes)
+    down = sum(transport.downlink_bytes(s) for s in z_shapes)
+    return up, down
+
+
+def wan_seconds(up_bytes: float, down_bytes: float, *,
+                clock: WANClock = DEFAULT_CLOCK) -> float:
+    """Seconds one exchange spends on the wire.  Both directions are
+    required — the historical one-argument form took the ROUND TOTAL and
+    would silently double-count if it defaulted here."""
+    return clock.wire_seconds(up_bytes, down_bytes)

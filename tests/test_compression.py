@@ -213,6 +213,106 @@ def test_identity_codec_send_is_bitwise_simwan():
         assert ident.round_bytes([(32, 8)]) == plain.round_bytes([(32, 8)])
 
 
+def test_plateau_ratio_schedule_steps_on_stall():
+    """The schedule loosens sparsity only when the loss stops improving:
+    ``patience`` consecutive non-improvements step the ratio ladder, an
+    improvement resets the stall counter, and the top rung is terminal."""
+    s = C.PlateauRatioSchedule(ratios=(0.1, 0.2, 0.4), patience=2,
+                               min_delta=0.01)
+    assert s.ratio == 0.1
+    assert s.update(1.00) is None           # first obs: improves inf
+    assert s.update(0.90) is None           # improving
+    assert s.update(0.895) is None          # stall 1 (< min_delta better)
+    assert s.update(0.896) == 0.2           # stall 2 -> step
+    assert s.ratio == 0.2
+    assert s.update(0.80) is None           # improvement resets
+    assert s.update(0.80) is None
+    assert s.update(0.80) == 0.4
+    # top rung: no further steps no matter the stall
+    for _ in range(5):
+        assert s.update(0.80) is None
+    assert s.ratio == 0.4
+
+
+def test_topk_ratio_schedule_hook():
+    """with_ratio / scheduled rebuild the codec around a new keep-ratio
+    (larger wire) while preserving the value codec and the hook."""
+    sched = C.PlateauRatioSchedule(ratios=(0.125, 0.5), patience=1,
+                                   min_delta=0.01)
+    codec = C.TopKCodec(0.125, value_codec=C.StochasticQuantCodec(8),
+                        ratio_schedule=sched)
+    shape = (256, 32)
+    b0 = codec.wire_bytes(shape, jnp.float32)
+    assert codec.scheduled(1.0) is codec            # improving: unchanged
+    loose = codec.scheduled(1.0)                    # stall 1 -> step
+    assert loose is not codec and loose.ratio == 0.5
+    assert isinstance(loose.value_codec, C.StochasticQuantCodec)
+    assert loose.ratio_schedule is sched
+    assert loose.wire_bytes(shape, jnp.float32) > b0
+    # wire accounting stays exact at the new ratio
+    p = loose.encode(jax.random.PRNGKey(0), _x(shape))
+    assert loose.wire_bytes(shape, jnp.float32) == C.payload_nbytes(p)
+    # schedule exhausted at the top rung: no more changes
+    assert loose.scheduled(1.0) is loose
+
+
+def test_compressed_transport_scheduled_rebuild():
+    """Transport-level hook: a fired up-codec schedule yields a NEW
+    transport with the loosened uplink, same downlink, and a residual
+    state structure that carries over."""
+    celu = CELUConfig()
+    sched = C.PlateauRatioSchedule(ratios=(0.125, 0.25), patience=1,
+                                   min_delta=0.01)
+    up = C.TopKCodec(0.125, value_codec=C.StochasticQuantCodec(8),
+                     ratio_schedule=sched)
+    down = C.StochasticQuantCodec(8)
+    tp = engine.CompressedWANTransport(celu, up, down)
+    assert tp.scheduled(1.0) is tp                  # improving
+    tp2 = tp.scheduled(1.0)                         # plateau -> rebuild
+    assert tp2 is not tp
+    assert tp2.codecs["up"].ratio == 0.25
+    assert tp2.codecs["down"] is down
+    assert tp2.uplink_bytes((64, 8)) > tp.uplink_bytes((64, 8))
+    assert tp2.downlink_bytes((64, 8)) == tp.downlink_bytes((64, 8))
+    z = [jnp.zeros((64, 8))]
+    assert jax.tree_util.tree_structure(tp.init_state(z)) == \
+        jax.tree_util.tree_structure(tp2.init_state(z))
+
+
+def test_topk_schedule_rung_syncs_to_codec_ratio():
+    """A codec built at a ratio above the ladder's first rung syncs the
+    schedule forward — a fired step must LOOSEN, never tighten — and a
+    ratio off the ladder is rejected."""
+    sched = C.PlateauRatioSchedule(ratios=(0.0625, 0.125, 0.25, 0.5),
+                                   patience=1, min_delta=0.01)
+    codec = C.TopKCodec(0.25, ratio_schedule=sched)
+    assert sched.ratio == 0.25
+    codec.scheduled(1.0)                            # improving (first obs)
+    stepped = codec.scheduled(1.0)                  # stall -> step
+    assert stepped.ratio == 0.5                     # up the ladder, not 0.125
+    with pytest.raises(ValueError, match="ladder"):
+        C.TopKCodec(0.3, ratio_schedule=C.PlateauRatioSchedule())
+
+
+def test_symmetric_transport_consults_shared_codec_once():
+    """With one codec object serving both directions, each loss
+    observation must hit the schedule ONCE (not once per direction), and
+    a fired step must keep the directions in lockstep."""
+    celu = CELUConfig()
+    sched = C.PlateauRatioSchedule(ratios=(0.125, 0.25), patience=2,
+                                   min_delta=0.01)
+    up = C.TopKCodec(0.125, ratio_schedule=sched)
+    tp = engine.CompressedWANTransport(celu, up)    # down aliases up
+    assert tp.codecs["down"] is tp.codecs["up"]
+    tp.scheduled(1.0)                               # improving
+    assert tp.scheduled(1.0) is tp                  # stall 1 of patience 2
+    assert sched.stall == 1                         # consulted once, not twice
+    tp2 = tp.scheduled(1.0)                         # stall 2 -> step
+    assert tp2 is not tp
+    assert tp2.codecs["up"] is tp2.codecs["down"]   # still in lockstep
+    assert tp2.codecs["up"].ratio == 0.25
+
+
 # --------------------------------------------------------------------------
 # Hypothesis sweeps (guarded like test_property.py)
 # --------------------------------------------------------------------------

@@ -1,0 +1,319 @@
+"""The pipelined exchange/local-update scheduler (paper §4.1, Fig. 4).
+
+Depth 0 must reproduce the sequential ``make_round`` BIT-FOR-BIT on the
+K=1 and K=3 golden traces (the staged stages are the same functions the
+fused round composes).  Depth 1 overlaps round t+1's exchange with round
+t's local updates: not bit-identical by design (one extra exchange of
+staleness), but it must train to the same quality, keep honest step
+counters, and respect the pipeline-staleness plumbing (workset validity
+window + Algorithm-2 weight attenuation).  The WANClock that prices the
+two schedules is tested alongside.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CELUConfig
+from repro.core import engine
+from repro.core.weighting import pipeline_attenuation
+from repro.core.workset import (workset_init, workset_insert,
+                                workset_sample)
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.models.tabular import DLRMConfig, make_dlrm
+from repro.optim import make_optimizer
+from repro.launch.wan import WANClock, transport_round_updown, wan_seconds
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "two_party_trace.json")
+GOLDEN3 = os.path.join(os.path.dirname(__file__), "golden",
+                       "three_party_trace.json")
+
+
+def _workload():
+    spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
+                       n_train=2048, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=32, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    return data, cfg
+
+
+def _run_pipelined(protocol, depth, rounds=20, compression=None):
+    """Drive the two-party golden workload through PipelinedEngine and
+    return golden-comparable rows (same schema as test_engine._run_trace)."""
+    data, cfg = _workload()
+    init_fn, task, predict = make_dlrm(cfg)
+    base = CELUConfig(R=3, W=3, xi_degrees=60.0)
+    ccfg, nloc = engine.preset_config(protocol, base)
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", 0.05)
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    kw = {} if compression is None else \
+        {"transport": engine.make_transport(ccfg, compression)}
+    etask = engine.lift_two_party(task)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, ccfg, [asj(ba)], asj(bb), **kw)
+    pe = engine.make_pipeline(etask, opt, ccfg, depth=depth,
+                              local_steps=nloc, **kw)
+    rs = pe.init(state)
+    it = aligned_batches(data["train"], 64, seed=0)
+    rows = []
+    for i in range(rounds):
+        bi, ba, bb = next(it)
+        rs, m = pe.step(rs, [asj(ba)], asj(bb), bi)
+        rows.append({"loss": float(np.float32(m["loss"])),
+                     "w_mean": float(np.float32(m["w_mean"])),
+                     "w_zero_frac": float(np.float32(m["w_zero_frac"])),
+                     "local_steps": int(m["local_steps"])})
+    rs, _ = pe.flush(rs)
+    st = pe.finalize(rs)
+    rows.append({"steps_a": int(st["steps"]["a"][0]),
+                 "steps_b": int(st["steps"]["b"]),
+                 "comm_rounds": int(st["comm_rounds"])})
+    return rows
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def golden3():
+    with open(GOLDEN3) as f:
+        return json.load(f)
+
+
+# --------------------------------------------------------------------------
+# Depth 0: the staged pipeline IS the sequential round
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("protocol", ["vanilla", "fedbcd", "celu"])
+def test_depth0_matches_golden_two_party(protocol, golden):
+    """dispatch -> merge -> local at depth 0 reproduces the seed
+    implementation bit-for-bit on the K=1 golden traces."""
+    got = _run_pipelined(protocol, depth=0)
+    assert got == golden[protocol]
+
+
+def test_depth0_matches_golden_two_party_identity_codec(golden):
+    got = _run_pipelined("celu", depth=0, compression="identity")
+    assert got == golden["celu"]
+
+
+def test_depth0_matches_golden_three_party(golden3):
+    """The K=3 multiparty workload through the depth-0 pipeline equals the
+    K=3 golden trace bit-for-bit."""
+    from test_engine import _three_party_workload
+    task, celu, opt, data, split, params = _three_party_workload()
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    bas, b = split(ba, bb)
+    state = engine.init_state(task, params, opt, celu, bas, b)
+    pe = engine.make_pipeline(task, opt, celu, depth=0)
+    rs = pe.init(state)
+    it = aligned_batches(data["train"], 64, seed=0)
+    rows = []
+    for i in range(20):
+        bi, ba, bb = next(it)
+        bas, b = split(ba, bb)
+        rs, m = pe.step(rs, bas, b, bi)
+        rows.append({"loss": float(np.float32(m["loss"])),
+                     "w_mean": float(np.float32(m["w_mean"])),
+                     "w_zero_frac": float(np.float32(m["w_zero_frac"])),
+                     "local_steps": int(m["local_steps"])})
+    st = pe.finalize(rs)
+    rows.append({"steps_a": [int(s) for s in st["steps"]["a"]],
+                 "steps_b": int(st["steps"]["b"]),
+                 "comm_rounds": int(st["comm_rounds"])})
+    assert rows == golden3["celu"]
+
+
+# --------------------------------------------------------------------------
+# Depth 1: overlap semantics
+# --------------------------------------------------------------------------
+def test_depth1_converges_to_depth0_quality():
+    """The depth-1 pipeline pays one exchange of extra staleness but must
+    reach the same loss region as the sequential schedule."""
+    seq = _run_pipelined("celu", depth=0, rounds=40)
+    pipe = _run_pipelined("celu", depth=1, rounds=40)
+    l_seq = [r["loss"] for r in seq[:-1]]
+    l_pipe = [r["loss"] for r in pipe[:-1]]
+    assert np.isfinite(l_pipe).all()
+    # both fall; the pipelined tail is within 10% of the sequential tail
+    assert np.mean(l_pipe[-10:]) < np.mean(l_pipe[:5])
+    assert np.mean(l_pipe[-10:]) <= 1.10 * np.mean(l_seq[-10:])
+
+
+def test_depth1_step_accounting():
+    """Every round still funds 1 fresh + up to R local updates; the flush
+    drains the last in-flight local scan."""
+    rounds, R = 20, 3
+    rows = _run_pipelined("celu", depth=1, rounds=rounds)
+    tail = rows[-1]
+    assert tail["comm_rounds"] == rounds
+    assert rounds < tail["steps_a"] <= rounds * (1 + R)
+    assert rounds < tail["steps_b"] <= rounds * (1 + R)
+    # round 0's local scan runs against an empty workset: a full bubble
+    assert rows[0]["local_steps"] == 0
+
+
+def test_depth1_compressed_transport_in_flight_residuals():
+    """Error feedback composes with the pipeline: the lossy wire's
+    residuals ride in the in-flight exchange and telescope as usual."""
+    rows = _run_pipelined("celu", depth=1, rounds=12,
+                          compression="int8_topk")
+    losses = [r["loss"] for r in rows[:-1]]
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+
+
+def test_scheduler_stage_protocol_errors():
+    """dispatch twice without merge, merge without dispatch, and finalize
+    with an exchange in flight are all scheduler bugs — loud ones."""
+    data, cfg = _workload()
+    init_fn, task, predict = make_dlrm(cfg)
+    ccfg = CELUConfig(R=2, W=2)
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", 0.05)
+    it = aligned_batches(data["train"], 64, seed=0)
+    bi, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    etask = engine.lift_two_party(task)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, ccfg, [asj(ba)], asj(bb))
+    pe = engine.make_pipeline(etask, opt, ccfg, depth=1)
+    rs = pe.init(state)
+    with pytest.raises(RuntimeError, match="no exchange in flight"):
+        pe.merge(rs)
+    rs = pe.dispatch(rs, [asj(ba)], asj(bb), bi)
+    with pytest.raises(RuntimeError, match="already in flight"):
+        pe.dispatch(rs, [asj(ba)], asj(bb), bi)
+    with pytest.raises(RuntimeError, match="still in flight"):
+        pe.finalize(rs)
+    rs, m = pe.merge(rs)
+    assert pe.finalize(rs)["comm_rounds"] == 1
+
+
+def test_invalid_depth_rejected():
+    data, cfg = _workload()
+    init_fn, task, _ = make_dlrm(cfg)
+    opt = make_optimizer("adagrad", 0.05)
+    with pytest.raises(ValueError, match="depth"):
+        engine.make_pipeline(engine.lift_two_party(task), opt,
+                             CELUConfig(), depth=2)
+
+
+# --------------------------------------------------------------------------
+# Pipeline-staleness plumbing
+# --------------------------------------------------------------------------
+def _entry(v):
+    return {"z": jnp.full((4, 2), float(v)), "dz": jnp.full((4, 2), 1.0)}
+
+
+def test_pipeline_staleness_tightens_validity_window():
+    """At staleness s the oldest s ring slots are retired early: a full
+    W-slot table offers only W-s valid draws per cycle."""
+    W, R = 4, 8
+    ws = workset_init(W, _entry(0))
+    for t in range(W):
+        ws = workset_insert(ws, _entry(t), t)
+    for s, expected in ((0, W), (1, W - 1), (2, W - 2)):
+        valid = 0
+        w2 = dict(ws)
+        for _ in range(W):
+            w2, e, _, v = workset_sample(w2, R, "round_robin",
+                                         pipeline_staleness=s)
+            valid += int(v)
+        assert valid == expected, (s, valid)
+
+
+def test_pipeline_attenuation_properties():
+    w = jnp.asarray([0.0, 0.5, 0.9, 1.0], jnp.float32)
+    out = np.asarray(pipeline_attenuation(w, 1))
+    assert out[0] == 0.0                     # rejected stays rejected
+    assert out[3] == 1.0                     # no measured drift: no discount
+    assert np.all(out <= np.asarray(w) + 1e-7)   # monotone discount
+    np.testing.assert_allclose(out[1], 0.25, rtol=1e-6)
+    # staleness 0 is the identity
+    np.testing.assert_array_equal(np.asarray(pipeline_attenuation(w, 0)),
+                                  np.asarray(w))
+
+
+def test_weighted_cotangent_staleness_fused_matches_reference():
+    """The fused kernel's post-scale composition of the pipeline discount
+    equals the reference path."""
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    dz = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    w_f, cot_f = engine.weighted_cotangent(a, s, dz, 0.5, fused=True,
+                                           pipeline_staleness=1)
+    w_r, cot_r = engine.weighted_cotangent(a, s, dz, 0.5, fused=False,
+                                           pipeline_staleness=1)
+    np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r),
+                               rtol=3e-7, atol=3e-7)
+    np.testing.assert_allclose(np.asarray(cot_f), np.asarray(cot_r),
+                               rtol=3e-6, atol=3e-6)
+    # the discounted weight multiplies the cotangent exactly once:
+    # cot == w^(1+s) * dz on surviving rows
+    alive = np.asarray(w_r) > 0
+    np.testing.assert_allclose(
+        np.asarray(cot_r)[alive],
+        (np.asarray(w_r)[:, None] * np.asarray(dz))[alive],
+        rtol=3e-6, atol=3e-6)
+
+
+# --------------------------------------------------------------------------
+# The WANClock (overlap-aware simulated time)
+# --------------------------------------------------------------------------
+def test_wanclock_per_direction_bandwidth():
+    clock = WANClock(up_bandwidth=1e6, down_bandwidth=2e6, latency=0.01)
+    assert clock.up_seconds(1e6) == pytest.approx(1.0)
+    assert clock.down_seconds(1e6) == pytest.approx(0.5)
+    assert clock.wire_seconds(1e6, 1e6) == pytest.approx(1.52)
+
+
+def test_wanclock_overlap_round_latency():
+    clock = WANClock(up_bandwidth=1e6, down_bandwidth=1e6, latency=0.0)
+    kw = dict(exchange_compute_s=0.1, local_compute_s=0.9)
+    seq = clock.round_seconds(5e5, 5e5, pipeline_depth=0, **kw)
+    pipe = clock.round_seconds(5e5, 5e5, pipeline_depth=1, **kw)
+    assert seq == pytest.approx(0.1 + 1.0 + 0.9)
+    assert pipe == pytest.approx(max(0.1 + 1.0, 0.9))
+    assert seq / pipe == pytest.approx(2.0 / 1.1)
+    # compute-bound regime: the wire hides entirely behind the local scan
+    pipe2 = clock.round_seconds(5e4, 5e4, pipeline_depth=1,
+                                exchange_compute_s=0.1,
+                                local_compute_s=5.0)
+    assert pipe2 == pytest.approx(5.0)
+
+
+def test_wanclock_paper_geometry_example():
+    """Paper §2.1: an 8 MB fp32 exchange over 300 Mbps + gateway latency
+    is ~244 ms — the historical 213 ms example plus the modelled RTT."""
+    clock = WANClock()
+    t = clock.wire_seconds(4096 * 256 * 4, 4096 * 256 * 4)
+    assert 0.20 < t < 0.26
+
+
+def test_wan_seconds_wrapper_and_transport_split():
+    celu = CELUConfig()
+    tp = engine.make_transport(celu, "int8_topk")
+    up, down = transport_round_updown(tp, [(256, 32)])
+    assert up == tp.uplink_bytes((256, 32))
+    assert down == tp.downlink_bytes((256, 32))
+    assert up != down
+    clock = WANClock(up_bandwidth=1e6, down_bandwidth=1e6, latency=0.0)
+    assert wan_seconds(up, down, clock=clock) == \
+        pytest.approx((up + down) / 1e6)
+    # both directions are required (the historical 1-arg call shape took
+    # the round TOTAL — a silent default would double-count it)
+    with pytest.raises(TypeError):
+        wan_seconds(1e6, clock=clock)

@@ -62,6 +62,67 @@ def test_consecutive_always_freshest():
         assert int(bidx) == 2
 
 
+def test_uniform_sampling_is_fair():
+    """Paper §3.2's fair-sampling claim for the "uniform" strategy: over
+    many independent keys every valid slot is drawn with equal frequency
+    (chi-square goodness-of-fit against the uniform distribution)."""
+    W, R, draws = 5, 10 ** 9, 4000
+    ws = workset_init(W, _entry(0))
+    for t in range(W):
+        ws = workset_insert(ws, _entry(t), t)
+    def draw(key):
+        _, _, bidx, valid = workset_sample(ws, R, "uniform", rng=key)
+        return bidx, valid
+    bidxs, valids = jax.vmap(draw)(
+        jax.random.split(jax.random.PRNGKey(0), draws))
+    assert bool(jnp.all(valids))
+    counts = np.bincount(np.asarray(bidxs), minlength=W)
+    # chi-square statistic vs the uniform null; df = W-1 = 4, and the
+    # 99.9th percentile of chi2(4) is 18.47 — a fair sampler stays under
+    expected = draws / W
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert counts.min() > 0
+    assert chi2 < 18.47, (chi2, counts.tolist())
+
+
+def test_uniform_sampling_partially_filled_workset():
+    """With only some slots alive, uniform draws come ONLY from the alive
+    ones (empty and exhausted slots are never sampled), and an all-dead
+    table yields invalid (no-op) draws."""
+    W, R = 6, 2
+    ws = workset_init(W, _entry(0))
+    for t in range(2):                       # slots 0,1 filled; 2-5 empty
+        ws = workset_insert(ws, _entry(t), t)
+    def draws_on(table, n):
+        def draw(key):
+            _, _, bidx, valid = workset_sample(table, R, "uniform", rng=key)
+            return bidx, valid
+        return jax.vmap(draw)(
+            jax.random.split(jax.random.PRNGKey(0), n))
+
+    bidxs, valids = draws_on(ws, 300)
+    assert bool(jnp.all(valids))
+    assert set(np.asarray(bidxs).tolist()) == {0, 1}
+    # exhaust slot 1: uniform must then only ever return slot 0
+    ws2 = dict(ws)
+    ws2["use_count"] = ws["use_count"].at[1].set(R)
+    bidxs, valids = draws_on(ws2, 50)
+    assert bool(jnp.all(valids))
+    assert set(np.asarray(bidxs).tolist()) == {0}
+    # fully dead table: the draw is a bubble, not a crash
+    ws3 = dict(ws2)
+    ws3["use_count"] = jnp.full((W,), R, jnp.int32)
+    _, _, _, valid = workset_sample(ws3, R, "uniform",
+                                    rng=jax.random.PRNGKey(0))
+    assert not bool(valid)
+
+
+def test_uniform_sampling_requires_rng():
+    ws = workset_init(2, _entry(0))
+    with pytest.raises(ValueError, match="rng"):
+        workset_sample(ws, 2, "uniform")
+
+
 def test_use_count_exhaustion():
     """Entries die after R uses; strict cycling turns empty/dead slots into
     no-op "bubble" draws (paper §3.2)."""

@@ -110,6 +110,11 @@ params, opt_state, ws = init_pod_state(jax.random.PRNGKey(0), mesh, opt,
                                         n_fields=4, vocab=32, batch=16, W=2,
                                         z_dim=8, hidden=16)
 rnd = make_pod_round(mesh, opt, R=2, cos_xi=0.5)
+# the ppermute-overlapped variant: local scan issued between the up- and
+# the consumption of the permuted cut tensors (paper 4.1 two-worker)
+params_p, opt_state_p, ws_p = jax.tree_util.tree_map(
+    lambda a: a, (params, opt_state, ws))
+rnd_p = make_pod_round(mesh, opt, R=2, cos_xi=0.5, pipeline_depth=1)
 rng = np.random.default_rng(0)
 for i in range(3):
     x = rng.integers(0, 32, size=(2, 16, 4), dtype=np.int32)
@@ -117,8 +122,12 @@ for i in range(3):
                   (rng.random(16) < 0.5).astype(np.float32)])
     params, opt_state, ws, loss = rnd(params, opt_state, ws,
                                       jnp.asarray(x), jnp.asarray(y))
+    params_p, opt_state_p, ws_p, loss_p = rnd_p(params_p, opt_state_p, ws_p,
+                                                jnp.asarray(x),
+                                                jnp.asarray(y))
 assert np.isfinite(float(loss[1])), loss
-print("POD_OK", float(loss[1]))
+assert np.isfinite(float(loss_p[1])), loss_p
+print("POD_OK", float(loss[1]), float(loss_p[1]))
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
