@@ -43,6 +43,7 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
                  fused_weighting: bool = True,
                  compression: Optional[str] = None,
                  pipeline_depth: int = 0,
+                 cache_dtype: str = "float32", cache_fused: bool = True,
                  transport=None, transport_hook=None
                  ) -> Dict[str, object]:
     """Train with one protocol preset of the K-party round engine; return
@@ -59,7 +60,8 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     init_fn, task, predict = make_dlrm(cfg)
     base = CELUConfig(R=R, W=W, xi_degrees=xi, weighting=weighting,
                       sampling=sampling or "round_robin",
-                      pipeline_depth=pipeline_depth)
+                      pipeline_depth=pipeline_depth,
+                      cache_dtype=cache_dtype, cache_fused=cache_fused)
     ccfg, nloc = engine.preset_config(protocol, base)
     if sampling is not None and protocol == "celu":
         ccfg = dataclasses.replace(ccfg, sampling=sampling)
@@ -134,8 +136,14 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
         state = drv.finalize(rs)
     up_b = sum(transport.uplink_bytes(s) for s in z_shapes)
     down_b = sum(transport.downlink_bytes(s) for s in z_shapes)
+    from repro.core.workset import QUANT_KEYS, workset_nbytes
+    tables = list(state["ws"]["a"]) + [state["ws"]["b"]]
     return {
         "protocol": protocol, "R": R, "W": W, "xi": xi,
+        "cache_dtype": cache_dtype, "cache_fused": cache_fused,
+        "cache_bytes": sum(workset_nbytes(w) for w in tables),
+        "stat_cache_bytes": sum(workset_nbytes(w, QUANT_KEYS)
+                                for w in tables),
         "weighting": weighting, "curve": curve,
         "final_auc": curve[-1][1], "best_auc": max(a for _, a in curve),
         "rounds_to_target": reached, "wall_s": time.time() - t0,

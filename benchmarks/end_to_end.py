@@ -123,6 +123,21 @@ def run_one(dataset: str, model: str, protocols=("vanilla", "fedbcd",
         # the same celu config under the depth-1 two-worker pipeline:
         # round t+1's exchange overlaps round t's local updates, so each
         # round costs max(exchange, local) instead of their sum
+        # the int8-at-rest workset cache: same wire, ~4x smaller table and
+        # a single-pass sample kernel — must reach the same target as the
+        # fp32 cache (Algorithm-2 weights tolerate the SR quantization)
+        c8 = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
+                          rounds=rounds, lr=LR, eval_every=50,
+                          target_auc=target, cache_dtype="int8")
+        c8_rounds = c8["rounds_to_target"] or rounds
+        rows["celu(R=5,int8cache)"] = (c8_rounds,
+                                       sim_time(c8_rounds, zb, 5.0),
+                                       c8["final_auc"])
+        csv_row(f"# int8 workset cache: {c8['stat_cache_bytes']} stat "
+                f"bytes vs {ce['stat_cache_bytes']} fp32 "
+                f"({ce['stat_cache_bytes'] / c8['stat_cache_bytes']:.2f}x "
+                f"smaller), target reached at round "
+                f"{c8_rounds} (fp32: {rows['celu(R=5)'][0]})")
         cp = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
                           rounds=rounds, lr=LR, eval_every=50,
                           target_auc=target, pipeline_depth=1)

@@ -1,0 +1,151 @@
+"""Local-update hot-path benchmark -> ``results/BENCH_local_scan.json``.
+
+The local scan (the R staleness-weighted updates per party per round) is
+the dominant on-device loop once the wire is compressed (PR 2) and
+pipelined (PR 3): it executes ``n_local x (K+1)`` model updates per
+communication round against the workset cache.  This block measures it in
+isolation — the jitted ``local_scan`` stage, not the full round — across
+the cache configurations:
+
+  * ``fp32_unfused``  — fp32 table, materialize-then-weight (the PR-3
+    hot path: the baseline the megakernel replaces);
+  * ``fp32_fused``    — fp32 table through the gather→weight megakernel
+    (bit-identical numerics, one HBM pass);
+  * ``int8_fused``    — int8-at-rest table through the megakernel
+    (one pass over ~4x fewer bytes).
+
+Each variant reports the measured wall per local-scan call (CPU —
+indicative only; the Pallas kernels run interpreted here), the table's
+actual device bytes (total and cut-statistics-only), and the analytic
+roofline counters (``workset.sample_hbm_bytes``): HBM bytes one party-A
+sample moves, and per round.  The JSON is emitted so the perf trajectory
+is tracked PR-over-PR (CI uploads it next to coverage).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from .common import csv_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "BENCH_local_scan.json")
+
+VARIANTS = (
+    ("fp32_unfused", "float32", False),
+    ("fp32_fused", "float32", True),
+    ("int8_fused", "int8", True),
+)
+
+B, Z_DIM, W, R = 256, 32, 5, 5
+FILL_ROUNDS = 5          # fill the table before timing the scan alone
+TIMED_CALLS = 10
+
+
+def _bench_one(cache_dtype: str, cache_fused: bool):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import CELUConfig
+    from repro.core import engine
+    from repro.core.workset import (QUANT_KEYS, sample_hbm_bytes,
+                                    workset_nbytes)
+    from repro.data import synthetic as synth
+    from repro.models.tabular import DLRMConfig, make_dlrm
+    from repro.optim import make_optimizer
+
+    import dataclasses
+    spec = dataclasses.replace(synth.TABULAR_SPECS["criteo"], vocab=128,
+                               n_train=4096, n_test=512)
+    data = synth.make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", spec.fields_a, spec.fields_b, vocab=128,
+                     embed_dim=8, z_dim=Z_DIM, hidden=(64, 32))
+    init_fn, task, _ = make_dlrm(cfg)
+    celu = CELUConfig(R=R, W=W, cache_dtype=cache_dtype,
+                      cache_fused=cache_fused)
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", 0.01)
+    etask = engine.lift_two_party(task)
+    it = synth.aligned_batches(data["train"], B, seed=0)
+    _, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    tp = engine.make_transport(celu)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, celu, [asj(ba)], asj(bb), transport=tp)
+    rnd = engine.make_round(etask, opt, celu, transport=tp)
+    it = synth.aligned_batches(data["train"], B, seed=0)
+    for _ in range(FILL_ROUNDS):
+        bi, ba, bb = next(it)
+        state, _ = rnd(state, [asj(ba)], asj(bb), bi)
+
+    # the isolated jitted local-scan stage (what the megakernel targets)
+    _, _, local_scan = engine._make_stages(etask, opt, celu, n_local=R,
+                                           tp=tp, fused=True)
+    scan = jax.jit(local_scan)
+    out, _ = scan(state)
+    jax.block_until_ready(out["params"]["b"])
+    t0 = time.time()
+    for _ in range(TIMED_CALLS):
+        out, _ = scan(state)
+    jax.block_until_ready(out["params"]["b"])
+    scan_ms = (time.time() - t0) / TIMED_CALLS * 1e3
+
+    tables = list(state["ws"]["a"]) + [state["ws"]["b"]]
+    z_like = jnp.zeros((B, Z_DIM), jnp.float32)
+    entry = {"z": z_like, "dz": z_like}
+    step_bytes = sample_hbm_bytes(entry, cache_dtype, fused=cache_fused)
+    # per round: R steps x (party A fused-or-not + party B, which always
+    # materializes its entry for the loss)
+    b_bytes = sample_hbm_bytes(entry, cache_dtype, fused=False)
+    return {
+        "cache_dtype": cache_dtype,
+        "cache_fused": cache_fused,
+        "local_scan_ms": round(scan_ms, 3),
+        "local_step_ms": round(scan_ms / (2 * R), 4),   # K+1 = 2 parties
+        "cache_bytes": sum(workset_nbytes(w) for w in tables),
+        "stat_cache_bytes": sum(workset_nbytes(w, QUANT_KEYS)
+                                for w in tables),
+        "sample_hbm_bytes_per_step": step_bytes,
+        "hbm_bytes_per_round": R * (step_bytes + b_bytes),
+    }
+
+
+def main():
+    csv_row("# local_scan hot path (B=%d z=%d W=%d R=%d; CPU wall is"
+            " indicative — Pallas interpreted)" % (B, Z_DIM, W, R))
+    csv_row("variant", "local_step_ms", "cache_bytes", "stat_cache_bytes",
+            "sample_hbm_B/step", "hbm_B/round")
+    variants = {}
+    for name, cd, fused in VARIANTS:
+        r = _bench_one(cd, fused)
+        variants[name] = r
+        csv_row(name, r["local_step_ms"], r["cache_bytes"],
+                r["stat_cache_bytes"], r["sample_hbm_bytes_per_step"],
+                r["hbm_bytes_per_round"])
+    ratios = {
+        "stat_cache_bytes_fp32_over_int8":
+            round(variants["fp32_fused"]["stat_cache_bytes"]
+                  / variants["int8_fused"]["stat_cache_bytes"], 3),
+        "sample_hbm_bytes_unfused_fp32_over_fused_int8":
+            round(variants["fp32_unfused"]["sample_hbm_bytes_per_step"]
+                  / variants["int8_fused"]["sample_hbm_bytes_per_step"], 3),
+        "sample_hbm_bytes_unfused_fp32_over_fused_fp32":
+            round(variants["fp32_unfused"]["sample_hbm_bytes_per_step"]
+                  / variants["fp32_fused"]["sample_hbm_bytes_per_step"], 3),
+    }
+    out = {
+        "geometry": {"B": B, "z_dim": Z_DIM, "W": W, "R": R, "K": 1,
+                     "timed_calls": TIMED_CALLS},
+        "variants": variants,
+        "ratios": ratios,
+    }
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    csv_row("# ratios: " + ", ".join(f"{k}={v}" for k, v in ratios.items()))
+    csv_row(f"# wrote {os.path.normpath(RESULTS)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -82,8 +82,10 @@ def bench_adagrad():
 
 def bench_protocol_round():
     """Per-round step cost of the engine's protocol presets (CPU wall, WDL
-    small).  The celu row runs twice: fused Algorithm-2 hot path (Pallas
-    weighted-cotangent) vs the pure-jnp reference composition."""
+    small).  The celu row runs across the hot-path tiers: fused
+    Algorithm-2 weighting (Pallas weighted-cotangent) vs the pure-jnp
+    reference, the cache-dtype axis (fp32 / bf16 / int8 at-rest workset),
+    and the unfused sample path (materialize-then-weight)."""
     from .common import default_workload, run_protocol
     spec, data, cfg = default_workload("wdl", "criteo")
     for name, proto_name, kw in (
@@ -91,12 +93,19 @@ def bench_protocol_round():
             ("fedbcd", "fedbcd", {"R": 5}),
             ("celu", "celu", {"R": 5, "W": 5}),
             ("celu_ref_weighting", "celu",
-             {"R": 5, "W": 5, "fused_weighting": False})):
+             {"R": 5, "W": 5, "fused_weighting": False}),
+            ("celu_unfused_sample", "celu",
+             {"R": 5, "W": 5, "cache_fused": False}),
+            ("celu_bf16_cache", "celu",
+             {"R": 5, "W": 5, "cache_dtype": "bfloat16"}),
+            ("celu_int8_cache", "celu",
+             {"R": 5, "W": 5, "cache_dtype": "int8"})):
         r = run_protocol(proto_name, data, cfg, rounds=30, eval_every=30,
                          **kw)
         csv_row(f"round_wall_{name}",
                 f"{r['wall_s'] / 30 * 1e3:.1f}ms",
-                f"z_bytes={r['z_bytes_per_round']}")
+                f"z_bytes={r['z_bytes_per_round']}",
+                f"stat_cache_bytes={r['stat_cache_bytes']}")
 
 
 def main():

@@ -118,9 +118,34 @@ def report_perf_variants():
                     f"{r['memory']['temp_bytes'] / 1e9:.1f}")
 
 
+def cache_accounting():
+    """Workset-cache roofline at the paper's deployment geometry (W=5,
+    B=4096, z=256): at-rest bytes of the cut-statistic cache per party and
+    the HBM bytes one party-A local-update sample moves, per cache dtype
+    and sample path (analytic counters — ``workset.sample_hbm_bytes``)."""
+    import jax.numpy as jnp
+    from repro.core.workset import QUANT_KEYS, sample_hbm_bytes, \
+        workset_init, workset_nbytes
+
+    W, B, F = 5, 4096, 256
+    z = jnp.zeros((B, F), jnp.float32)
+    entry = {"z": z, "dz": z}
+    csv_row("# workset cache roofline (paper geometry W=5 B=4096 z=256; "
+            "per party)")
+    csv_row("cache_dtype", "cache_MB", "sample_hbm_KB_unfused",
+            "sample_hbm_KB_fused")
+    for cd in ("float32", "bfloat16", "int8"):
+        nb = workset_nbytes(workset_init(W, entry, cache_dtype=cd),
+                            QUANT_KEYS)
+        csv_row(cd, f"{nb / 1e6:.1f}",
+                f"{sample_hbm_bytes(entry, cd, fused=False) / 1e3:.0f}",
+                f"{sample_hbm_bytes(entry, cd, fused=True) / 1e3:.0f}")
+
+
 def main():
     report_table()
     report_perf_variants()
+    cache_accounting()
     pod_collective_accounting()
 
 

@@ -12,12 +12,15 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=("ablation", "end_to_end", "roofline", "micro", "beyond"))
+                    choices=("ablation", "end_to_end", "roofline", "micro",
+                             "beyond", "local_scan"))
     args = ap.parse_args()
 
-    from . import ablation, beyond, end_to_end, microbench, roofline
+    from . import (ablation, beyond, end_to_end, local_scan, microbench,
+                   roofline)
     blocks = {
         "micro": microbench.main,
+        "local_scan": local_scan.main,     # emits BENCH_local_scan.json
         "roofline": roofline.main,
         "end_to_end": end_to_end.main,
         "ablation": ablation.main,

@@ -193,6 +193,19 @@ class CELUConfig:
     # "" = plain SimWANTransport; see core/compression.py CODEC_SPECS for
     # names ("int8", "int4", "topk", "int8_topk", "up/down" pairs, ...).
     compression: str = ""
+    # BEYOND-PAPER: at-rest precision of the workset cache (the z/dz
+    # subtrees of every ring buffer; core/workset.py storage codec).
+    # "float32" stores the statistics verbatim (bit-identical to the
+    # historical table — golden-pinned); "bfloat16" halves the footprint;
+    # "int8" stores SR-quantized codes + one fp32 scale per instance row
+    # (~4x smaller; unbiased through Algorithm-2's cosine — see
+    # tests/test_workset_cache.py tolerance sweeps).
+    cache_dtype: str = "float32"
+    # Route party-A local updates through the fused gather→dequant→weight
+    # megakernel (kernels/fused_sample.py): the sampled ring rows are read
+    # once, in storage precision, straight into the weighting pass — no
+    # HBM-side entry copy.  False pins the materializing reference path.
+    cache_fused: bool = True
     # Paper §4.1 (Fig. 4): the two-worker pipeline depth.  0 = sequential
     # rounds (exchange then local updates, the WAN stall serialized with
     # compute); 1 = round t+1's exchange overlaps round t's local updates

@@ -62,6 +62,20 @@ one VMEM pass; bit-exact with the reference composition).  Pass
 ``fused_weighting=False`` to pin the pure-jnp reference path (the parity
 oracle).
 
+**Workset cache precision & the fused sample path.**  The ring buffers
+behind the R-per-round local updates are built with
+``CELUConfig.cache_dtype`` (``core.workset`` storage codec): "float32"
+(verbatim, golden-pinned), "bfloat16", or "int8" (SR-quantized codes +
+one fp32 scale per instance row — ~4x smaller; the table dominates
+training-state memory at realistic W).  With ``CELUConfig.cache_fused``
+(default on) each party-A local update consumes the sampled slot through
+the gather→dequant→weight megakernel (``kernels/fused_sample.py``,
+scalar-prefetched slot index): the stale ⟨Z, ∇Z⟩ rows are read once, in
+storage precision, straight into the cosine/threshold/cotangent pass —
+no full-precision entry copy is ever materialized in HBM.  The fp32
+fused path is bit-identical to materialize-then-weight (the golden traces
+run it); ``cache_fused=False`` pins the materializing reference.
+
 The whole round is ONE jitted function (exchange + ``lax.scan`` over local
 steps) so XLA's latency-hiding scheduler can overlap the cross-party
 transfer with the local-update chain — the SPMD analogue of the paper's
@@ -79,7 +93,8 @@ import jax.numpy as jnp
 from ..configs.base import CELUConfig
 from ..optim import Optimizer, apply_updates
 from .weighting import instance_weights, pipeline_attenuation, xi_to_cos
-from .workset import workset_init, workset_insert, workset_sample
+from .workset import (CastLeaf, QuantLeaf, workset_draw, workset_entry,
+                      workset_init, workset_insert, workset_sample)  # noqa: F401  (workset_sample re-exported: historical import site)
 
 
 class KPartyTask(NamedTuple):
@@ -307,6 +322,18 @@ def staleness_weights(ad_hoc, stale, cos_xi: float, *,
     return instance_weights(ad_hoc, stale, cos_xi)
 
 
+def _attenuate_post_scale(w, cot, staleness: int):
+    """Compose the depth-s pipeline discount onto a fused kernel's
+    (w, w ⊙ ∇Z): -> (w^(1+s), w^s ⊙ (w ⊙ ∇Z)) — the same law as
+    :func:`repro.core.weighting.pipeline_attenuation`, applied so the
+    discounted weight still multiplies the cotangent exactly once."""
+    if staleness:
+        extra = w ** staleness
+        w = w * extra
+        cot = cot * _bcast(extra, cot)
+    return w, cot
+
+
 def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
                        fused: bool = True, pipeline_staleness: int = 0
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -314,18 +341,13 @@ def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
 
     ``fused=True`` runs the single-VMEM-pass Pallas kernel; the reference
     composition is its bit-exact oracle.  ``pipeline_staleness`` composes
-    with the fused kernel as a cheap post-scale: the kernel's (w, w ⊙ ∇Z)
-    becomes (w^(1+s), w^s ⊙ (w ⊙ ∇Z)), so the discounted weight still
-    multiplies the cotangent exactly once."""
+    with the fused kernel as a cheap post-scale (see
+    :func:`_attenuate_post_scale`)."""
     if fused and _fusable(ad_hoc):
         from ..kernels import ops as kops
         w, cot = kops.weighted_cotangent(ad_hoc, stale,
                                          dz.astype(jnp.float32), cos_xi)
-        if pipeline_staleness:
-            extra = w ** pipeline_staleness
-            w = w * extra
-            cot = cot * _bcast(extra, cot)
-        return w, cot
+        return _attenuate_post_scale(w, cot, pipeline_staleness)
     w = instance_weights(ad_hoc, stale, cos_xi)
     if pipeline_staleness:
         w = pipeline_attenuation(w, pipeline_staleness)
@@ -335,6 +357,25 @@ def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
 # --------------------------------------------------------------------------
 # Local-update gradients (Algorithm 2) — shared by every protocol shape
 # --------------------------------------------------------------------------
+def _grad_a_tail(z_new, vjp, stale_z, stale_dz, cos_xi: float, *,
+                 weighting: bool, fused: bool, mask,
+                 pipeline_staleness: int):
+    """Shared tail of the feature-party local update once the stale
+    statistics are materialized: InsWeight + cotangent scale + backward."""
+    if weighting:
+        w, cot = weighted_cotangent(z_new, stale_z, stale_dz, cos_xi,
+                                    fused=fused,
+                                    pipeline_staleness=pipeline_staleness)
+    else:
+        w = jnp.ones((z_new.shape[0],), jnp.float32)
+        cot = _bcast(w, z_new) * stale_dz.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask
+        cot = cot * mask
+    (g,) = vjp(cot.astype(z_new.dtype))
+    return g, w
+
+
 def local_grad_a(forward_a, params_a, entry, cos_xi: float, *,
                  weighting: bool = True, fused: bool = True, mask=None,
                  pipeline_staleness: int = 0):
@@ -345,18 +386,59 @@ def local_grad_a(forward_a, params_a, entry, cos_xi: float, *,
     features}.  ``mask`` (scalar 0/1, optional) zeroes the whole draw (a
     round-robin bubble).  Returns (grads, weights)."""
     z_new, vjp = jax.vjp(lambda p: forward_a(p, entry["batch"]), params_a)
-    if weighting:
-        w, cot = weighted_cotangent(z_new, entry["z"], entry["dz"], cos_xi,
-                                    fused=fused,
-                                    pipeline_staleness=pipeline_staleness)
-    else:
-        w = jnp.ones((z_new.shape[0],), jnp.float32)
-        cot = _bcast(w, z_new) * entry["dz"].astype(jnp.float32)
-    if mask is not None:
-        w = w * mask
-        cot = cot * mask
-    (g,) = vjp(cot.astype(z_new.dtype))
-    return g, w
+    return _grad_a_tail(z_new, vjp, entry["z"], entry["dz"], cos_xi,
+                        weighting=weighting, fused=fused, mask=mask,
+                        pipeline_staleness=pipeline_staleness)
+
+
+def _ring_view(store):
+    """Storage leaf -> the raw full-precision-or-bf16 ring array (QuantLeaf
+    handled separately by the q8 kernel)."""
+    return store.v if isinstance(store, CastLeaf) else store
+
+
+def _fused_ring_sample(slot, z_new, z_store, dz_store, cos_xi: float):
+    """One-VMEM-pass sample: gather slot from the (possibly quantized)
+    ring, dequantize, row-cosine vs the ad-hoc z, threshold, scale the
+    stale cotangent.  -> (weights (B,), fp32 weighted cotangent)."""
+    from ..kernels import ops as kops
+    if isinstance(z_store, QuantLeaf):
+        return kops.fused_gather_weight_q8(
+            slot, z_new.astype(jnp.float32), z_store.q, z_store.scale,
+            dz_store.q, dz_store.scale, cos_xi)
+    return kops.fused_gather_weight(slot, z_new, _ring_view(z_store),
+                                    _ring_view(dz_store), cos_xi)
+
+
+def local_grad_a_cached(forward_a, params_a, ws, slot, cos_xi: float, *,
+                        weighting: bool = True, fused: bool = True,
+                        cache_fused: bool = True, mask=None,
+                        pipeline_staleness: int = 0):
+    """Feature-party local update straight off the workset ring — the
+    single-pass hot path.  Only the party's OWN cached features are
+    gathered (the forward needs them); the cut statistics ⟨Z, ∇Z⟩ are
+    consumed by the fused gather→dequant→weight megakernel
+    (``kernels/fused_sample.py``) without ever materializing a
+    full-precision entry copy in HBM.  ``cache_fused=False`` (or an
+    unfusable batch tiling, or ``weighting``/``fused`` off) falls back to
+    materialize-then-weight — the bit-exact reference composition.
+    Returns (grads, weights)."""
+    buf = ws["buf"]
+    batch = jax.tree_util.tree_map(lambda b: b[slot], buf["batch"])
+    z_new, vjp = jax.vjp(lambda p: forward_a(p, batch), params_a)
+    if weighting and fused and cache_fused and _fusable(z_new):
+        w, cot = _fused_ring_sample(slot, z_new, buf["z"], buf["dz"],
+                                    cos_xi)
+        w, cot = _attenuate_post_scale(w, cot, pipeline_staleness)
+        if mask is not None:
+            w = w * mask
+            cot = cot * mask
+        (g,) = vjp(cot.astype(z_new.dtype))
+        return g, w
+    entry = workset_entry(ws, slot)
+    return _grad_a_tail(z_new, vjp, entry["z"], entry["dz"], cos_xi,
+                        weighting=weighting, fused=fused, mask=mask,
+                        pipeline_staleness=pipeline_staleness)
 
 
 def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
@@ -411,10 +493,12 @@ def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
           for i in range(K)]
     z_like = [jnp.zeros(z.shape, z.dtype) for z in zs]
     ws_a = [workset_init(celu.W, {"z": z_like[i], "dz": z_like[i],
-                                  "batch": batches_a[i]})
+                                  "batch": batches_a[i]},
+                         cache_dtype=celu.cache_dtype)
             for i in range(K)]
     ws_b = workset_init(celu.W, {"z": list(z_like), "dz": list(z_like),
-                                 "batch": batch_b})
+                                 "batch": batch_b},
+                        cache_dtype=celu.cache_dtype)
     return {
         "params": {"a": list(params["a"]), "b": params["b"]},
         "opt": {"a": [opt.init(p) for p in params["a"]],
@@ -523,13 +607,18 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             new_oas.append(oa)
         upd_b, ob = opt.update(fresh["g_b"], state["opt"]["b"], pb)
 
+        # rounding noise for quantized-at-rest caches (unused — and DCE'd —
+        # by the fp32 table); per-party keys keep the SR noise independent
+        ins_rng = jax.random.fold_in(jax.random.PRNGKey(0xCE1),
+                                     state["comm_rounds"])
         ws_a = [workset_insert(state["ws"]["a"][i],
                                {"z": zs[i], "dz": dzs[i],
-                                "batch": batches_a[i]}, batch_idx)
+                                "batch": batches_a[i]}, batch_idx,
+                               rng=jax.random.fold_in(ins_rng, i))
                 for i in range(K)]
         ws_b = workset_insert(state["ws"]["b"],
                               {"z": zs, "dz": dzs, "batch": batch_b},
-                              batch_idx)
+                              batch_idx, rng=jax.random.fold_in(ins_rng, K))
         new_state = {
             "params": {"a": new_pas, "b": apply_updates(pb, upd_b)},
             "opt": {"a": new_oas, "b": ob},
@@ -565,13 +654,15 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             for i in range(K):
                 ki = None if draw_key is None \
                     else jax.random.fold_in(draw_key, i)
-                wsas[i], e, _, valid = workset_sample(
+                wsas[i], slot, _, valid = workset_draw(
                     wsas[i], celu.R, celu.sampling, rng=ki,
                     pipeline_staleness=s_pipe)
                 vf = valid.astype(jnp.float32)
-                g, w = local_grad_a(task.forward_a, pas[i], e, cos_xi,
-                                    weighting=celu.weighting, fused=fused,
-                                    mask=vf, pipeline_staleness=s_pipe)
+                g, w = local_grad_a_cached(
+                    task.forward_a, pas[i], wsas[i], slot, cos_xi,
+                    weighting=celu.weighting, fused=fused,
+                    cache_fused=celu.cache_fused, mask=vf,
+                    pipeline_staleness=s_pipe)
                 upd, oas[i] = opt.update(g, oas[i], pas[i])
                 upd = jax.tree_util.tree_map(lambda u: u * vf, upd)
                 pas[i] = apply_updates(pas[i], upd)
@@ -581,9 +672,10 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
 
             kb = None if draw_key is None \
                 else jax.random.fold_in(draw_key, K)
-            wsb, e, _, valid = workset_sample(
+            wsb, slot_b, _, valid = workset_draw(
                 wsb, celu.R, celu.sampling, rng=kb,
                 pipeline_staleness=s_pipe)
+            e = workset_entry(wsb, slot_b)
             vf = valid.astype(jnp.float32)
             g, w = local_grad_b(task.loss_b, pb, e, cos_xi,
                                 weighting=celu.weighting, fused=fused,
@@ -945,8 +1037,10 @@ def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
                 t = ws["time"][0]
                 n_alive = jnp.minimum(t, W)
                 slot_j = jnp.mod(cursor, jnp.maximum(n_alive, 1))
-                zs = ws["z"][0, slot_j]
-                dzs = ws["dz"][0, slot_j]
+                # decode the at-rest ring precision (bf16 cache upcasts;
+                # the fp32 ring is untouched — bit-identical)
+                zs = ws["z"][0, slot_j].astype(jnp.float32)
+                dzs = ws["dz"][0, slot_j].astype(jnp.float32)
                 xs = ws["x"][0, slot_j]
                 ys_ = ws["y"][0, slot_j]
                 tower_j = jax.tree_util.tree_map(lambda a: a[0],
@@ -1033,9 +1127,9 @@ def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
         z_cache = jnp.where(is_a, z_mine, z_a_at_b)
         dz_cache = jnp.where(is_a, dz_back, dz_a)
         ws["z"] = jax.lax.dynamic_update_index_in_dim(
-            ws["z"], z_cache[None], slot, 1)
+            ws["z"], z_cache[None].astype(ws["z"].dtype), slot, 1)
         ws["dz"] = jax.lax.dynamic_update_index_in_dim(
-            ws["dz"], dz_cache[None], slot, 1)
+            ws["dz"], dz_cache[None].astype(ws["dz"].dtype), slot, 1)
         ws["x"] = jax.lax.dynamic_update_index_in_dim(
             ws["x"], xb[None], slot, 1)
         ws["y"] = jax.lax.dynamic_update_index_in_dim(

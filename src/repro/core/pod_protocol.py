@@ -111,12 +111,22 @@ def make_pod_round(mesh: Mesh, opt: Optimizer, *, R: int, cos_xi: float,
 
 def init_pod_state(rng, mesh: Mesh, opt: Optimizer, *, n_fields: int,
                    vocab: int, batch: int, W: int, embed_dim: int = 16,
-                   z_dim: int = 64, hidden: int = 128):
+                   z_dim: int = 64, hidden: int = 128,
+                   cache_dtype: str = "float32"):
+    """``cache_dtype`` sets the at-rest precision of the party-stacked
+    z/dz rings ("float32" — bit-identical to the historical pod state —
+    or "bfloat16", halving the cache; the round casts on read/write).
+    The int8 storage codec is host-sim-engine only for now — the pod ring
+    keeps a plain dtype so it shards as one leaf over the mesh."""
+    if cache_dtype not in ("float32", "bfloat16"):
+        raise ValueError(f"pod cache_dtype must be float32|bfloat16, "
+                         f"got {cache_dtype!r}")
     params = stacked_wdl_init(rng, n_fields, vocab, embed_dim, z_dim, hidden)
     opt_state = opt.init(params)
+    cd = jnp.dtype(cache_dtype)
     ws = {
-        "z": jnp.zeros((2, W, batch, z_dim), jnp.float32),
-        "dz": jnp.zeros((2, W, batch, z_dim), jnp.float32),
+        "z": jnp.zeros((2, W, batch, z_dim), cd),
+        "dz": jnp.zeros((2, W, batch, z_dim), cd),
         "x": jnp.zeros((2, W, batch, n_fields), jnp.int32),
         "y": jnp.zeros((2, W, batch), jnp.float32),
         "time": jnp.zeros((2,), jnp.int32),

@@ -23,6 +23,43 @@ Round-robin sampling (paper §3.2): a cursor walks slots in insertion order;
 a slot cannot be re-sampled within ``W-1`` local steps by construction.
 Consecutive sampling (FedBCD / the ``W=1`` degenerate case) always returns
 the most recently inserted slot.
+
+Storage codec (quantized-at-rest cache)
+---------------------------------------
+At realistic capacities the table dominates training-state memory, and the
+wire statistics it caches tolerate aggressive quantization (Compressed-VFL
+— the same result the compressed transport exploits on the wire).
+``workset_init(..., cache_dtype=...)`` selects the at-rest precision of
+the cut-statistic subtrees (the ``z``/``dz`` entry keys, ``QUANT_KEYS``):
+
+  * ``"float32"`` — store leaves as-is (bit-identical to the historical
+    table; the golden traces pin this);
+  * ``"bfloat16"`` — leaves stored as bf16 (:class:`CastLeaf`), halving
+    the footprint; decode upcasts back to the original dtype;
+  * ``"int8"`` — leaves stored as int8 codes with one fp32 absmax scale
+    per *instance row* (:class:`QuantLeaf`), quantized on insert with the
+    fused Pallas stochastic-rounding kernel (``ops.quantize_stochastic``,
+    unbiased: ``E[q * s] == x``).  ~4x smaller.  The row is the tile
+    because Algorithm-2's cosine is a row reduction — row-granular scales
+    let the fused sample kernel gather + dequantize + weight in one VMEM
+    pass without re-tiling.
+
+Cache memory math (per party, ``z`` + ``dz``, scales included):
+
+    cache_bytes(fp32) = 2 * W * B * F * 4
+    cache_bytes(int8) = 2 * W * B * (F + 4)        # codes + fp32 row scale
+
+    geometry                          fp32        int8      ratio
+    paper  W=5 B=4096 F=256         41.9 MB     10.6 MB     3.94x
+    llm    W=5 B=256  S=64 d=128    83.9 MB     21.2 MB     3.94x
+    bench  W=5 B=256  F=32           1.3 MB      0.4 MB     3.56x
+
+``insert`` and ``sample`` auto-detect the table's storage form — only
+``workset_init`` takes ``cache_dtype``.  ``workset_sample`` returns
+decoded (full-precision) entries; the fused sample path in
+``repro.core.engine`` skips that materialization entirely by handing the
+ring + slot to the gather→dequant→weight megakernel
+(``kernels/fused_sample.py``).
 """
 from __future__ import annotations
 
@@ -33,13 +70,202 @@ import jax.numpy as jnp
 
 INT_MIN = -(2 ** 30)
 
+# Entry keys holding the exchanged cut statistics — the subtrees the
+# storage codec quantizes.  Everything else (own features, labels) is
+# cached verbatim.
+QUANT_KEYS = ("z", "dz")
 
-def workset_init(W: int, entry_example: Dict[str, Any]) -> Dict[str, Any]:
+CACHE_DTYPES = ("float32", "bfloat16", "int8")
+
+
+# --------------------------------------------------------------------------
+# Storage containers (registered pytree nodes: traced codes/scales as
+# children, static shape/dtype as aux data — jit/scan/shard-safe)
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+class QuantLeaf:
+    """int8-at-rest storage of one cached statistic leaf.
+
+    ``q`` holds signed int8 codes of the leaf flattened to (B, F) rows
+    (table level: (W, B, F)), ``scale`` one fp32 absmax scale per row
+    ((B,) / (W, B)).  ``shape``/``dtype`` remember the original per-entry
+    leaf so :meth:`dequant` can restore it."""
+
+    __slots__ = ("q", "scale", "shape", "dtype")
+
+    def __init__(self, q, scale, shape, dtype):
+        self.q = q
+        self.scale = scale
+        self.shape = tuple(shape)
+        self.dtype = jnp.dtype(dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, str(self.dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    def dequant(self):
+        """Entry-level (q (B, F), scale (B,)) -> the original leaf."""
+        x = self.q.astype(jnp.float32) * self.scale[:, None]
+        return x.reshape(self.shape).astype(self.dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+class CastLeaf:
+    """bf16-at-rest storage of one cached statistic leaf (a plain dtype
+    cast; ``dtype`` remembers the original for decode)."""
+
+    __slots__ = ("v", "dtype")
+
+    def __init__(self, v, dtype):
+        self.v = v
+        self.dtype = jnp.dtype(dtype)
+
+    def tree_flatten(self):
+        return (self.v,), (str(self.dtype),)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    def decode(self):
+        return self.v.astype(self.dtype)
+
+
+def _is_store(x) -> bool:
+    return isinstance(x, (QuantLeaf, CastLeaf))
+
+
+def _row_shape(a) -> Tuple[int, int]:
+    """Leaf (B, ...) -> (rows B, flattened row length F)."""
+    B = int(a.shape[0])
+    F = 1
+    for s in a.shape[1:]:
+        F *= int(s)
+    return B, max(F, 1)
+
+
+def _quantize_rows(rng, x2d):
+    """(B, F) fp32 -> (codes int8 (B, F), fp32 row scales (B,)); the fused
+    Pallas SR quantizer when the grid can tile B, its bit-identical jnp
+    oracle otherwise."""
+    from ..kernels.quantize import BLOCK_T
+    B = x2d.shape[0]
+    u = jax.random.uniform(rng, x2d.shape, jnp.float32)
+    if B % min(BLOCK_T, B) == 0:
+        from ..kernels import ops as kops
+        return kops.quantize_stochastic(x2d, u, 127)
+    from ..kernels.ref import quantize_sr_ref
+    return quantize_sr_ref(x2d, u, 127)
+
+
+def _empty_store(W: int, a, cache_dtype: str):
+    """Table-level storage for one quantizable leaf."""
+    if cache_dtype == "float32":
+        return jnp.zeros((W,) + a.shape, a.dtype)
+    if cache_dtype == "bfloat16":
+        return CastLeaf(jnp.zeros((W,) + a.shape, jnp.bfloat16), a.dtype)
+    B, F = _row_shape(a)
+    return QuantLeaf(jnp.zeros((W, B, F), jnp.int8),
+                     jnp.zeros((W, B), jnp.float32), a.shape, a.dtype)
+
+
+def _encode_leaf(store, x, rng):
+    """One entry leaf -> the storage form matching the table's leaf (the
+    table's shape/dtype metadata wins, like the historical ``astype`` on
+    insert coerced the entry to the buffer dtype)."""
+    if isinstance(store, QuantLeaf):
+        B, F = _row_shape(x)
+        q, scale = _quantize_rows(rng, x.reshape(B, F).astype(jnp.float32))
+        return QuantLeaf(q, scale, store.shape, store.dtype)
+    if isinstance(store, CastLeaf):
+        return CastLeaf(x.astype(jnp.bfloat16), store.dtype)
+    return x
+
+
+def _decode_leaf(leaf):
+    if isinstance(leaf, QuantLeaf):
+        return leaf.dequant()
+    if isinstance(leaf, CastLeaf):
+        return leaf.decode()
+    return leaf
+
+
+def decode_entry(entry):
+    """Storage-form entry -> full-precision entry (identity for fp32)."""
+    return jax.tree_util.tree_map(_decode_leaf, entry, is_leaf=_is_store)
+
+
+def workset_nbytes(ws: Dict[str, Any], keys=None) -> int:
+    """Actual device bytes held by the table's ring buffer (codes, scales
+    and raw leaves; excludes the O(W) clock vectors).  ``keys`` restricts
+    the count to those entry keys — e.g. ``QUANT_KEYS`` for the cut
+    statistics the storage codec compresses (the party's raw-feature cache
+    is stored verbatim regardless)."""
+    buf = ws["buf"] if keys is None else \
+        {k: v for k, v in ws["buf"].items() if k in keys}
+    return sum(int(leaf.nbytes)
+               for leaf in jax.tree_util.tree_leaves(buf))
+
+
+def sample_hbm_bytes(entry_example: Dict[str, Any],
+                     cache_dtype: str = "float32",
+                     fused: bool = True) -> int:
+    """Roofline counter: HBM bytes moved by ONE party-A local-update
+    sample over the cut statistics — gather from the ring, dequantize,
+    row-cosine against the ad-hoc statistics, cotangent scale.  Excludes
+    the forward/backward over the party model (identical across paths).
+
+    Unfused: the sampled ``z``/``dz`` rows are gathered into a
+    full-precision entry copy (read stored + write fp32), then the
+    weighting kernel re-reads ad-hoc + both copies and writes w + cot.
+    Fused: one pass — read stored z/dz + ad-hoc, write w + cot."""
+    if cache_dtype not in CACHE_DTYPES:
+        raise ValueError(f"cache_dtype must be one of {CACHE_DTYPES}, "
+                         f"got {cache_dtype!r}")
+    itemsize = {"float32": 4, "bfloat16": 2, "int8": 1}[cache_dtype]
+    z_leaves = jax.tree_util.tree_leaves(entry_example.get("z", {}))
+    dz_leaves = jax.tree_util.tree_leaves(entry_example.get("dz", {}))
+    total = 0
+    for a in z_leaves + dz_leaves:           # the ring reads, at rest
+        B, F = _row_shape(a)
+        total += B * F * itemsize + (B * 4 if cache_dtype == "int8" else 0)
+    for a in z_leaves:                       # per ⟨z, dz⟩ pair:
+        B, F = _row_shape(a)
+        f32 = B * F * 4
+        if fused:
+            # one pass: + read ad-hoc, write cot + w
+            total += f32 + f32 + B * 4
+        else:
+            # gather writes a fp32 entry copy (z + dz), the weighting
+            # kernel re-reads it plus the ad-hoc stats, writes cot + w
+            total += 2 * f32 + (3 * f32) + f32 + B * 4
+    return total
+
+
+# --------------------------------------------------------------------------
+# Table ops
+# --------------------------------------------------------------------------
+def workset_init(W: int, entry_example: Dict[str, Any], *,
+                 cache_dtype: str = "float32") -> Dict[str, Any]:
     """Create an empty table.  ``entry_example`` is a pytree of arrays with
-    the per-batch shapes (e.g. {"z_a": (B,S,d), "dz_a": (B,S,d),
-    "x": ..., "y": ...}); the table stacks a leading W axis."""
-    buf = jax.tree_util.tree_map(
-        lambda a: jnp.zeros((W,) + a.shape, a.dtype), entry_example)
+    the per-batch shapes (e.g. {"z": (B,S,d), "dz": (B,S,d), "batch": ...});
+    the table stacks a leading W axis.  ``cache_dtype`` selects the at-rest
+    storage of the ``z``/``dz`` subtrees (see module docstring); everything
+    else is cached verbatim."""
+    if cache_dtype not in CACHE_DTYPES:
+        raise ValueError(f"cache_dtype must be one of {CACHE_DTYPES}, "
+                         f"got {cache_dtype!r}")
+    buf = {}
+    for k, sub in entry_example.items():
+        if k in QUANT_KEYS and cache_dtype != "float32":
+            buf[k] = jax.tree_util.tree_map(
+                lambda a: _empty_store(W, a, cache_dtype), sub)
+        else:
+            buf[k] = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((W,) + a.shape, a.dtype), sub)
     return {
         "buf": buf,
         "insert_time": jnp.full((W,), INT_MIN, jnp.int32),
@@ -51,15 +277,31 @@ def workset_init(W: int, entry_example: Dict[str, Any]) -> Dict[str, Any]:
 
 
 def workset_insert(ws: Dict[str, Any], entry: Dict[str, Any],
-                   batch_idx) -> Dict[str, Any]:
-    """Insert a fresh entry at ring slot ``time mod W``; bump the clock."""
+                   batch_idx, *, rng=None) -> Dict[str, Any]:
+    """Insert a fresh entry at ring slot ``time mod W``; bump the clock.
+
+    The entry is encoded into the table's storage form first (int8
+    stochastic rounding / bf16 cast / verbatim — auto-detected from the
+    ring).  ``rng`` seeds the rounding noise for quantized tables; when
+    omitted a key is derived from the table clock (deterministic)."""
     W = ws["insert_time"].shape[0]
     t = ws["time"]
     slot = jnp.mod(t, W)
+
+    stores, treedef = jax.tree_util.tree_flatten(ws["buf"],
+                                                 is_leaf=_is_store)
+    values = treedef.flatten_up_to(entry)
+    if rng is None and any(isinstance(s, QuantLeaf) for s in stores):
+        rng = jax.random.fold_in(jax.random.PRNGKey(0xCE1), t)
+    encoded = treedef.unflatten([
+        _encode_leaf(s, v, None if rng is None
+                     else jax.random.fold_in(rng, i))
+        for i, (s, v) in enumerate(zip(stores, values))])
+
     buf = jax.tree_util.tree_map(
         lambda b, e: jax.lax.dynamic_update_index_in_dim(b, e.astype(b.dtype),
                                                          slot, 0),
-        ws["buf"], entry)
+        ws["buf"], encoded)
     return {
         "buf": buf,
         "insert_time": ws["insert_time"].at[slot].set(t),
@@ -87,20 +329,21 @@ def _valid_mask(ws: Dict[str, Any], R: int,
     return alive
 
 
-def workset_sample(ws: Dict[str, Any], R: int, strategy: str, *,
-                   rng=None, pipeline_staleness: int = 0
-                   ) -> Tuple[Dict[str, Any], Dict[str, Any], jnp.ndarray,
-                              jnp.ndarray]:
-    """Draw one entry for a local update.
+def workset_draw(ws: Dict[str, Any], R: int, strategy: str, *,
+                 rng=None, pipeline_staleness: int = 0
+                 ) -> Tuple[Dict[str, Any], jnp.ndarray, jnp.ndarray,
+                            jnp.ndarray]:
+    """Pick one slot for a local update WITHOUT materializing the entry.
 
     strategy: "round_robin" — advance the cursor to the next alive slot
     (uniform over the table); "consecutive" — always the freshest slot
     (FedBCD); "uniform" — an independent uniform draw over the alive slots
     (requires ``rng``; the paper's §3.2 fair-sampling property holds per
-    draw instead of per W-cycle).  Returns (new_ws, entry, batch_idx,
+    draw instead of per W-cycle).  Returns (new_ws, slot, batch_idx,
     valid) where ``valid`` is a bool scalar (False -> caller must no-op
-    the update).
-    """
+    the update).  The fused sample path hands ``slot`` straight to the
+    gather→dequant→weight megakernel; :func:`workset_sample` keeps the
+    materializing form."""
     W = ws["insert_time"].shape[0]
     alive = _valid_mask(ws, R, pipeline_staleness)
     if strategy == "consecutive":
@@ -130,7 +373,6 @@ def workset_sample(ws: Dict[str, Any], R: int, strategy: str, *,
     else:
         raise ValueError(strategy)
 
-    entry = jax.tree_util.tree_map(lambda b: b[slot], ws["buf"])
     new_ws = dict(ws)
     new_ws["use_count"] = ws["use_count"].at[slot].add(
         jnp.where(valid, 1, 0))
@@ -138,11 +380,34 @@ def workset_sample(ws: Dict[str, Any], R: int, strategy: str, *,
         new_ws["cursor"] = new_cursor          # advance even on a bubble
     else:
         new_ws["cursor"] = jnp.where(valid, new_cursor, ws["cursor"])
-    return new_ws, entry, ws["batch_idx"][slot], valid
+    return new_ws, slot, ws["batch_idx"][slot], valid
 
 
-def workset_stats(ws: Dict[str, Any], R: int) -> Dict[str, jnp.ndarray]:
-    alive = _valid_mask(ws, R)
+def workset_entry(ws: Dict[str, Any], slot) -> Dict[str, Any]:
+    """Materialize (gather + decode) the entry at ``slot``."""
+    raw = jax.tree_util.tree_map(lambda b: b[slot], ws["buf"])
+    return decode_entry(raw)
+
+
+def workset_sample(ws: Dict[str, Any], R: int, strategy: str, *,
+                   rng=None, pipeline_staleness: int = 0
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any], jnp.ndarray,
+                              jnp.ndarray]:
+    """Draw one entry for a local update: :func:`workset_draw` plus the
+    materialized (decoded) entry.  Returns (new_ws, entry, batch_idx,
+    valid)."""
+    new_ws, slot, batch_idx, valid = workset_draw(
+        ws, R, strategy, rng=rng, pipeline_staleness=pipeline_staleness)
+    return new_ws, workset_entry(ws, slot), batch_idx, valid
+
+
+def workset_stats(ws: Dict[str, Any], R: int,
+                  pipeline_staleness: int = 0) -> Dict[str, jnp.ndarray]:
+    """Table health counters.  ``pipeline_staleness`` must match the
+    schedule the table serves: a depth-D pipeline retires the oldest D
+    slots early (see :func:`_valid_mask`), so reporting at staleness 0
+    would overcount ``n_alive`` under pipelining."""
+    alive = _valid_mask(ws, R, pipeline_staleness)
     return {
         "n_alive": jnp.sum(alive),
         "total_uses": jnp.sum(jnp.where(alive, ws["use_count"], 0)),

@@ -1,0 +1,135 @@
+"""Fused workset-sample kernel: gather-from-ring → dequantize → row-cosine
+→ threshold → cotangent-scale in ONE VMEM pass (the local-update hot path,
+paper Algorithm 2 over the §3.1 cache).
+
+The unfused composition materializes a full-precision copy of the sampled
+ring entry in HBM (``tree_map(lambda b: b[slot], buf)``) and then the
+weighting kernel re-reads it — two-plus HBM passes over the cut
+statistics, all at fp32.  This kernel reads the sampled rows STRAIGHT out
+of the (possibly int8-at-rest) ring and writes only the weights and the
+weighted cotangent: one pass, and with the quantized cache over ~4x fewer
+bytes.  It runs ``n_local x K`` times per communication round — the
+dominant on-device loop once the wire is compressed and pipelined.
+
+Layout decisions for TPU:
+  * the dynamic ring slot rides in as a SCALAR-PREFETCH operand
+    (``pltpu.PrefetchScalarGridSpec``): the BlockSpec index maps consume it
+    before the body runs, so only the selected slot's (BLOCK_B, F) blocks
+    are ever DMA'd — the gather happens at the block-fetch level, no
+    HBM-side entry copy exists;
+  * rows (instances) on the sublane axis, the flattened feature dim on the
+    lane axis, NOT tiled (same choice as ``cosine_weight.py``: VFL cut
+    tensors are small per instance, a full row fits VMEM) — so the
+    int8 cache's one-fp32-scale-per-row dequantizes as a lane broadcast;
+  * fp32 compute regardless of storage dtype (int8/bf16 upcast in VMEM);
+    the fp32-ring variant reproduces ``cosine_weight._kernel`` bit-for-bit
+    (same reduction order over the same blocks — the golden traces pin
+    this through the engine).
+
+Oracles: ``kernels.ref.fused_sample_ref`` / ``fused_sample_q8_ref``.
+B not divisible by BLOCK_B falls back to the reference composition in the
+engine (same rule as the weighting kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .cosine_weight import BLOCK_B, EPS
+
+
+def _weight_and_scale(a, z, dz, thresh):
+    """Shared body: row cosine floored at thresh, cotangent scale.
+    All operands (BLOCK_B, F) fp32 in VMEM."""
+    num = jnp.sum(a * z, axis=1)             # lane reduction -> (BLOCK_B,)
+    den = jnp.sqrt(jnp.sum(a * a, axis=1) * jnp.sum(z * z, axis=1))
+    w = num / jnp.maximum(den, EPS)
+    w = jnp.where(w < thresh, 0.0, w)
+    return w, dz * w[:, None]
+
+
+def _kernel_f32(slot_ref, a_ref, z_ref, dz_ref, thresh_ref, w_ref, out_ref):
+    del slot_ref                             # consumed by the index maps
+    a = a_ref[...].astype(jnp.float32)       # (BLOCK_B, F)
+    z = z_ref[0].astype(jnp.float32)         # (1, BLOCK_B, F) ring block
+    dz = dz_ref[0].astype(jnp.float32)
+    w, cot = _weight_and_scale(a, z, dz, thresh_ref[0])
+    w_ref[...] = w
+    out_ref[...] = cot
+
+
+def _kernel_q8(slot_ref, a_ref, zq_ref, zs_ref, dzq_ref, dzs_ref,
+               thresh_ref, w_ref, out_ref):
+    del slot_ref
+    a = a_ref[...].astype(jnp.float32)
+    z = zq_ref[0].astype(jnp.float32) * zs_ref[0][:, None]    # dequant
+    dz = dzq_ref[0].astype(jnp.float32) * dzs_ref[0][:, None]
+    w, cot = _weight_and_scale(a, z, dz, thresh_ref[0])
+    w_ref[...] = w
+    out_ref[...] = cot
+
+
+def _call(kernel, slot, operands, ring_specs, B, F, bb, interpret):
+    """Common pallas_call plumbing: scalar-prefetch slot + (bb, F) ad-hoc
+    blocks + per-ring slot-indexed blocks + (1,) threshold."""
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((bb, F), lambda i, s: (i, 0))] + ring_specs +
+                 [pl.BlockSpec((1,), lambda i, s: (0,))],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i, s: (i,)),
+            pl.BlockSpec((bb, F), lambda i, s: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B, F), jnp.float32),
+        ],
+        interpret=interpret,
+    )(slot, *operands)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_sample_2d(slot, ad_hoc, z_ring, dz_ring, cos_xi, *,
+                    interpret: bool = True):
+    """Full-precision ring.  slot: (1,) int32; ad_hoc: (B, F); z_ring /
+    dz_ring: (W, B, F).  -> (weights (B,) f32, weighted cotangent (B, F)
+    f32) for the entry at ``slot``."""
+    W, B, F = z_ring.shape
+    bb = min(BLOCK_B, B)
+    assert B % bb == 0, (B, bb)
+    thresh = jnp.asarray([cos_xi], jnp.float32)
+    ring = [
+        pl.BlockSpec((1, bb, F), lambda i, s: (s[0], i, 0)),
+        pl.BlockSpec((1, bb, F), lambda i, s: (s[0], i, 0)),
+    ]
+    return _call(_kernel_f32, slot, (ad_hoc, z_ring, dz_ring, thresh),
+                 ring, B, F, bb, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_sample_q8_2d(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi, *,
+                       interpret: bool = True):
+    """int8-at-rest ring.  zq / dzq: (W, B, F) int8 codes, zscale /
+    dzscale: (W, B) fp32 per-row scales.  Same contract as
+    :func:`fused_sample_2d`; dequantization happens in VMEM."""
+    W, B, F = zq.shape
+    bb = min(BLOCK_B, B)
+    assert B % bb == 0, (B, bb)
+    thresh = jnp.asarray([cos_xi], jnp.float32)
+    ring = [
+        pl.BlockSpec((1, bb, F), lambda i, s: (s[0], i, 0)),
+        pl.BlockSpec((1, bb), lambda i, s: (s[0], i)),
+        pl.BlockSpec((1, bb, F), lambda i, s: (s[0], i, 0)),
+        pl.BlockSpec((1, bb), lambda i, s: (s[0], i)),
+    ]
+    return _call(_kernel_q8, slot, (ad_hoc, zq, zscale, dzq, dzscale,
+                                    thresh), ring, B, F, bb, interpret)

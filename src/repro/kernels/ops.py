@@ -16,9 +16,15 @@ import jax.numpy as jnp
 from . import cosine_weight as _cw
 from . import flash_attention as _fa
 from . import fused_adagrad as _ag
+from . import fused_sample as _fs
 from . import quantize as _qz
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "") == ""
+
+
+def _slot1(slot):
+    """Scalar slot index -> the (1,) int32 scalar-prefetch operand."""
+    return jnp.asarray(slot, jnp.int32).reshape((1,))
 
 
 def cosine_weight(ad_hoc, stale, cos_xi):
@@ -38,6 +44,32 @@ def weighted_cotangent(ad_hoc, stale, dz, cos_xi):
                                   stale.reshape(B, -1), dz.reshape(B, -1),
                                   jnp.float32(cos_xi), interpret=INTERPRET)
     return w, out.reshape(shape)
+
+
+def fused_gather_weight(slot, ad_hoc, z_ring, dz_ring, cos_xi):
+    """Fused workset sample over a full-precision (fp32/bf16) ring:
+    gather slot → row-cosine vs ad_hoc → threshold → cotangent scale in
+    one VMEM pass.  slot: scalar int32; ad_hoc: (B, ...); z_ring/dz_ring:
+    (W,) + ad_hoc.shape.  -> (weights (B,) f32, weighted cotangent f32 in
+    ad_hoc's shape)."""
+    B = ad_hoc.shape[0]
+    W = z_ring.shape[0]
+    w, cot = _fs.fused_sample_2d(_slot1(slot), ad_hoc.reshape(B, -1),
+                                 z_ring.reshape(W, B, -1),
+                                 dz_ring.reshape(W, B, -1),
+                                 jnp.float32(cos_xi), interpret=INTERPRET)
+    return w, cot.reshape(ad_hoc.shape)
+
+
+def fused_gather_weight_q8(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi):
+    """Fused workset sample over the int8-at-rest ring (gather → dequant →
+    cosine → threshold → cotangent scale, one VMEM pass).  zq/dzq:
+    (W, B, F) int8, zscale/dzscale: (W, B) fp32 row scales."""
+    B = ad_hoc.shape[0]
+    w, cot = _fs.fused_sample_q8_2d(_slot1(slot), ad_hoc.reshape(B, -1),
+                                    zq, zscale, dzq, dzscale,
+                                    jnp.float32(cos_xi), interpret=INTERPRET)
+    return w, cot.reshape(ad_hoc.shape)
 
 
 def quantize_stochastic(x, u, levels):

@@ -33,6 +33,31 @@ def weighted_cotangent_ref(ad_hoc, stale, dz, cos_xi: float):
     return (dz.astype(jnp.float32) * w).astype(dz.dtype)
 
 
+def fused_sample_ref(slot, ad_hoc, z_ring, dz_ring, cos_xi: float):
+    """Gather-from-ring + InsWeight + cotangent scale over a
+    full-precision ring (the fused-sample kernel's oracle).
+
+    slot: scalar int; ad_hoc (B, ...); z_ring / dz_ring (W,) + ad_hoc
+    shape.  -> (weights (B,) f32, weighted cotangent f32, ad_hoc's
+    shape)."""
+    B = ad_hoc.shape[0]
+    z = z_ring[slot].reshape(B, -1)
+    dz = dz_ring[slot].reshape(B, -1).astype(jnp.float32)
+    w = cosine_weight_ref(ad_hoc.reshape(B, -1), z, cos_xi)
+    return w, (dz * w[:, None]).reshape(ad_hoc.shape)
+
+
+def fused_sample_q8_ref(slot, ad_hoc, zq, zscale, dzq, dzscale,
+                        cos_xi: float):
+    """int8-ring oracle: dequantize the sampled rows (codes * per-row
+    scale), then the fp32 composition of :func:`fused_sample_ref`."""
+    z = zq[slot].astype(jnp.float32) * zscale[slot][:, None]
+    dz = dzq[slot].astype(jnp.float32) * dzscale[slot][:, None]
+    B = ad_hoc.shape[0]
+    w = cosine_weight_ref(ad_hoc.reshape(B, -1), z, cos_xi)
+    return w, (dz * w[:, None]).reshape(ad_hoc.shape)
+
+
 def quantize_sr_ref(x, u, levels):
     """Per-tile absmax scale + stochastic rounding to signed integer codes
     (the compressed-wire encode hot path).

@@ -72,7 +72,9 @@ def train_dlrm(args) -> Dict[str, Any]:
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
                       weighting=not args.no_weighting,
                       compression=args.compression,
-                      pipeline_depth=args.pipeline_depth)
+                      pipeline_depth=args.pipeline_depth,
+                      cache_dtype=args.cache_dtype,
+                      cache_fused=not args.no_cache_fusion)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = init_fn(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
@@ -85,6 +87,15 @@ def train_dlrm(args) -> Dict[str, Any]:
     state = engine.init_state(etask, engine.lift_two_party_params(params),
                               opt, celu_cfg, [_as_jax(ba0)], _as_jax(bb0),
                               transport=transport)
+    from ..core.workset import QUANT_KEYS, workset_nbytes
+    cache_stat_b = sum(workset_nbytes(w, QUANT_KEYS)
+                       for w in state["ws"]["a"] + [state["ws"]["b"]])
+    cache_total_b = sum(workset_nbytes(w)
+                        for w in state["ws"]["a"] + [state["ws"]["b"]])
+    print(f"[cache] workset tables: {cache_total_b / 1e6:.2f} MB "
+          f"({cache_stat_b / 1e6:.2f} MB cut statistics at "
+          f"{celu_cfg.cache_dtype}; fused sample "
+          f"{'on' if celu_cfg.cache_fused else 'off'})", flush=True)
     depth = celu_cfg.pipeline_depth
     if depth:
         pe = engine.make_pipeline(etask, opt, celu_cfg, depth=depth,
@@ -171,7 +182,9 @@ def train_llm(args) -> Dict[str, Any]:
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
                       weighting=not args.no_weighting,
                       compression=args.compression,
-                      pipeline_depth=args.pipeline_depth)
+                      pipeline_depth=args.pipeline_depth,
+                      cache_dtype=args.cache_dtype,
+                      cache_fused=not args.no_cache_fusion)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = vfl.init_all(jax.random.PRNGKey(args.seed), cfg)
     opt = make_optimizer(args.optimizer, args.lr)
@@ -229,6 +242,15 @@ def main(argv=None):
                     help="0 = sequential rounds; 1 = overlap round t+1's "
                          "WAN exchange with round t's local updates "
                          "(paper §4.1 two-worker pipeline)")
+    ap.add_argument("--cache-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"),
+                    help="at-rest precision of the workset cache (int8 = "
+                         "SR-quantized codes + fp32 per-row scales, ~4x "
+                         "smaller; core/workset.py storage codec)")
+    ap.add_argument("--no-cache-fusion", action="store_true",
+                    help="disable the fused gather→dequant→weight sample "
+                         "megakernel (pin the materializing reference "
+                         "path)")
     ap.add_argument("--optimizer", default="adagrad")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)

@@ -1,0 +1,391 @@
+"""Quantized workset cache + fused gather→dequant→weight sample path.
+
+Covers: the storage codec (int8 / bf16 at rest, fp32 bit-exactness),
+kernel-vs-oracle parity for the fused sample megakernel (fp32 and int8
+rings, multi-tile grids, the unfusable-batch fallback, the all-dead-slot
+edge), Algorithm-2 weight tolerance of the int8 cache vs the fp32 cache
+(SR unbiasedness through the cosine), and the ``workset_stats``
+pipeline-staleness regression.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CELUConfig
+from repro.core import engine
+from repro.core.workset import (QUANT_KEYS, CastLeaf, QuantLeaf,
+                                decode_entry, sample_hbm_bytes,
+                                workset_draw, workset_entry, workset_init,
+                                workset_insert, workset_nbytes,
+                                workset_sample, workset_stats)
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype="float32"):
+    return jnp.asarray(RNG.normal(size=shape), jnp.dtype(dtype))
+
+
+def _entry(B=64, F=8, v=None):
+    z = _arr((B, F)) if v is None else jnp.full((B, F), float(v))
+    dz = _arr((B, F)) if v is None else jnp.full((B, F), -float(v))
+    return {"z": z, "dz": dz, "batch": {"x": jnp.zeros((B, 2), jnp.int32)}}
+
+
+# --------------------------------------------------------------------------
+# Storage codec
+# --------------------------------------------------------------------------
+def test_fp32_cache_layout_is_the_historical_table():
+    """cache_dtype="float32" stores plain arrays — bit-identical layout
+    (the golden traces in test_engine.py pin the numerics)."""
+    e = _entry()
+    ws = workset_init(3, e)
+    assert isinstance(ws["buf"]["z"], jnp.ndarray)
+    ws = workset_insert(ws, e, 0)
+    _, got, _, valid = workset_sample(ws, 2, "consecutive")
+    assert bool(valid)
+    np.testing.assert_array_equal(np.asarray(got["z"]), np.asarray(e["z"]))
+    np.testing.assert_array_equal(np.asarray(got["dz"]), np.asarray(e["dz"]))
+
+
+@pytest.mark.parametrize("cache_dtype,leaf_cls,max_rel",
+                         [("bfloat16", CastLeaf, 1 / 128),
+                          ("int8", QuantLeaf, 1 / 64)])
+def test_lossy_cache_roundtrip(cache_dtype, leaf_cls, max_rel):
+    """Insert + sample through a lossy cache reconstructs the statistics
+    to storage precision (int8: one LSB of the per-row absmax scale)."""
+    e = _entry(B=64, F=32)
+    ws = workset_init(2, e, cache_dtype=cache_dtype)
+    assert isinstance(ws["buf"]["z"], leaf_cls)
+    assert isinstance(ws["buf"]["batch"]["x"], jnp.ndarray)  # verbatim
+    ws = workset_insert(ws, e, 0, rng=jax.random.PRNGKey(0))
+    _, got, _, _ = workset_sample(ws, 2, "consecutive")
+    assert got["z"].shape == e["z"].shape
+    for k in QUANT_KEYS:
+        err = np.abs(np.asarray(got[k]) - np.asarray(e[k]))
+        amax = np.abs(np.asarray(e[k])).max(axis=1, keepdims=True)
+        assert (err <= amax * max_rel + 1e-6).all()
+
+
+def test_int8_cache_sr_unbiased():
+    """E[decode] == value: the stochastic rounding noise averages out
+    across insert keys (the property Algorithm-2's tolerance rides on)."""
+    e = _entry(B=16, F=8)
+    acc = np.zeros((16, 8), np.float64)
+    n = 300
+    for s in range(n):
+        ws = workset_init(1, e, cache_dtype="int8")
+        ws = workset_insert(ws, e, 0, rng=jax.random.PRNGKey(s))
+        _, got, _, _ = workset_sample(ws, 2, "consecutive")
+        acc += np.asarray(got["z"], np.float64)
+    scale = np.abs(np.asarray(e["z"])).max(axis=1, keepdims=True) / 127
+    bias = np.abs(acc / n - np.asarray(e["z"]))
+    # SR residual is U(0,1)-driven: sem ~ scale/sqrt(12 n); 6 sigma margin
+    assert (bias <= 6 * scale / np.sqrt(12 * n) + 1e-7).all()
+
+
+def test_cache_footprint_ratio():
+    """The int8 table holds the cut statistics in ~F/(F+4)x4 fewer bytes
+    (codes + one fp32 scale per row)."""
+    e = _entry(B=256, F=32)
+    fp32 = workset_nbytes(workset_init(5, e), QUANT_KEYS)
+    int8 = workset_nbytes(workset_init(5, e, cache_dtype="int8"),
+                          QUANT_KEYS)
+    bf16 = workset_nbytes(workset_init(5, e, cache_dtype="bfloat16"),
+                          QUANT_KEYS)
+    assert fp32 == 2 * 5 * 256 * 32 * 4
+    assert int8 == 2 * 5 * 256 * (32 + 4)
+    assert bf16 == fp32 // 2
+    assert fp32 / int8 > 3.0
+
+
+def test_unknown_cache_dtype_rejected():
+    with pytest.raises(ValueError, match="cache_dtype"):
+        workset_init(2, _entry(), cache_dtype="int4")
+
+
+def test_quantized_table_survives_scan_carry():
+    """QuantLeaf is a registered pytree node: the table rides a lax.scan
+    carry (the engine's local-update loop) untouched."""
+    e = _entry(B=8, F=4)
+    ws = workset_init(2, e, cache_dtype="int8")
+    ws = workset_insert(ws, e, 0)
+
+    def body(carry, _):
+        ws = carry
+        ws, slot, _, valid = workset_draw(ws, 4, "round_robin")
+        return ws, valid
+
+    ws2, valids = jax.lax.scan(body, ws, None, length=3)
+    assert isinstance(ws2["buf"]["z"], QuantLeaf)
+    assert int(valids.sum()) >= 1
+
+
+# --------------------------------------------------------------------------
+# Fused sample kernel vs oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("W,B,F", [(3, 64, 8), (5, 128, 32), (4, 256, 16),
+                                   (2, 384, 96)])   # 384 = 3 grid tiles
+@pytest.mark.parametrize("cos_xi", [0.0, 0.5])
+def test_fused_sample_f32_matches_oracle(W, B, F, cos_xi):
+    a = _arr((B, F))
+    z_ring, dz_ring = _arr((W, B, F)), _arr((W, B, F))
+    for slot in (0, W - 1):
+        w, cot = ops.fused_gather_weight(jnp.int32(slot), a, z_ring,
+                                         dz_ring, cos_xi)
+        w_r, cot_r = ref.fused_sample_ref(slot, a, z_ring, dz_ring, cos_xi)
+        tol = dict(rtol=3e-7, atol=3e-7)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(w_r), **tol)
+        np.testing.assert_allclose(np.asarray(cot), np.asarray(cot_r),
+                                   **tol)
+
+
+@pytest.mark.parametrize("W,B,F", [(3, 64, 8), (4, 256, 16), (2, 384, 96)])
+def test_fused_sample_q8_matches_oracle(W, B, F):
+    a = _arr((B, F))
+    zq = jnp.asarray(RNG.integers(-127, 128, size=(W, B, F)), jnp.int8)
+    dzq = jnp.asarray(RNG.integers(-127, 128, size=(W, B, F)), jnp.int8)
+    zs = jnp.abs(_arr((W, B))) + 0.01
+    dzs = jnp.abs(_arr((W, B))) + 0.01
+    for slot in (0, W - 1):
+        w, cot = ops.fused_gather_weight_q8(jnp.int32(slot), a, zq, zs,
+                                            dzq, dzs, 0.3)
+        w_r, cot_r = ref.fused_sample_q8_ref(slot, a, zq, zs, dzq, dzs, 0.3)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(w_r),
+                                   rtol=3e-7, atol=3e-7)
+        np.testing.assert_allclose(np.asarray(cot), np.asarray(cot_r),
+                                   rtol=3e-6, atol=3e-6)
+
+
+def test_fused_sample_rank3_statistics():
+    """Ranks > 2 flatten per instance exactly like the weighting path."""
+    W, B, S, d = 3, 128, 4, 8
+    a = _arr((B, S, d))
+    z_ring, dz_ring = _arr((W, B, S, d)), _arr((W, B, S, d))
+    w, cot = ops.fused_gather_weight(jnp.int32(1), a, z_ring, dz_ring, 0.2)
+    assert cot.shape == (B, S, d)
+    w_r, cot_r = ref.fused_sample_ref(1, a, z_ring, dz_ring, 0.2)
+    np.testing.assert_allclose(np.asarray(cot), np.asarray(cot_r),
+                               rtol=3e-7, atol=3e-7)
+
+
+def test_fused_sample_all_dead_slot_yields_zero():
+    """An invalid draw lands on a never-written ring slot (all zeros):
+    the kernel's cosine denominator floors at EPS and every weight — and
+    the cotangent — is exactly zero, so the masked no-op update costs
+    nothing numerically."""
+    W, B, F = 3, 64, 8
+    a = _arr((B, F))
+    zeros = jnp.zeros((W, B, F), jnp.float32)
+    w, cot = ops.fused_gather_weight(jnp.int32(2), a, zeros, zeros, 0.5)
+    assert (np.asarray(w) == 0.0).all() and (np.asarray(cot) == 0.0).all()
+    # int8 ring: zero codes AND zero scales (the empty-table state)
+    w, cot = ops.fused_gather_weight_q8(
+        jnp.int32(0), a, jnp.zeros((W, B, F), jnp.int8),
+        jnp.zeros((W, B), jnp.float32), jnp.zeros((W, B, F), jnp.int8),
+        jnp.zeros((W, B), jnp.float32), 0.5)
+    assert (np.asarray(w) == 0.0).all() and (np.asarray(cot) == 0.0).all()
+
+
+def test_local_grad_a_cached_fused_matches_reference():
+    """The engine dispatcher: fused ring sample == materialize-then-weight
+    on the same table, for fp32 (bitwise) and int8 (bitwise: the decode is
+    the same math) caches — including the odd-batch fallback."""
+    def forward(p, batch):
+        return batch["x"] @ p
+
+    for cache_dtype in ("float32", "int8"):
+        for B, F in ((64, 8), (37, 8)):        # 37: unfusable, falls back
+            p = _arr((4, F))
+            e = {"z": _arr((B, F)), "dz": _arr((B, F)),
+                 "batch": {"x": _arr((B, 4))}}
+            ws = workset_init(3, e, cache_dtype=cache_dtype)
+            ws = workset_insert(ws, e, 0, rng=jax.random.PRNGKey(1))
+            ws, slot, _, valid = workset_draw(ws, 3, "consecutive")
+            kw = dict(weighting=True, fused=True, mask=None,
+                      pipeline_staleness=0)
+            g_f, w_f = engine.local_grad_a_cached(forward, p, ws, slot, 0.3,
+                                                  cache_fused=True, **kw)
+            g_r, w_r = engine.local_grad_a_cached(forward, p, ws, slot, 0.3,
+                                                  cache_fused=False, **kw)
+            np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r),
+                                       rtol=3e-7, atol=3e-7)
+            np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_r),
+                                       rtol=3e-6, atol=3e-6)
+
+
+def test_local_grad_a_cached_pipeline_staleness_post_scale():
+    """The megakernel composes the depth-s pipeline discount exactly like
+    weighted_cotangent: w -> w^(1+s), cotangent scaled once."""
+    def forward(p, batch):
+        return batch["x"] @ p
+
+    B, F = 64, 8
+    p = _arr((4, F))
+    e = {"z": _arr((B, F)), "dz": _arr((B, F)), "batch": {"x": _arr((B, 4))}}
+    ws = workset_init(2, e)
+    ws = workset_insert(ws, e, 0)
+    ws, slot, _, _ = workset_draw(ws, 3, "consecutive")
+    kw = dict(weighting=True, fused=True, mask=None, pipeline_staleness=1)
+    g_f, w_f = engine.local_grad_a_cached(forward, p, ws, slot, 0.3,
+                                          cache_fused=True, **kw)
+    g_r, w_r = engine.local_grad_a_cached(forward, p, ws, slot, 0.3,
+                                          cache_fused=False, **kw)
+    np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r),
+                               rtol=3e-7, atol=3e-7)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_r),
+                               rtol=3e-6, atol=3e-6)
+
+
+# --------------------------------------------------------------------------
+# Algorithm-2 weights: int8 cache vs fp32 cache tolerance
+# --------------------------------------------------------------------------
+def _weights_through_cache(z_stale, dz_stale, z_adhoc, cache_dtype, seed):
+    e = {"z": z_stale, "dz": dz_stale, "batch": {}}
+    ws = workset_init(1, e, cache_dtype=cache_dtype)
+    ws = workset_insert(ws, e, 0, rng=jax.random.PRNGKey(seed))
+    _, got, _, _ = workset_sample(ws, 4, "consecutive")
+    from repro.core.weighting import row_cosine
+    return np.asarray(row_cosine(z_adhoc, got["z"]))
+
+
+@pytest.mark.parametrize("B,F,seed", [(8, 16, 0), (32, 64, 1), (64, 128, 2),
+                                      (17, 33, 3)])
+def test_int8_cache_weights_within_tolerance_fixed(B, F, seed):
+    """Deterministic slice of the hypothesis sweep below (runs even where
+    hypothesis is absent)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    a = z + 0.3 * jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    dz = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    c32 = _weights_through_cache(z, dz, a, "float32", seed)
+    c8 = _weights_through_cache(z, dz, a, "int8", seed)
+    assert np.abs(c8 - c32).max() <= 0.06
+
+
+def test_int8_cache_weights_within_tolerance():
+    """Paper Algorithm-2 cosines computed against the int8-at-rest cache
+    stay within quantization tolerance of the fp32-cache cosines."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(8, 64), st.integers(16, 128),
+           st.integers(0, 2 ** 31 - 1))
+    def check(B, F, seed):
+        rng = np.random.default_rng(seed)
+        z = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        # ad-hoc statistics drift from the cached ones, like a local step
+        drift = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        a = z + 0.3 * drift
+        dz = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        c32 = _weights_through_cache(z, dz, a, "float32", seed)
+        c8 = _weights_through_cache(z, dz, a, "int8", seed)
+        # per-row int8 SR perturbs each element by <= 1/127 of the row
+        # absmax; the cosine moves by O(that / rms) — generous 6% bound
+        assert np.abs(c8 - c32).max() <= 0.06, (B, F, seed)
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# Engine integration: lossy caches train, fp32 stays bit-exact
+# --------------------------------------------------------------------------
+def _tiny_workload():
+    from repro.data.synthetic import TabularSpec, aligned_batches, \
+        make_tabular
+    from repro.models.tabular import DLRMConfig, make_dlrm
+    from repro.optim import make_optimizer
+    spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
+                       n_train=2048, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=32, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    init_fn, task, _ = make_dlrm(cfg)
+    return data, init_fn(jax.random.PRNGKey(0), cfg), task, \
+        make_optimizer("adagrad", 0.05), aligned_batches
+
+
+def _trace(cache_dtype, cache_fused, rounds=8):
+    data, params, task, opt, aligned_batches = _tiny_workload()
+    celu = CELUConfig(R=3, W=3, xi_degrees=60.0, cache_dtype=cache_dtype,
+                      cache_fused=cache_fused)
+    etask = engine.lift_two_party(task)
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, celu, [asj(ba)], asj(bb))
+    rnd = engine.make_round(etask, opt, celu)
+    it = aligned_batches(data["train"], 64, seed=0)
+    out = []
+    for _ in range(rounds):
+        bi, ba, bb = next(it)
+        state, m = rnd(state, [asj(ba)], asj(bb), bi)
+        out.append((float(np.float32(m["loss"])),
+                    float(np.float32(m["w_mean"]))))
+    return out
+
+
+def test_fp32_fused_sample_bitwise_equals_materializing_path():
+    """cache_fused=True over the fp32 table is the SAME trace as the
+    materializing reference — the megakernel's gather is exact and its
+    fp32 body reproduces the weighting kernel bit-for-bit."""
+    assert _trace("float32", True) == _trace("float32", False)
+
+
+@pytest.mark.parametrize("cache_dtype", ["bfloat16", "int8"])
+def test_lossy_cache_trains(cache_dtype):
+    rows = _trace(cache_dtype, True, rounds=10)
+    losses = [l for l, _ in rows]
+    assert np.isfinite(losses).all()
+    assert any(w > 0 for _, w in rows)
+    # lossy fused == lossy unfused (the kernel IS the decode + weight)
+    assert rows == _trace(cache_dtype, False, rounds=10)
+
+
+# --------------------------------------------------------------------------
+# Satellites: stats staleness regression + roofline counters
+# --------------------------------------------------------------------------
+def test_workset_stats_respects_pipeline_staleness():
+    """Regression: stats used to call _valid_mask with no offset, so
+    n_alive overcounted by the retired slots under depth-1 pipelining."""
+    W = 4
+    ws = workset_init(W, _entry(B=2, F=2))
+    for t in range(W):
+        ws = workset_insert(ws, _entry(B=2, F=2, v=t), t)
+    assert int(workset_stats(ws, R=2)["n_alive"]) == W
+    for s in (1, 2):
+        assert int(workset_stats(ws, R=2,
+                                 pipeline_staleness=s)["n_alive"]) == W - s
+    # and the count now matches what the sampler will actually serve
+    served = 0
+    w2 = dict(ws)
+    for _ in range(W):
+        w2, _, _, v = workset_sample(w2, 2, "round_robin",
+                                     pipeline_staleness=1)
+        served += int(v)
+    assert served == int(workset_stats(ws, R=2,
+                                       pipeline_staleness=1)["n_alive"])
+
+
+def test_sample_hbm_bytes_counters():
+    """The roofline counter: fused + int8 moves strictly fewer bytes than
+    every other path, unfused fp32 the most."""
+    e = _entry(B=256, F=32)
+    unfused32 = sample_hbm_bytes(e, "float32", fused=False)
+    fused32 = sample_hbm_bytes(e, "float32", fused=True)
+    fused8 = sample_hbm_bytes(e, "int8", fused=True)
+    assert fused8 < fused32 < unfused32
+    # the fused int8 path moves > 2x fewer bytes than unfused fp32
+    assert unfused32 / fused8 > 2.0
+    with pytest.raises(ValueError):
+        sample_hbm_bytes(e, "fp16")
+
+
+def test_decode_entry_identity_on_plain_trees():
+    e = _entry(B=4, F=4)
+    got = decode_entry(e)
+    assert got["z"] is e["z"]
