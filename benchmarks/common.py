@@ -43,6 +43,7 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
                  fused_weighting: bool = True,
                  compression: Optional[str] = None,
                  pipeline_depth: int = 0,
+                 pipeline_lr_damping: float = 0.25,
                  cache_dtype: str = "float32", cache_fused: bool = True,
                  transport=None, transport_hook=None
                  ) -> Dict[str, object]:
@@ -52,7 +53,10 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     (``core.compression.CODEC_SPECS``) for the simulated WAN (or pass an
     explicit ``transport``).  ``pipeline_depth=1`` runs the two-worker
     pipelined schedule (``engine.PipelinedEngine``): round t+1's exchange
-    overlaps round t's local updates.  ``transport_hook(transport,
+    overlaps round t's local updates; ``pipeline_depth >= 2`` keeps a
+    D-deep exchange queue with per-slot staleness damping
+    (``pipeline_lr_damping`` is its eta/(1+c*s) coefficient; the first
+    D-1 rounds fill the queue and report a NaN loss).  ``transport_hook(transport,
     smoothed_loss) -> transport|None`` is the host-side control plane,
     consulted at every eval point — returning a NEW transport (e.g. an
     adaptive top-k ratio step) rebuilds the jitted round around it; the
@@ -61,6 +65,7 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     base = CELUConfig(R=R, W=W, xi_degrees=xi, weighting=weighting,
                       sampling=sampling or "round_robin",
                       pipeline_depth=pipeline_depth,
+                      pipeline_lr_damping=pipeline_lr_damping,
                       cache_dtype=cache_dtype, cache_fused=cache_fused)
     ccfg, nloc = engine.preset_config(protocol, base)
     if sampling is not None and protocol == "celu":

@@ -1,0 +1,114 @@
+"""Benchmark-regression gate: diff a fresh ``BENCH_local_scan.json``
+against the committed baseline (``results/BENCH_baseline.json``).
+
+Two classes of signal, two thresholds:
+
+  * **Deterministic counters** — the table's device bytes
+    (``cache_bytes``/``stat_cache_bytes``) and the analytic roofline
+    counters (``sample_hbm_bytes_per_step``/``hbm_bytes_per_round``) are
+    exact functions of the code, not the machine.  ANY increase over the
+    baseline fails the gate.
+  * **Measured wall** — ``local_step_ms`` is a CPU wall measurement on a
+    shared CI runner; it may drift up to ``--wall-tol`` (default 25%)
+    before the gate trips.
+
+A counter that IMPROVED is reported but passes — refresh the baseline
+(rerun ``python -m benchmarks.run --only local_scan`` and copy the JSON
+over ``results/BENCH_baseline.json``) in the same PR that earns the win,
+so the gate ratchets.
+
+    python -m benchmarks.compare \
+        --baseline results/BENCH_baseline.json \
+        --current results/BENCH_local_scan.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+DEFAULT_BASELINE = os.path.join(RESULTS_DIR, "BENCH_baseline.json")
+DEFAULT_CURRENT = os.path.join(RESULTS_DIR, "BENCH_local_scan.json")
+
+# exact per-variant counters: any increase is a regression
+EXACT_KEYS = ("cache_bytes", "stat_cache_bytes",
+              "sample_hbm_bytes_per_step", "hbm_bytes_per_round")
+# measured per-variant wall: tolerated up to --wall-tol relative drift
+WALL_KEY = "local_step_ms"
+
+
+def compare(baseline: dict, current: dict, wall_tol: float = 0.25):
+    """-> (failures, notes): lists of human-readable strings.  A failure
+    is a regression the gate must reject; a note is an improvement or a
+    new variant worth a baseline refresh."""
+    failures, notes = [], []
+    base_v = baseline.get("variants", {})
+    cur_v = current.get("variants", {})
+    if baseline.get("geometry") != current.get("geometry"):
+        notes.append(f"geometry changed: {baseline.get('geometry')} -> "
+                     f"{current.get('geometry')} (wall comparison is "
+                     f"apples-to-oranges; counters still gate)")
+    for name, base in base_v.items():
+        cur = cur_v.get(name)
+        if cur is None:
+            failures.append(f"variant {name!r} present in baseline but "
+                            f"missing from the current run")
+            continue
+        for k in EXACT_KEYS:
+            b, c = base.get(k), cur.get(k)
+            if b is None or c is None:
+                continue
+            if c > b:
+                failures.append(f"{name}.{k}: {b} -> {c} "
+                                f"(+{c - b}; deterministic counter must "
+                                f"not regress)")
+            elif c < b:
+                notes.append(f"{name}.{k}: {b} -> {c} (improved — refresh "
+                             f"the baseline to ratchet)")
+        b, c = base.get(WALL_KEY), cur.get(WALL_KEY)
+        if b and c:
+            if c > b * (1.0 + wall_tol):
+                failures.append(
+                    f"{name}.{WALL_KEY}: {b} -> {c} ms "
+                    f"(+{(c / b - 1) * 100:.0f}% > {wall_tol * 100:.0f}% "
+                    f"tolerance)")
+            elif c < b * (1.0 - wall_tol):
+                notes.append(f"{name}.{WALL_KEY}: {b} -> {c} ms (faster)")
+    for name in cur_v:
+        if name not in base_v:
+            notes.append(f"new variant {name!r} not in baseline (not "
+                         f"gated; add it on the next baseline refresh)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--current", default=DEFAULT_CURRENT)
+    ap.add_argument("--wall-tol", type=float, default=0.25,
+                    help="relative local_step_ms drift tolerated "
+                         "(default 0.25 = 25%%)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures, notes = compare(baseline, current, args.wall_tol)
+    for n in notes:
+        print(f"[note] {n}")
+    for fmsg in failures:
+        print(f"[FAIL] {fmsg}")
+    if failures:
+        print(f"benchmark-regression gate: {len(failures)} failure(s) vs "
+              f"{os.path.normpath(args.baseline)}")
+        return 1
+    print(f"benchmark-regression gate: OK "
+          f"({len(baseline.get('variants', {}))} variants vs "
+          f"{os.path.normpath(args.baseline)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

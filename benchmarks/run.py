@@ -13,7 +13,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=("ablation", "end_to_end", "roofline", "micro",
-                             "beyond", "local_scan"))
+                             "beyond", "local_scan", "pipeline_depth"))
     args = ap.parse_args()
 
     from . import (ablation, beyond, end_to_end, local_scan, microbench,
@@ -23,6 +23,9 @@ def main() -> None:
         "local_scan": local_scan.main,     # emits BENCH_local_scan.json
         "roofline": roofline.main,
         "end_to_end": end_to_end.main,
+        # emits BENCH_pipeline_depth.json (the depth-knob convergence
+        # study; the nightly CI lane runs it with --check)
+        "pipeline_depth": end_to_end.depth_sweep,
         "ablation": ablation.main,
         "beyond": beyond.main,
     }

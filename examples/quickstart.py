@@ -39,6 +39,15 @@ def main():
             # exchange is dispatched while round t's local updates run
             ("celu   R=5 pipe=1", "celu",
              dict(R=5, W=5, xi=60.0, pipeline_depth=1)),
+            # the depth-D exchange queue (D >= 2): up to D exchanges in
+            # flight for high-RTT links where one exchange cannot hide
+            # behind one local scan.  Entries get D exchanges staler, so
+            # weights are attenuated per slot (w -> w^(1+s)) and updates
+            # lr-damped by 1/(1 + c*s) (c = pipeline_lr_damping, 0.25
+            # default) — the convergence study gating this knob lives in
+            # results/BENCH_pipeline_depth.json (nightly CI re-runs it)
+            ("celu   R=5 pipe=2", "celu",
+             dict(R=5, W=5, xi=60.0, pipeline_depth=2)),
             # the compressed wire: top-k+int8 sketches up, dense int8 down,
             # error feedback carrying the compression error between rounds
             ("celu   R=5 int8_topk", "celu",
@@ -84,10 +93,14 @@ def main():
     updown = paper_round_updown()
     t_seq = sim_time(ROUNDS, updown, 5.0, pipeline_depth=0)
     t_pipe = sim_time(ROUNDS, updown, 5.0, pipeline_depth=1)
+    t_deep = sim_time(ROUNDS, updown, 5.0, pipeline_depth=2)
     print(f"pipelined schedule (pipe=1): the same {ROUNDS} rounds cost "
           f"{t_pipe:.0f}s of simulated WAN time vs {t_seq:.0f}s sequential "
           f"-> {t_seq / t_pipe:.2f}x lower latency at paper geometry "
-          f"(300 Mbps, {COMPUTE_PER_UPDATE * 1e3:.0f} ms/update).")
+          f"(300 Mbps, {COMPUTE_PER_UPDATE * 1e3:.0f} ms/update); the "
+          f"depth-2 queue amortizes the exchange over 2 rounds -> "
+          f"{t_deep:.0f}s ({t_seq / t_deep:.2f}x), bounded below by the "
+          f"serial wire occupancy.")
 
 
 if __name__ == "__main__":

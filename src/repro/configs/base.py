@@ -206,13 +206,39 @@ class CELUConfig:
     # once, in storage precision, straight into the weighting pass — no
     # HBM-side entry copy.  False pins the materializing reference path.
     cache_fused: bool = True
-    # Paper §4.1 (Fig. 4): the two-worker pipeline depth.  0 = sequential
-    # rounds (exchange then local updates, the WAN stall serialized with
-    # compute); 1 = round t+1's exchange overlaps round t's local updates
-    # (engine.PipelinedEngine).  The depth is also the extra staleness every
-    # cached entry accrues — it tightens workset validity and attenuates
-    # the Algorithm-2 weights (weighting.pipeline_attenuation).
+    # Paper §4.1 (Fig. 4), generalized: the exchange-queue depth.  0 =
+    # sequential rounds (exchange then local updates, the WAN stall
+    # serialized with compute); 1 = the paper's two-worker overlap (round
+    # t+1's exchange in flight during round t's local updates); D >= 2 = a
+    # D-deep queue of in-flight exchanges (engine.PipelinedEngine) for the
+    # high-RTT regime where one exchange cannot hide behind one local
+    # scan.  The depth is also the extra staleness every cached entry
+    # accrues — it tightens workset validity and attenuates the
+    # Algorithm-2 weights (weighting.pipeline_attenuation; per-slot
+    # dynamic offsets at D >= 2), so it must stay < W or every draw
+    # becomes a bubble (validated below).
     pipeline_depth: int = 0
+    # Staleness-aware lr damping for the depth-D queue: local and fresh
+    # updates under the pipelined schedule are scaled by 1 / (1 + c * s)
+    # where s is the update's pipeline staleness in exchanges and c this
+    # coefficient.  Applied only on the dynamic (depth >= 2) schedule —
+    # depths 0 and 1 keep the historical golden-pinned numerics (s = 0 at
+    # depth 1's merge, so damping would be a no-op there anyway).
+    pipeline_lr_damping: float = 0.25
+
+    def __post_init__(self):
+        if self.pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {self.pipeline_depth}")
+        if self.pipeline_depth >= max(self.W, 1) and self.pipeline_depth:
+            raise ValueError(
+                f"pipeline_depth ({self.pipeline_depth}) must be < W "
+                f"({self.W}): a depth-D queue retires the oldest D ring "
+                f"slots early, so D >= W leaves no valid workset draws")
+        if self.pipeline_lr_damping < 0.0:
+            raise ValueError(
+                f"pipeline_lr_damping must be >= 0, got "
+                f"{self.pipeline_lr_damping}")
 
 
 @dataclass(frozen=True)

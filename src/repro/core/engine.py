@@ -92,7 +92,8 @@ import jax.numpy as jnp
 
 from ..configs.base import CELUConfig
 from ..optim import Optimizer, apply_updates
-from .weighting import instance_weights, pipeline_attenuation, xi_to_cos
+from .weighting import (instance_weights, pipeline_attenuation,
+                        static_staleness, xi_to_cos)
 from .workset import (CastLeaf, QuantLeaf, workset_draw, workset_entry,
                       workset_init, workset_insert, workset_sample)  # noqa: F401  (workset_sample re-exported: historical import site)
 
@@ -322,35 +323,42 @@ def staleness_weights(ad_hoc, stale, cos_xi: float, *,
     return instance_weights(ad_hoc, stale, cos_xi)
 
 
-def _attenuate_post_scale(w, cot, staleness: int):
+def _attenuate_post_scale(w, cot, staleness):
     """Compose the depth-s pipeline discount onto a fused kernel's
     (w, w ⊙ ∇Z): -> (w^(1+s), w^s ⊙ (w ⊙ ∇Z)) — the same law as
     :func:`repro.core.weighting.pipeline_attenuation`, applied so the
-    discounted weight still multiplies the cotangent exactly once."""
-    if staleness:
-        extra = w ** staleness
-        w = w * extra
-        cot = cot * _bcast(extra, cot)
+    discounted weight still multiplies the cotangent exactly once.
+
+    ``staleness`` may be a static Python int (depths 0/1 — 0 skips the
+    post-scale entirely, preserving the golden-pinned bitstream) or a jnp
+    int scalar: the depth-D queue's PER-SLOT offset, traced through the
+    jitted scan.  The dynamic path always applies the scale — ``w ** 0``
+    is exactly 1 (also at w = 0), so runtime s = 0 is still the
+    identity."""
+    if static_staleness(staleness) and not staleness:
+        return w, cot
+    extra = w ** staleness
+    w = w * extra
+    cot = cot * _bcast(extra, cot)
     return w, cot
 
 
 def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
-                       fused: bool = True, pipeline_staleness: int = 0
+                       fused: bool = True, pipeline_staleness=0
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """InsWeight + weights ⊙ ∇Z -> (weights (B,), fp32 weighted cotangent).
 
     ``fused=True`` runs the single-VMEM-pass Pallas kernel; the reference
-    composition is its bit-exact oracle.  ``pipeline_staleness`` composes
-    with the fused kernel as a cheap post-scale (see
-    :func:`_attenuate_post_scale`)."""
+    composition is its bit-exact oracle.  ``pipeline_staleness`` (static
+    int or a traced per-slot jnp scalar) composes with the fused kernel as
+    a cheap post-scale (see :func:`_attenuate_post_scale`)."""
     if fused and _fusable(ad_hoc):
         from ..kernels import ops as kops
         w, cot = kops.weighted_cotangent(ad_hoc, stale,
                                          dz.astype(jnp.float32), cos_xi)
         return _attenuate_post_scale(w, cot, pipeline_staleness)
     w = instance_weights(ad_hoc, stale, cos_xi)
-    if pipeline_staleness:
-        w = pipeline_attenuation(w, pipeline_staleness)
+    w = pipeline_attenuation(w, pipeline_staleness)
     return w, _bcast(w, dz) * dz.astype(jnp.float32)
 
 
@@ -359,7 +367,7 @@ def weighted_cotangent(ad_hoc, stale, dz, cos_xi: float, *,
 # --------------------------------------------------------------------------
 def _grad_a_tail(z_new, vjp, stale_z, stale_dz, cos_xi: float, *,
                  weighting: bool, fused: bool, mask,
-                 pipeline_staleness: int):
+                 pipeline_staleness):
     """Shared tail of the feature-party local update once the stale
     statistics are materialized: InsWeight + cotangent scale + backward."""
     if weighting:
@@ -378,7 +386,7 @@ def _grad_a_tail(z_new, vjp, stale_z, stale_dz, cos_xi: float, *,
 
 def local_grad_a(forward_a, params_a, entry, cos_xi: float, *,
                  weighting: bool = True, fused: bool = True, mask=None,
-                 pipeline_staleness: int = 0):
+                 pipeline_staleness=0):
     """Feature-party local update: ad-hoc forward on the cached batch,
     stale cotangent ∇Z^(i) weighted by cos(Z^(i,j), Z^(i)).
 
@@ -413,7 +421,7 @@ def _fused_ring_sample(slot, z_new, z_store, dz_store, cos_xi: float):
 def local_grad_a_cached(forward_a, params_a, ws, slot, cos_xi: float, *,
                         weighting: bool = True, fused: bool = True,
                         cache_fused: bool = True, mask=None,
-                        pipeline_staleness: int = 0):
+                        pipeline_staleness=0):
     """Feature-party local update straight off the workset ring — the
     single-pass hot path.  Only the party's OWN cached features are
     gathered (the forward needs them); the cut statistics ⟨Z, ∇Z⟩ are
@@ -443,7 +451,7 @@ def local_grad_a_cached(forward_a, params_a, ws, slot, cos_xi: float, *,
 
 def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
                  weighting: bool = True, fused: bool = True, mask=None,
-                 pipeline_staleness: int = 0):
+                 pipeline_staleness=0):
     """Label-party local update: stale Z_i's + ad-hoc own features; the
     ad-hoc ∇Z_i^(i,j) is computed only to measure staleness (paper
     footnote 2), then the weighted per-instance losses drive the backward
@@ -459,8 +467,7 @@ def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
         for i in range(1, len(zs)):
             w = jnp.minimum(
                 w, staleness_weights(dz_new[i], dzs[i], cos_xi, fused=fused))
-        if pipeline_staleness:
-            w = pipeline_attenuation(w, pipeline_staleness)
+        w = pipeline_attenuation(w, pipeline_staleness)
     else:
         w = jnp.ones((zs[0].shape[0],), jnp.float32)
     if mask is not None:
@@ -517,7 +524,8 @@ def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
 # sequential round and the pipelined scheduler
 # --------------------------------------------------------------------------
 def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
-                 n_local: int, tp, fused: bool, pipeline_staleness: int = 0):
+                 n_local: int, tp, fused: bool, pipeline_staleness=0,
+                 lr_damping: float = 0.0):
     """Build the round's two first-class stages over the shared state
     layout:
 
@@ -545,10 +553,29 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
     validity window and attenuates Algorithm-2 instance weights: under a
     depth-D pipeline every cached entry is D exchanges older (relative to
     the params it is used against) than the sequential schedule would make
-    it."""
+    it.  Both ``local_scan`` and ``exchange_apply`` additionally accept an
+    optional traced ``staleness`` scalar — the depth-D queue's PER-SLOT
+    offset (in-flight count at scan time / merged exchange's age), which
+    overrides the static depth so warmup and drain phases are charged
+    their actual staleness, not the steady-state bound.  When a dynamic
+    staleness is supplied and ``lr_damping`` (the ``c`` of the
+    ``eta / (1 + c*s)`` schedule) is positive, the optimizer updates that
+    stage produces are damped accordingly — the FedBCD-style guard that
+    keeps the sub-linear rate as queued staleness grows.  Depths 0/1 never
+    pass a dynamic staleness, so their golden-pinned numerics are
+    untouched."""
     cos_xi = xi_to_cos(celu.xi_degrees)
     s_pipe = int(pipeline_staleness)
     uniform = celu.sampling == "uniform"
+
+    def _damp(staleness):
+        """1 / (1 + c*s) update scale; None when the static path (or a
+        zero coefficient) should leave the updates untouched."""
+        if staleness is None or lr_damping <= 0.0:
+            return None
+        return jnp.float32(1.0) / (
+            1.0 + jnp.float32(lr_damping)
+            * jnp.asarray(staleness).astype(jnp.float32))
 
     def exchange_compute(params, tstate, batches_a, batch_b, comm_rounds):
         pas, pb = params["a"], params["b"]
@@ -595,17 +622,23 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
         return {"zs": zs, "dzs": dzs, "g_as": g_as, "g_b": g_b,
                 "loss": loss, "tstate": new_tstate}
 
-    def exchange_apply(state, fresh, batches_a, batch_b, batch_idx):
+    def exchange_apply(state, fresh, batches_a, batch_b, batch_idx,
+                       staleness=None):
         pas, pb = state["params"]["a"], state["params"]["b"]
         K = len(pas)
         zs, dzs = fresh["zs"], fresh["dzs"]
+        damp = _damp(staleness)
         new_pas, new_oas = [], []
         for i in range(K):
             upd, oa = opt.update(fresh["g_as"][i], state["opt"]["a"][i],
                                  pas[i])
+            if damp is not None:
+                upd = jax.tree_util.tree_map(lambda u: u * damp, upd)
             new_pas.append(apply_updates(pas[i], upd))
             new_oas.append(oa)
         upd_b, ob = opt.update(fresh["g_b"], state["opt"]["b"], pb)
+        if damp is not None:
+            upd_b = jax.tree_util.tree_map(lambda u: u * damp, upd_b)
 
         # rounding noise for quantized-at-rest caches (unused — and DCE'd —
         # by the fp32 table); per-party keys keep the SR noise independent
@@ -630,22 +663,32 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
         }
         return new_state, {"loss": fresh["loss"]}
 
-    def local_scan(state):
+    def local_scan(state, staleness=None):
         K = len(state["params"]["a"])
         if n_local == 0:
             zero = jnp.float32(0.0)
             return state, {"local_steps": jnp.int32(0), "w_mean": zero,
                            "w_zero_frac": zero}
 
+        s_loc = s_pipe if staleness is None else staleness
+        damp = _damp(staleness)
         scale = jnp.float32(1.0 / (K + 1))
         comm_rounds = state["comm_rounds"]
+        draw_base = jax.random.PRNGKey(29)
+        if staleness is not None:
+            # the depth-D queue can run several scans at the SAME
+            # comm_rounds (warmup: no merges yet; manual local() calls
+            # between merges) — fold the per-slot staleness in so their
+            # uniform draws stay independent.  (comm_rounds, s) is unique
+            # per scan under every supported schedule; the static path
+            # keeps the historical key chain bit-for-bit.
+            draw_base = jax.random.fold_in(draw_base, s_loc)
 
         def body(carry, _):
             if uniform:
                 pas, oas, wsas, nas, pb, ob, wsb, nb, j = carry
                 draw_key = jax.random.fold_in(
-                    jax.random.fold_in(jax.random.PRNGKey(29), comm_rounds),
-                    j)
+                    jax.random.fold_in(draw_base, comm_rounds), j)
             else:
                 pas, oas, wsas, nas, pb, ob, wsb, nb = carry
                 draw_key = None
@@ -656,15 +699,16 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
                     else jax.random.fold_in(draw_key, i)
                 wsas[i], slot, _, valid = workset_draw(
                     wsas[i], celu.R, celu.sampling, rng=ki,
-                    pipeline_staleness=s_pipe)
+                    pipeline_staleness=s_loc)
                 vf = valid.astype(jnp.float32)
                 g, w = local_grad_a_cached(
                     task.forward_a, pas[i], wsas[i], slot, cos_xi,
                     weighting=celu.weighting, fused=fused,
                     cache_fused=celu.cache_fused, mask=vf,
-                    pipeline_staleness=s_pipe)
+                    pipeline_staleness=s_loc)
                 upd, oas[i] = opt.update(g, oas[i], pas[i])
-                upd = jax.tree_util.tree_map(lambda u: u * vf, upd)
+                uf = vf if damp is None else vf * damp
+                upd = jax.tree_util.tree_map(lambda u: u * uf, upd)
                 pas[i] = apply_updates(pas[i], upd)
                 nas[i] = nas[i] + valid.astype(jnp.int32)
                 w_means.append(jnp.mean(w))
@@ -674,14 +718,15 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
                 else jax.random.fold_in(draw_key, K)
             wsb, slot_b, _, valid = workset_draw(
                 wsb, celu.R, celu.sampling, rng=kb,
-                pipeline_staleness=s_pipe)
+                pipeline_staleness=s_loc)
             e = workset_entry(wsb, slot_b)
             vf = valid.astype(jnp.float32)
             g, w = local_grad_b(task.loss_b, pb, e, cos_xi,
                                 weighting=celu.weighting, fused=fused,
-                                mask=vf, pipeline_staleness=s_pipe)
+                                mask=vf, pipeline_staleness=s_loc)
             upd, ob = opt.update(g, ob, pb)
-            upd = jax.tree_util.tree_map(lambda u: u * vf, upd)
+            uf = vf if damp is None else vf * damp
+            upd = jax.tree_util.tree_map(lambda u: u * uf, upd)
             pb = apply_updates(pb, upd)
             nb = nb + valid.astype(jnp.int32)
             w_means.append(jnp.mean(w))
@@ -759,42 +804,49 @@ def make_round(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
 
 
 # --------------------------------------------------------------------------
-# The pipelined scheduler (paper §4.1, Fig. 4: the two-worker design)
+# The pipelined scheduler (paper §4.1 Fig. 4, generalized to a D-deep
+# exchange queue)
 # --------------------------------------------------------------------------
 class PendingExchange(NamedTuple):
-    """An in-flight exchange: the double-buffered workset slot.
+    """An in-flight exchange: one slot of the scheduler's exchange queue.
 
     ``fresh`` is ``exchange_compute``'s payload — wire-precision ⟨Z_i, ∇Z_i⟩
     (the statistics that will be inserted), the fresh gradients, Party B's
     loss, and the updated transport error-feedback residuals (in flight
     with the exchange: they are not adopted into the round state until the
     merge).  The batches ride along because the deferred workset insert
-    needs each party's own features."""
+    needs each party's own features.  ``dispatched_at`` records
+    ``comm_rounds`` (merges completed) at dispatch time — the merge uses
+    it to charge the fresh gradients their actual per-slot staleness
+    (``comm_rounds_at_merge - dispatched_at``, = D-1 at steady state)."""
     fresh: Dict[str, Any]
     batches_a: Sequence[Any]
     batch_b: Any
     batch_idx: Any
+    dispatched_at: Any = None
 
 
 class RoundState(NamedTuple):
-    """Typed round state shared by the two pipeline stages.
+    """Typed round state shared by the pipeline stages.
 
     The first six fields mirror the engine's state dict (the canonical
     wire format of :func:`init_state` — convert with :meth:`from_state` /
-    :meth:`as_state`); ``pending`` is the pipeline's second buffer: the
-    in-flight :class:`PendingExchange` dispatched for round t+1 while round
-    t's local scan runs (``None`` when no exchange is in flight)."""
+    :meth:`as_state`); ``pending`` is the scheduler's exchange queue: the
+    in-flight :class:`PendingExchange` slots, oldest first (at most
+    ``max(depth, 1)`` deep; a 1-tuple is the paper's double buffer,
+    ``()`` means no exchange is in flight)."""
     params: Dict[str, Any]
     opt: Dict[str, Any]
     ws: Dict[str, Any]
     steps: Dict[str, Any]
     comm_rounds: Any
     transport: Dict[str, Any]
-    pending: Optional[PendingExchange] = None
+    pending: Tuple[PendingExchange, ...] = ()
 
     @classmethod
     def from_state(cls, state: Dict[str, Any],
-                   pending: Optional[PendingExchange] = None) -> "RoundState":
+                   pending: Tuple[PendingExchange, ...] = ()
+                   ) -> "RoundState":
         return cls(params=state["params"], opt=state["opt"],
                    ws=state["ws"], steps=state["steps"],
                    comm_rounds=state["comm_rounds"],
@@ -813,7 +865,8 @@ def _zero_local_metrics():
 
 
 class PipelinedEngine:
-    """Explicitly staged round scheduler: the paper's two-worker pipeline.
+    """Explicitly staged round scheduler: the paper's two-worker pipeline,
+    generalized to a depth-D exchange queue.
 
     Depth 0 runs the stages sequentially — dispatch, merge, local scan —
     and is bit-identical to :func:`make_round`'s fused round on the golden
@@ -824,27 +877,42 @@ class PipelinedEngine:
         local()               # round t's R local updates (the overlap)
         merge()               # adopt the arrived exchange: opt step + insert
 
+    Depth D >= 2 keeps a ring of up to D in-flight exchanges
+    (``rs.pending``, oldest first) for the high-RTT regime where one
+    exchange cannot hide behind one local scan: each step dispatches a new
+    exchange, runs the local scan with the whole queue in flight, and
+    merges the OLDEST exchange once the queue is full — so an exchange
+    rides the wire for D local scans before its statistics land.  The
+    first D-1 steps only fill the queue (no merge: their metrics carry a
+    NaN ``loss``), and :meth:`flush` drains the remaining in-flight
+    exchanges, alternating scan/merge so every inserted batch still gets
+    its local scan.
+
     On the host-sim path the overlap is real at the dispatch level — the
     three stages are separate jits and nothing calls
     ``jax.block_until_ready`` between them, so XLA's async dispatch queues
     the exchange behind no host barrier while the local scan is enqueued;
-    the simulated WAN clock (``repro.launch.wan.WANClock``) charges
-    ``max(exchange, local)`` per round instead of the sum.  The pipeline's
-    cost is staleness: round t's local updates sample a workset whose
-    freshest entry is one exchange older than the sequential schedule, and
-    the exchange dispatched for round t+1 computes its forward passes from
-    params that do not yet include round t's local updates.  Both are
-    accounted for by the ``pipeline_staleness = depth`` offset threaded
-    into ``workset_sample`` (validity window) and the Algorithm-2 weights
-    (:func:`repro.core.weighting.pipeline_attenuation`).
+    the simulated WAN clock (``repro.launch.wan.WANClock``) charges the
+    D-deep ``max`` schedule per round instead of the sum.  The pipeline's
+    cost is staleness, and it is accounted PER SLOT at depth >= 2: the
+    local scan is passed the live in-flight count (= D at steady state,
+    smaller during warmup/drain) as a traced staleness scalar — it
+    tightens the workset validity window (``workset_draw``), attenuates
+    the Algorithm-2 weights ``w -> w^(1+s)``
+    (:func:`repro.core.weighting.pipeline_attenuation`, fused-kernel
+    post-scale included), and damps the local optimizer steps by
+    ``1 / (1 + c*s)`` (``CELUConfig.pipeline_lr_damping``); the merge
+    charges the fresh gradients their own slot age
+    (``comm_rounds - dispatched_at``).  Depths 0/1 keep the historical
+    static plumbing, bit-for-bit.
 
     Drive it as::
 
-        pe = make_pipeline(task, opt, celu, depth=1)
+        pe = make_pipeline(task, opt, celu, depth=2)
         rs = pe.init(engine.init_state(...))
         for t, (bi, ba, bb) in enumerate(batches):
             rs, m = pe.step(rs, ba, bb, bi)
-        rs, m = pe.flush(rs)          # drain the last in-flight local scan
+        rs, m = pe.flush(rs)          # drain the in-flight queue
         state = pe.finalize(rs)
     """
 
@@ -854,10 +922,20 @@ class PipelinedEngine:
                  fused_weighting: bool = True, jit: bool = True):
         if depth is None:
             depth = celu.pipeline_depth
-        if depth not in (0, 1):
-            raise ValueError(f"pipeline depth must be 0 or 1, got {depth}")
+        if depth < 0:
+            raise ValueError(f"pipeline depth must be >= 0, got {depth}")
+        if depth >= celu.W and depth:
+            raise ValueError(
+                f"pipeline depth {depth} exceeds the queue capacity the "
+                f"W={celu.W} workset ring can serve: a depth-D schedule "
+                f"retires the oldest D slots early, so D must be < W or "
+                f"every draw is a bubble")
         self.depth = depth
         self.celu = celu
+        # depth >= 2 threads the PER-SLOT staleness dynamically (warmup
+        # and drain see their true, smaller offsets); depths 0/1 keep the
+        # static golden-pinned plumbing
+        self.dynamic = depth >= 2
         n_local = celu.R if local_steps < 0 else local_steps
         self.n_local = n_local
         tp = transport if transport is not None \
@@ -865,11 +943,18 @@ class PipelinedEngine:
         self.transport = tp
         compute, apply_, scan = _make_stages(
             task, opt, celu, n_local=n_local, tp=tp, fused=fused_weighting,
-            pipeline_staleness=depth)
+            pipeline_staleness=depth,
+            lr_damping=celu.pipeline_lr_damping if self.dynamic else 0.0)
         wrap = jax.jit if jit else (lambda f: f)
         self._compute = wrap(compute)
         self._apply = wrap(apply_)
         self._scan = wrap(scan)
+
+    @property
+    def queue_capacity(self) -> int:
+        """Max in-flight exchanges (depth 0 still buffers the one exchange
+        between its dispatch and its immediate merge)."""
+        return max(self.depth, 1)
 
     # ---- stages ----------------------------------------------------------
     def init(self, state: Dict[str, Any]) -> RoundState:
@@ -878,35 +963,63 @@ class PipelinedEngine:
 
     def dispatch(self, rs: RoundState, batches_a, batch_b,
                  batch_idx) -> RoundState:
-        """Start round t+1's exchange (the background worker): compute the
-        wire statistics and fresh gradients from the CURRENT params.  Does
-        not block — the result is carried in ``rs.pending`` until
-        :meth:`merge`."""
-        if rs.pending is not None:
-            raise RuntimeError("an exchange is already in flight — "
-                               "merge() it before dispatching another "
-                               "(depth-1 pipeline)")
-        fresh = self._compute(rs.params, rs.transport, batches_a, batch_b,
-                              rs.comm_rounds)
-        return rs._replace(pending=PendingExchange(fresh, batches_a,
-                                                   batch_b, batch_idx))
+        """Start a new exchange (the background worker): compute the wire
+        statistics and fresh gradients from the CURRENT params.  Does not
+        block — the result is appended to the ``rs.pending`` queue until
+        its :meth:`merge`."""
+        if len(rs.pending) >= self.queue_capacity:
+            raise RuntimeError(
+                f"{len(rs.pending)} exchange(s) already in flight — the "
+                f"depth-{self.depth} queue holds at most "
+                f"{self.queue_capacity}; merge() the oldest before "
+                f"dispatching another")
+        # The error-feedback residual chain follows DISPATCH order (the
+        # encoder runs at dispatch), so a new exchange must start from the
+        # newest in-flight exchange's transport state, not the
+        # merged-prefix state in rs.transport — otherwise the D-1
+        # intervening residual updates would be silently dropped and the
+        # telescoping invariant broken.  Empty queue (depths 0/1) reduces
+        # to rs.transport — golden-pinned.
+        tstate = rs.pending[-1].fresh["tstate"] if rs.pending \
+            else rs.transport
+        # rng folds over the DISPATCH sequence number (merges completed +
+        # in-flight count), not comm_rounds alone: during warmup several
+        # exchanges are dispatched before the first merge advances the
+        # round counter, and they must not share wire noise.
+        fresh = self._compute(rs.params, tstate, batches_a, batch_b,
+                              rs.comm_rounds + len(rs.pending))
+        pe = PendingExchange(fresh, batches_a, batch_b, batch_idx,
+                             dispatched_at=rs.comm_rounds)
+        return rs._replace(pending=rs.pending + (pe,))
 
     def local(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
         """Run the R staleness-weighted local updates (the foreground
-        worker) against the workset as of the last merged exchange."""
-        state, lm = self._scan(rs.as_state())
+        worker) against the workset as of the last merged exchange.  At
+        depth >= 2 the scan is charged the CURRENT in-flight count as its
+        per-slot staleness."""
+        if self.dynamic:
+            state, lm = self._scan(rs.as_state(),
+                                   jnp.int32(len(rs.pending)))
+        else:
+            state, lm = self._scan(rs.as_state())
         return RoundState.from_state(state, rs.pending), lm
 
     def merge(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
-        """Adopt the in-flight exchange: fresh optimizer steps (applied to
-        the params as they are NOW — after any overlapped local updates),
-        workset inserts, transport residuals, counters."""
-        if rs.pending is None:
+        """Adopt the OLDEST in-flight exchange: fresh optimizer steps
+        (applied to the params as they are NOW — after any overlapped
+        local updates, lr-damped by the slot's age at depth >= 2), workset
+        inserts, transport residuals, counters."""
+        if not rs.pending:
             raise RuntimeError("no exchange in flight — dispatch() first")
-        p = rs.pending
-        state, m = self._apply(rs.as_state(), p.fresh, p.batches_a,
-                               p.batch_b, p.batch_idx)
-        return RoundState.from_state(state), m
+        p, rest = rs.pending[0], rs.pending[1:]
+        if self.dynamic:
+            state, m = self._apply(rs.as_state(), p.fresh, p.batches_a,
+                                   p.batch_b, p.batch_idx,
+                                   rs.comm_rounds - p.dispatched_at)
+        else:
+            state, m = self._apply(rs.as_state(), p.fresh, p.batches_a,
+                                   p.batch_b, p.batch_idx)
+        return RoundState.from_state(state, rest), m
 
     # ---- schedules -------------------------------------------------------
     def step(self, rs: RoundState, batches_a, batch_b, batch_idx
@@ -914,30 +1027,55 @@ class PipelinedEngine:
         """One communication round.  Depth 0: exchange then local scan
         (sequential).  Depth 1: the local scan of the PREVIOUS round runs
         between this round's dispatch and merge — its WAN exchange is in
-        flight the whole time."""
+        flight the whole time.  Depth D >= 2: dispatch, scan with the full
+        queue in flight, then merge the oldest exchange once the queue
+        holds D (the first D-1 steps only fill the queue and report a NaN
+        ``loss``)."""
         rs = self.dispatch(rs, batches_a, batch_b, batch_idx)
         if self.depth == 0:
             rs, m = self.merge(rs)
             rs, lm = self.local(rs)
-        else:
+        elif self.depth == 1:
             rs, lm = self.local(rs)
             rs, m = self.merge(rs)
+        else:
+            rs, lm = self.local(rs)
+            if len(rs.pending) == self.depth:
+                rs, m = self.merge(rs)
+            else:
+                m = {"loss": jnp.float32(jnp.nan)}   # warmup: queue filling
         m.update(lm)
         return rs, m
 
     def flush(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
-        """Drain the pipeline: at depth 1 the last merged exchange has not
-        had its local scan yet — run it.  Depth 0 is a no-op."""
+        """Drain the pipeline.  Depth 0 is a no-op; depth 1 runs the one
+        local scan the last merge still owes.  Depth >= 2 alternates
+        scan/merge until the queue is empty (per-slot staleness decaying
+        as it drains), then scans once more over the final inserts."""
         if self.depth == 0:
             return rs, _zero_local_metrics()
+        if self.depth == 1:
+            return self.local(rs)
+        scans = []
+        while rs.pending:
+            rs, lm = self.local(rs)
+            scans.append(lm)
+            rs, _ = self.merge(rs)
         rs, lm = self.local(rs)
-        return rs, lm
+        scans.append(lm)
+        n = len(scans)
+        return rs, {
+            "local_steps": sum(l["local_steps"] for l in scans),
+            "w_mean": sum(l["w_mean"] for l in scans) / n,
+            "w_zero_frac": sum(l["w_zero_frac"] for l in scans) / n,
+        }
 
     def finalize(self, rs: RoundState) -> Dict[str, Any]:
         """Back to the engine's canonical state dict."""
-        if rs.pending is not None:
-            raise RuntimeError("an exchange is still in flight — merge() "
-                               "or drop it before finalizing")
+        if rs.pending:
+            raise RuntimeError(
+                f"{len(rs.pending)} exchange(s) still in flight — merge() "
+                f"(or flush()) or drop them before finalizing")
         return rs.as_state()
 
 
@@ -949,7 +1087,10 @@ def make_pipeline(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
     """Build the staged round scheduler.  ``depth`` defaults to
     ``celu.pipeline_depth``; depth 0 reproduces :func:`make_round`'s
     sequential semantics bit-for-bit, depth 1 overlaps round t+1's WAN
-    exchange with round t's local updates (paper §4.1)."""
+    exchange with round t's local updates (paper §4.1), and depth D >= 2
+    keeps a D-deep queue of in-flight exchanges with per-slot
+    staleness-aware damping (see :class:`PipelinedEngine`).  ``depth``
+    must stay < ``celu.W`` — the ring cannot serve a deeper queue."""
     return PipelinedEngine(task, opt, celu, depth=depth,
                            local_steps=local_steps, transport=transport,
                            compression=compression,
@@ -1008,6 +1149,12 @@ def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
     from jax.sharding import PartitionSpec as P
 
     assert tower_fwd is not None and top_loss is not None
+    if pipeline_depth not in (0, 1):
+        raise ValueError(
+            f"make_pod_round supports pipeline_depth 0 or 1 (got "
+            f"{pipeline_depth}): the pod round is a single jitted SPMD "
+            f"program, so the D-deep exchange queue must be scheduled "
+            f"host-side — use PipelinedEngine/make_pipeline")
     tp = transport if transport is not None else PodTransport()
     fused = fused_weighting
 

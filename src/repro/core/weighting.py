@@ -46,7 +46,16 @@ def instance_weights(ad_hoc, stale, cos_xi: float, *,
     return jnp.where(w < cos_xi, 0.0, w)
 
 
-def pipeline_attenuation(w, staleness: int):
+def static_staleness(s) -> bool:
+    """True when ``s`` is a host-side Python int (the static depth knob
+    baked into the jitted stages at depths 0/1); a jnp scalar / tracer is
+    the per-slot DYNAMIC staleness of the depth-D queue and takes the
+    always-apply path (``w ** (1 + 0)`` is bitwise ``w``, so the dynamic
+    form is still the identity at runtime s = 0)."""
+    return isinstance(s, int) and not isinstance(s, bool)
+
+
+def pipeline_attenuation(w, staleness):
     """Discount Algorithm-2 weights for known extra staleness.
 
     Under a depth-``s`` pipelined schedule a sampled entry's statistics are
@@ -56,8 +65,13 @@ def pipeline_attenuation(w, staleness: int):
     already measured and compound it: ``w -> w^(1+s)``.  This keeps w=1
     (no measured drift) untouched, preserves zeros (below-threshold
     instances stay rejected), and shrinks borderline instances smoothly —
-    no new hyper-parameter.  ``staleness=0`` is the identity."""
-    if staleness <= 0:
+    no new hyper-parameter.  ``staleness=0`` is the identity.
+
+    ``staleness`` may be a Python int (static: depths 0/1, skipped
+    entirely at 0) or a jnp int scalar (the depth-D queue's per-slot
+    offset, traced through the jitted local scan — warmup and drain scans
+    see smaller s than the steady-state depth)."""
+    if static_staleness(staleness) and staleness <= 0:
         return w
     return w ** (1 + staleness)
 

@@ -313,13 +313,17 @@ def workset_insert(ws: Dict[str, Any], entry: Dict[str, Any],
 
 
 def _valid_mask(ws: Dict[str, Any], R: int,
-                pipeline_staleness: int = 0) -> jnp.ndarray:
+                pipeline_staleness=0) -> jnp.ndarray:
     """(W,) bool — alive entries: inserted, not expired, not exhausted.
 
     ``pipeline_staleness`` tightens the expiry window: under a depth-D
     pipelined schedule every cached entry is D exchanges older by the time
     its sampled round completes, so the oldest D ring slots are retired
-    early to keep the paper's max-staleness bound W."""
+    early to keep the paper's max-staleness bound W.  It may be a static
+    Python int (depths 0/1) or a traced jnp int scalar — the depth-D
+    queue's PER-SLOT offset, which shrinks during warmup/drain when fewer
+    exchanges are in flight.  At s >= W no draw is ever valid, which is
+    why the scheduler rejects depths >= W up front."""
     t = ws["time"]
     W = ws["insert_time"].shape[0]
     # not expired (the ring overwrite also enforces this at staleness 0)
@@ -330,7 +334,7 @@ def _valid_mask(ws: Dict[str, Any], R: int,
 
 
 def workset_draw(ws: Dict[str, Any], R: int, strategy: str, *,
-                 rng=None, pipeline_staleness: int = 0
+                 rng=None, pipeline_staleness=0
                  ) -> Tuple[Dict[str, Any], jnp.ndarray, jnp.ndarray,
                             jnp.ndarray]:
     """Pick one slot for a local update WITHOUT materializing the entry.
@@ -390,7 +394,7 @@ def workset_entry(ws: Dict[str, Any], slot) -> Dict[str, Any]:
 
 
 def workset_sample(ws: Dict[str, Any], R: int, strategy: str, *,
-                   rng=None, pipeline_staleness: int = 0
+                   rng=None, pipeline_staleness=0
                    ) -> Tuple[Dict[str, Any], Dict[str, Any], jnp.ndarray,
                               jnp.ndarray]:
     """Draw one entry for a local update: :func:`workset_draw` plus the
@@ -402,7 +406,7 @@ def workset_sample(ws: Dict[str, Any], R: int, strategy: str, *,
 
 
 def workset_stats(ws: Dict[str, Any], R: int,
-                  pipeline_staleness: int = 0) -> Dict[str, jnp.ndarray]:
+                  pipeline_staleness=0) -> Dict[str, jnp.ndarray]:
     """Table health counters.  ``pipeline_staleness`` must match the
     schedule the table serves: a depth-D pipeline retires the oldest D
     slots early (see :func:`_valid_mask`), so reporting at staleness 0

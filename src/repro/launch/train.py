@@ -73,6 +73,7 @@ def train_dlrm(args) -> Dict[str, Any]:
                       weighting=not args.no_weighting,
                       compression=args.compression,
                       pipeline_depth=args.pipeline_depth,
+                      pipeline_lr_damping=args.pipeline_lr_damping,
                       cache_dtype=args.cache_dtype,
                       cache_fused=not args.no_cache_fusion)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
@@ -183,6 +184,7 @@ def train_llm(args) -> Dict[str, Any]:
                       weighting=not args.no_weighting,
                       compression=args.compression,
                       pipeline_depth=args.pipeline_depth,
+                      pipeline_lr_damping=args.pipeline_lr_damping,
                       cache_dtype=args.cache_dtype,
                       cache_fused=not args.no_cache_fusion)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
@@ -237,11 +239,24 @@ def main(argv=None):
     ap.add_argument("--compression", default="", metavar="CODEC",
                     help="wire codec for the simulated WAN (e.g. int8_topk;"
                          " see repro.core.compression.CODEC_SPECS)")
-    ap.add_argument("--pipeline-depth", type=int, default=0,
-                    choices=(0, 1),
+    ap.add_argument("--pipeline-depth", type=int, default=0, metavar="D",
                     help="0 = sequential rounds; 1 = overlap round t+1's "
                          "WAN exchange with round t's local updates "
-                         "(paper §4.1 two-worker pipeline)")
+                         "(paper §4.1 two-worker pipeline); D >= 2 = a "
+                         "D-deep queue of in-flight exchanges for "
+                         "high-RTT links where one exchange cannot hide "
+                         "behind one local scan.  Every cached entry gets "
+                         "D exchanges staler, so D >= 2 trades rounds for "
+                         "wall-clock: weights are attenuated w -> w^(1+s) "
+                         "per slot and updates lr-damped by "
+                         "1/(1 + c*s) (see --pipeline-lr-damping); D must "
+                         "stay < W")
+    ap.add_argument("--pipeline-lr-damping", type=float, default=0.25,
+                    metavar="C",
+                    help="staleness-aware lr damping coefficient c of the "
+                         "eta/(1 + c*s) schedule applied to local and "
+                         "fresh updates on the depth-D (D >= 2) pipeline; "
+                         "0 disables (depths 0/1 never damp)")
     ap.add_argument("--cache-dtype", default="float32",
                     choices=("float32", "bfloat16", "int8"),
                     help="at-rest precision of the workset cache (int8 = "

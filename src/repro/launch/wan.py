@@ -16,9 +16,11 @@ fixes over the historical ``wan_seconds(nbytes)``:
 
   * **Overlap-aware round latency.**  The sequential schedule
     (``engine.make_round``) pays ``exchange_compute + wire + local``
-    per round; the depth-1 pipelined schedule
-    (``engine.PipelinedEngine``) hides the wire behind the local scan, so
-    a steady-state round costs ``max(exchange_compute + wire, local)``.
+    per round; the depth-D pipelined schedule
+    (``engine.PipelinedEngine``) hides the wire behind the local scans of
+    the D-round in-flight window, so a steady-state round costs
+    ``max(local, serial wire occupancy, (exchange_compute + wire) / D)``
+    — at depth 1 that is the paper's ``max(exchange + wire, local)``.
     Benchmarks must charge the schedule they actually ran — the historical
     model silently assumed full overlap for every protocol.
 """
@@ -61,13 +63,27 @@ class WANClock:
         """Latency of ONE communication round under the given schedule.
 
         Sequential (depth 0): the WAN stall serializes with both compute
-        phases.  Pipelined (depth >= 1): round t+1's exchange (compute +
-        wire) runs concurrently with round t's local updates, so the
-        steady-state round costs whichever worker is slower."""
+        phases.  Pipelined (depth D >= 1): up to D exchanges (compute +
+        wire) are in flight concurrently with the local updates, so the
+        steady-state round period is the slowest of three bounds —
+
+          * the local worker: ``local_compute_s`` per round;
+          * the serial wire occupancy: each round must still push one
+            exchange's bytes through the link (transfers pipeline, so the
+            RTT amortizes across the D in-flight exchanges but bandwidth
+            does not multiply);
+          * the exchange latency amortized over its D-round window:
+            ``(exchange_compute_s + wire) / D`` — an exchange has D rounds
+            to complete before its merge is due.
+
+        Depth 1 reduces to the historical ``max(exchange + wire, local)``
+        (the single-exchange window dominates its occupancy bound)."""
         wire = self.wire_seconds(up_bytes, down_bytes)
         if pipeline_depth <= 0:
             return exchange_compute_s + wire + local_compute_s
-        return max(exchange_compute_s + wire, local_compute_s)
+        occupancy = self.up_seconds(up_bytes) + self.down_seconds(down_bytes)
+        return max(local_compute_s, occupancy,
+                   (exchange_compute_s + wire) / pipeline_depth)
 
     def time_to_target(self, rounds: int, up_bytes: float,
                        down_bytes: float, **kw) -> float:

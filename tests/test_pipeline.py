@@ -202,12 +202,19 @@ def test_scheduler_stage_protocol_errors():
 
 
 def test_invalid_depth_rejected():
+    """Negative depths and depths the W-slot ring cannot serve (D >= W
+    leaves no valid draws) are rejected up front; D < W is accepted."""
     data, cfg = _workload()
     init_fn, task, _ = make_dlrm(cfg)
     opt = make_optimizer("adagrad", 0.05)
+    etask = engine.lift_two_party(task)
     with pytest.raises(ValueError, match="depth"):
-        engine.make_pipeline(engine.lift_two_party(task), opt,
-                             CELUConfig(), depth=2)
+        engine.make_pipeline(etask, opt, CELUConfig(), depth=-1)
+    with pytest.raises(ValueError, match="depth"):
+        engine.make_pipeline(etask, opt, CELUConfig(W=5), depth=5)
+    # D = W - 1 is the deepest queue the ring can serve
+    pe = engine.make_pipeline(etask, opt, CELUConfig(W=5), depth=4)
+    assert pe.depth == 4 and pe.queue_capacity == 4
 
 
 # --------------------------------------------------------------------------
