@@ -1,0 +1,41 @@
+"""Static boundary auditor for the CELU round engine.
+
+Traces the round/pipeline stage closures to jaxprs (NO execution beyond
+tracing) and proves three invariant families per commit:
+
+  * **taint** — cross-party information flow: every value reaching a
+    transport send passes the registered wire / codec-encode / DP-noise
+    stages, and no stage output hosted at one party carries another
+    party's raw taint (raw features, labels, pre-release cut tensors,
+    optimizer state) — including error-feedback residuals and the
+    pipelined scheduler's ``PendingExchange`` queue slots at every depth;
+  * **wire** — static byte accounting: the payload avals a codec's
+    ``encode`` produces (via ``jax.eval_shape``) must equal the codec's
+    ``wire_bytes()`` and the transport's ``uplink_bytes`` /
+    ``downlink_bytes`` counters, and every boundary crossing the jaxpr
+    contains must be accounted;
+  * **kernel** — Pallas kernel contracts: grid/BlockSpec divisibility at
+    the audited call-site geometries, VMEM residency vs budget, a
+    registered jnp oracle in ``kernels/ref.py`` per kernel, and no
+    narrowing precision cast that is not mediated by a declared
+    wire/codec/cache stage.
+
+Run ``python -m repro.analysis`` for the CLI (writes
+``results/AUDIT.json``); see ``docs/ANALYSIS.md`` for how to read the
+report and how to register new transports/codecs/kernels.
+
+This ``__init__`` stays import-light (no jax): the CLI must be able to
+set ``XLA_FLAGS`` for the pod audit before jax is first imported.
+"""
+
+__all__ = ["run_audit", "default_cases", "Finding", "AuditReport"]
+
+
+def __getattr__(name):
+    if name in ("run_audit", "default_cases"):
+        from . import audit
+        return getattr(audit, name)
+    if name in ("Finding", "AuditReport"):
+        from . import report
+        return getattr(report, name)
+    raise AttributeError(name)

@@ -1,0 +1,53 @@
+"""CLI: ``python -m repro.analysis`` — run the boundary audit, write
+``results/AUDIT.json``, print the human report, exit nonzero on errors.
+
+``XLA_FLAGS`` is set BEFORE jax is first imported (the package
+``__init__`` is deliberately jax-free) so the pod audit gets its
+2-device CPU mesh even on a single-host runner.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static boundary audit: information flow, wire "
+                    "bytes, kernel contracts.")
+    ap.add_argument("--out", default="results/AUDIT.json",
+                    help="JSON report path (default: results/AUDIT.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="3-case smoke matrix instead of full coverage")
+    ap.add_argument("--no-pod", action="store_true",
+                    help="skip the 2-device shard_map pod audit")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the seeded-mutation self-tests instead of "
+                         "the audit (exit 2 if any mutation is missed)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print non-error findings too")
+    args = ap.parse_args(argv)
+
+    if not args.no_pod and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=2"
+
+    if args.selftest:
+        from .selftest import render, run_selftest
+        ok, results = run_selftest()
+        print(render(results))
+        return 0 if ok else 2
+
+    from .audit import default_cases, run_audit
+    report = run_audit(default_cases(quick=args.quick),
+                       include_pod=not args.no_pod)
+    report.write_json(args.out)
+    print(report.render(verbose=args.verbose))
+    print(f"\nwrote {args.out}")
+    return 0 if report.passed else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,509 @@
+"""The audit orchestrator: build round traces for every supported config
+and run the three invariant families over each.
+
+Per audited case this module:
+
+  1. builds a small but structurally faithful K-party task (real
+     ``KPartyTask``, real ``init_state``, real ``_make_stages`` with the
+     production transport/codec/cache path — only the model is tiny);
+  2. composes the stages in the ORDER the schedule under audit executes
+     them — depth 0 sequential, depth 1 static-staleness overlap, depth
+     D >= 2 as two CHAINED exchange dispatches (the ``PendingExchange``
+     queue's residual chain) plus dynamic-staleness scan/merge — and
+     traces the composition to one jaxpr under
+     :func:`markers.instrumented`;
+  3. walks the jaxpr with the taint engine (``taint.py``), reconciles
+     the byte ledger (``wire_audit.py``), and lints the engine's fused
+     kernel promises at the audited geometry (``kernel_lint.py``).
+
+Input taints: each party's params / optimizer state / raw batch / cached
+features are that party's raw sources; workset ``z``/``dz`` rings hold
+already-released messages (untainted); error-feedback residuals are raw
+to their owner and enter pre-seeded with the ``wire`` stage — they are
+differences of wire-cast values by construction (every registered send
+path maintains that invariant), and without the seed every stateful
+codec path would false-positive on its first re-encode.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+from .report import AuditReport, CaseResult, Finding
+from .taint import EMPTY, OutTag, Taint, TraceAudit, audit_trace, raw_of
+
+AUDIT_B = 64        # audited batch geometry (fusable: 64 | BLOCK_B)
+AUDIT_Z = 8         # cut-layer width
+AUDIT_FA = 6        # feature-party input width
+AUDIT_FB = 5        # label-party own-feature width
+
+
+@dataclass(frozen=True)
+class AuditCase:
+    name: str
+    K: int = 1
+    depth: int = 0
+    compression: str = ""
+    cache_dtype: str = "float32"
+    dp_sigma: float = 0.0
+    wire_dtype: str = "float32"
+
+
+def default_cases(quick: bool = False) -> List[AuditCase]:
+    """The supported-config matrix, factorized so every axis value is
+    covered without the full cross product: codec x DP at depth 0, depth
+    x K at the heaviest codec, cache dtypes at depth 2, wire dtype."""
+    from ..core.compression import CODEC_SPECS
+
+    def mk(**kw):
+        kw.setdefault("name", "-".join(
+            [f"K{kw.get('K', 1)}", f"d{kw.get('depth', 0)}",
+             kw.get("compression") or "wire",
+             kw.get("cache_dtype", "float32"),
+             f"dp{kw.get('dp_sigma', 0.0):g}",
+             ] + ([kw["wire_dtype"]] if kw.get("wire_dtype",
+                                               "float32") != "float32"
+                  else [])))
+        return AuditCase(**kw)
+
+    if quick:
+        return [mk(), mk(compression="topk_int8", dp_sigma=0.3, depth=2,
+                         cache_dtype="int8"),
+                mk(compression="int8", wire_dtype="bfloat16")]
+
+    cases = []
+    for spec in ("",) + tuple(CODEC_SPECS):
+        for dp in (0.0, 0.3):
+            cases.append(mk(compression=spec, dp_sigma=dp))
+    for K in (1, 3):
+        for depth in (0, 1, 2, 4):
+            cases.append(mk(K=K, depth=depth, compression="topk_int8",
+                            cache_dtype="int8", dp_sigma=0.3))
+    for cd in ("float32", "bfloat16", "int8"):
+        cases.append(mk(depth=2, compression="int8", cache_dtype=cd))
+    for spec in ("", "int8"):
+        cases.append(mk(compression=spec, wire_dtype="bfloat16"))
+    # dedupe (the sweeps overlap at the origin), keep first occurrence
+    seen, out = set(), []
+    for c in cases:
+        if c.name not in seen:
+            seen.add(c.name)
+            out.append(c)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Toy-but-faithful K-party task
+# --------------------------------------------------------------------------
+def _toy_task(K: int):
+    import jax.numpy as jnp
+
+    from ..core import engine as E
+
+    def forward_a(p, batch):
+        return jnp.tanh(batch["x"] @ p["w"] + p["b"])
+
+    def loss_b(p, z_list, batch):
+        own = jnp.tanh(batch["x"] @ p["w_own"])
+        h = jnp.concatenate(list(z_list) + [own], axis=1)
+        logits = (h @ p["w_top"])[:, 0]
+        y = batch["y"]
+        li = jnp.maximum(logits, 0.0) - logits * y + \
+            jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        return li, jnp.float32(0.0)
+
+    task = E.KPartyTask(forward_a, loss_b)
+    params = {
+        "a": [{"w": jnp.zeros((AUDIT_FA, AUDIT_Z)),
+               "b": jnp.zeros((AUDIT_Z,))} for _ in range(K)],
+        "b": {"w_own": jnp.zeros((AUDIT_FB, AUDIT_Z)),
+              "w_top": jnp.zeros(((K + 1) * AUDIT_Z, 1))},
+    }
+    batches_a = [{"x": jnp.zeros((AUDIT_B, AUDIT_FA))} for _ in range(K)]
+    batch_b = {"x": jnp.zeros((AUDIT_B, AUDIT_FB)),
+               "y": jnp.zeros((AUDIT_B,))}
+    return task, params, batches_a, batch_b
+
+
+# --------------------------------------------------------------------------
+# Input / output tag trees
+# --------------------------------------------------------------------------
+def _const(tree, taint):
+    import jax
+    return jax.tree_util.tree_map(lambda _: taint, tree)
+
+
+def _ws_tags(ws, batch_taint: Taint):
+    """Workset rings hold RELEASED z/dz messages (untainted) plus the
+    owner's raw batch; the clocks are public."""
+    tags = {k: _const(v, EMPTY) for k, v in ws.items() if k != "buf"}
+    tags["buf"] = {k: _const(sub, batch_taint if k == "batch" else EMPTY)
+                   for k, sub in ws["buf"].items()}
+    return tags
+
+
+def _residual_seed(party: str) -> Taint:
+    # raw to the owner, pre-seeded with the wire stage (see module doc)
+    return Taint(raw=frozenset({party}), san=(("wire", 0),))
+
+
+def _transport_tags(tstate, K: int):
+    tags: Dict[str, Any] = {}
+    for d, lst in tstate.items():
+        owners = [f"a{i}" for i in range(K)] if d == "up" else ["b"] * K
+        tags[d] = [_const(lst[i], _residual_seed(owners[i]))
+                   for i in range(len(lst))]
+    return tags
+
+
+def _state_tags(state, K: int):
+    A = [raw_of(f"a{i}") for i in range(K)]
+    b = raw_of("b")
+    return {
+        "params": {"a": [_const(state["params"]["a"][i], A[i])
+                         for i in range(K)],
+                   "b": _const(state["params"]["b"], b)},
+        "opt": {"a": [_const(state["opt"]["a"][i], A[i])
+                      for i in range(K)],
+                "b": _const(state["opt"]["b"], b)},
+        "ws": {"a": [_ws_tags(state["ws"]["a"][i], A[i])
+                     for i in range(K)],
+               "b": _ws_tags(state["ws"]["b"], b)},
+        "steps": _const(state["steps"], EMPTY),
+        "comm_rounds": EMPTY,
+        "transport": _transport_tags(state["transport"], K),
+    }
+
+
+_PUBLIC = frozenset()
+
+
+def _out_state_tags(st_sds, K: int):
+    A = [frozenset({f"a{i}"}) for i in range(K)]
+    b = frozenset({"b"})
+
+    def reg(tree, allowed, label):
+        import jax
+        return jax.tree_util.tree_map(lambda _: OutTag(allowed, label),
+                                      tree)
+
+    tp_tags: Dict[str, Any] = {}
+    for d, lst in st_sds["transport"].items():
+        owners = A if d == "up" else [b] * K
+        tp_tags[d] = [reg(lst[i], owners[i], f"state.transport.{d}[{i}]")
+                      for i in range(len(lst))]
+    return {
+        "params": {"a": [reg(st_sds["params"]["a"][i], A[i],
+                             f"state.params.a[{i}]") for i in range(K)],
+                   "b": reg(st_sds["params"]["b"], b, "state.params.b")},
+        "opt": {"a": [reg(st_sds["opt"]["a"][i], A[i],
+                          f"state.opt.a[{i}]") for i in range(K)],
+                "b": reg(st_sds["opt"]["b"], b, "state.opt.b")},
+        "ws": {"a": [reg(st_sds["ws"]["a"][i], A[i], f"state.ws.a[{i}]")
+                     for i in range(K)],
+               "b": reg(st_sds["ws"]["b"], b, "state.ws.b")},
+        "steps": reg(st_sds["steps"], _PUBLIC, "state.steps"),
+        "comm_rounds": reg(st_sds["comm_rounds"], _PUBLIC,
+                           "state.comm_rounds"),
+        "transport": tp_tags,
+    }
+
+
+# w_mean / w_zero_frac aggregate per-party weight statistics across ALL
+# parties by design (sim-level diagnostics) — host rule skipped (None).
+_METRIC_ALLOWED = {"loss": frozenset({"b"}), "local_steps": _PUBLIC,
+                   "w_mean": None, "w_zero_frac": None}
+
+
+def _out_metric_tags(m_sds):
+    import jax
+    return {k: jax.tree_util.tree_map(
+        lambda _: OutTag(_METRIC_ALLOWED.get(k, None), f"metrics.{k}"),
+        v) for k, v in m_sds.items()}
+
+
+# --------------------------------------------------------------------------
+# One case
+# --------------------------------------------------------------------------
+def _make_celu(case: AuditCase):
+    from ..configs.base import CELUConfig
+    return CELUConfig(R=2, W=5, compression=case.compression,
+                      cache_dtype=case.cache_dtype,
+                      dp_sigma=case.dp_sigma,
+                      wire_dtype=case.wire_dtype,
+                      pipeline_depth=case.depth)
+
+
+def _compose(case: AuditCase, stages):
+    """Wire the three stages in the order the schedule under audit runs
+    them.  Depth >= 2 chains TWO exchange dispatches through the
+    transport-residual state — the PendingExchange queue slots — and
+    drives scan/apply with dynamic staleness scalars, exactly like
+    ``PipelinedEngine`` does."""
+    import jax.numpy as jnp
+    compute, apply_, scan = stages
+    depth = case.depth
+
+    if depth == 0:
+        def fn(state, batches_a, batch_b, batch_idx):
+            fresh = compute(state["params"], state["transport"],
+                            batches_a, batch_b, state["comm_rounds"])
+            state, m = apply_(state, fresh, batches_a, batch_b, batch_idx)
+            state, lm = scan(state)
+            return state, {**m, **lm}
+        return fn, 1
+
+    if depth == 1:
+        def fn(state, batches_a, batch_b, batch_idx):
+            fresh = compute(state["params"], state["transport"],
+                            batches_a, batch_b, state["comm_rounds"])
+            state, lm = scan(state)
+            state, m = apply_(state, fresh, batches_a, batch_b, batch_idx)
+            return state, {**m, **lm}
+        return fn, 1
+
+    def fn(state, batches_a, batch_b, batch_idx):
+        f1 = compute(state["params"], state["transport"], batches_a,
+                     batch_b, state["comm_rounds"])
+        f2 = compute(state["params"], f1["tstate"], batches_a, batch_b,
+                     state["comm_rounds"] + 1)
+        state, lm = scan(state, jnp.int32(depth))
+        state, _ = apply_(state, f1, batches_a, batch_b, batch_idx,
+                          jnp.int32(depth - 1))
+        state, m = apply_(state, f2, batches_a, batch_b, batch_idx + 1,
+                          jnp.int32(depth - 1))
+        return state, {**m, **lm}
+    return fn, 2
+
+
+def _check_collectives(trace: TraceAudit, case: str,
+                       pod_axis: Optional[str] = None) -> List[Finding]:
+    """Simulated-WAN traces must contain NO mesh collectives; pod traces
+    may only cross the pod axis through marked ppermutes."""
+    findings = []
+    colls = list(trace.collectives.values())
+    if pod_axis is None:
+        if colls:
+            findings.append(Finding(
+                code="taint.unmarked-collective", severity="error",
+                where=f"{colls[0][0]}",
+                detail=f"simulated-WAN trace contains mesh collective(s) "
+                       f"{sorted({c[0] for c in colls})} — cross-device "
+                       f"data movement outside the audited transport",
+                case=case))
+        return findings
+    n_pp = 0
+    for prim, axes in colls:
+        if pod_axis in axes and prim != "ppermute":
+            findings.append(Finding(
+                code="taint.unmarked-collective", severity="error",
+                where=prim,
+                detail=f"collective '{prim}' crosses the '{pod_axis}' "
+                       f"axis; only the transport's marked ppermute pair "
+                       f"may move data over the inter-pod link",
+                case=case))
+        elif prim == "ppermute" and pod_axis in axes:
+            n_pp += 1
+    if n_pp != len(trace.boundaries):
+        findings.append(Finding(
+            code="taint.unmarked-collective", severity="error",
+            where="ppermute",
+            detail=f"trace contains {n_pp} ppermute(s) over "
+                   f"'{pod_axis}' but only {len(trace.boundaries)} "
+                   f"transport boundary mark(s) — a raw ppermute "
+                   f"bypasses the transport",
+            case=case))
+    return findings
+
+
+def trace_case(case: AuditCase, transport=None) -> CaseResult:
+    """Trace + audit one configuration.  ``transport`` overrides the
+    config-derived inner transport (used by the mutation self-tests)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import engine as E
+    from ..optim import make_optimizer
+    from .kernel_lint import lint_engine_fusability
+    from .markers import AuditedTransport, instrumented
+    from .wire_audit import audit_wire
+
+    celu = _make_celu(case)
+    task, params, batches_a, batch_b = _toy_task(case.K)
+    opt = make_optimizer("adagrad", 0.1)
+    tp_inner = transport if transport is not None \
+        else E.make_transport(celu)
+    tp = AuditedTransport(tp_inner, celu)
+
+    state = E.init_state(task, params, opt, celu, batches_a, batch_b,
+                         transport=tp_inner)
+    stages = E._make_stages(
+        task, opt, celu, n_local=celu.R, tp=tp, fused=True,
+        pipeline_staleness=case.depth,
+        lr_damping=celu.pipeline_lr_damping if case.depth >= 2 else 0.0)
+    fn, n_computes = _compose(case, stages)
+    args = (state, batches_a, batch_b, jnp.int32(3))
+
+    # ONE trace, instrumented, returning the output structure too.  (An
+    # uninstrumented jax.eval_shape first would poison the jit trace
+    # cache: make_jaxpr on the same fn + avals reuses the cached,
+    # mark-free jaxpr and the audit would silently check nothing.)
+    tp._counts.clear()                  # fresh party indices per trace
+    with instrumented():
+        closed, out_sds = jax.make_jaxpr(fn, return_shape=True)(*args)
+
+    in_tags = (_state_tags(state, case.K),
+               [_const(batches_a[i], raw_of(f"a{i}"))
+                for i in range(case.K)],
+               _const(batch_b, raw_of("b")), EMPTY)
+    in_leaves = jax.tree_util.tree_leaves(
+        in_tags, is_leaf=lambda x: isinstance(x, Taint))
+    assert len(in_leaves) == len(closed.jaxpr.invars), \
+        (case.name, len(in_leaves), len(closed.jaxpr.invars))
+
+    st_sds, m_sds = out_sds
+    out_tags = (_out_state_tags(st_sds, case.K), _out_metric_tags(m_sds))
+    out_leaves = jax.tree_util.tree_leaves(
+        out_tags, is_leaf=lambda x: isinstance(x, OutTag))
+
+    trace = audit_trace(closed, in_leaves, out_leaves, case=case.name)
+    findings = list(trace.findings)
+    findings += _check_collectives(trace, case.name)
+
+    z_shapes = [(AUDIT_B, AUDIT_Z)] * case.K
+    wire_findings, stats = audit_wire(tp_inner, celu, z_shapes, trace,
+                                      n_computes, case.name)
+    findings += wire_findings
+    findings += lint_engine_fusability(celu, AUDIT_B, case.name)
+
+    if not trace.boundaries:
+        findings.append(Finding(
+            code="audit.no-boundaries", severity="error",
+            where="instrumented trace",
+            detail="the trace contains no boundary marks at all — the "
+                   "analyzer instrumentation is broken, the audit "
+                   "proves nothing", case=case.name))
+    if celu.cache_fused and not trace.pallas_calls:
+        findings.append(Finding(
+            code="audit.no-pallas", severity="warning",
+            where="instrumented trace",
+            detail="no pallas_call in a cache_fused trace at a fusable "
+                   "geometry — the fused path the config promises did "
+                   "not trace", case=case.name))
+
+    stats["eqns"] = len(closed.jaxpr.eqns)
+    stats["pallas_calls"] = len(trace.pallas_calls)
+    return CaseResult(name=case.name, config=asdict(case),
+                      findings=findings, stats=stats)
+
+
+# --------------------------------------------------------------------------
+# Pod (SPMD) case
+# --------------------------------------------------------------------------
+def trace_pod_case() -> CaseResult:
+    """Audit the shard_map pod round: both ppermute crossings must be the
+    transport's marked pair and nothing else may cross the pod axis.
+    Party-stacked arrays hold both parties in one leaf, so the per-party
+    host rule does not apply here — the collective whitelist is the
+    boundary theorem on this path."""
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
+    name = "pod-shardmap-d1"
+    if len(jax.devices()) < 2:
+        return CaseResult(
+            name=name, config={"skipped": True},
+            findings=[Finding(
+                code="audit.pod-skipped", severity="info",
+                where="jax.devices()",
+                detail="pod audit needs >= 2 devices; run the CLI (it "
+                       "forces a 2-device CPU mesh) or set XLA_FLAGS="
+                       "--xla_force_host_platform_device_count=2",
+                case=name)],
+            stats={"skipped": True})
+
+    from jax.sharding import Mesh
+
+    from ..core import engine as E
+    from ..optim import make_optimizer
+    from .markers import AuditedPodTransport, instrumented
+
+    B, F, Z, W = 16, 6, 8, 4
+    mesh = Mesh(np.array(jax.devices()[:2]), ("pod",))
+    tp = AuditedPodTransport(E.PodTransport())
+    opt = make_optimizer("adagrad", 0.1)
+
+    def tower_fwd(p, x):
+        return jnp.tanh(x @ p["w"])
+
+    def top_loss(p, za, zb, y):
+        logits = ((za + zb) @ p["w"])[:, 0]
+        return jnp.maximum(logits, 0.0) - logits * y + \
+            jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+    params = {"tower": {"w": jnp.zeros((2, F, Z))},
+              "top": {"w": jnp.zeros((2, Z, 1))}}
+    opt_state = opt.init(params)
+    ws = {"z": jnp.zeros((2, W, B, Z)), "dz": jnp.zeros((2, W, B, Z)),
+          "x": jnp.zeros((2, W, B, F)), "y": jnp.zeros((2, W, B)),
+          "time": jnp.zeros((2,), jnp.int32)}
+    x = jnp.zeros((2, B, F))
+    y = jnp.zeros((2, B))
+
+    fn = E.make_pod_round(mesh, opt, R=2, cos_xi=0.5,
+                          tower_fwd=tower_fwd, top_loss=top_loss,
+                          transport=tp, pipeline_depth=1)
+    tp._n = 0
+    with instrumented():
+        closed = jax.make_jaxpr(fn)(params, opt_state, ws, x, y)
+
+    in_leaves = [EMPTY] * len(closed.jaxpr.invars)
+    out_leaves = [OutTag(None, "pod")] * len(closed.jaxpr.outvars)
+    trace = audit_trace(closed, in_leaves, out_leaves, case=name)
+    findings = list(trace.findings)
+    findings += _check_collectives(trace, name, pod_axis="pod")
+    if len(trace.boundaries) != 2:
+        findings.append(Finding(
+            code="audit.no-boundaries", severity="error",
+            where="pod trace",
+            detail=f"expected the up/down ppermute boundary pair, found "
+                   f"{len(trace.boundaries)} boundary mark(s)",
+            case=name))
+    return CaseResult(name=name, config={"K": 1, "depth": 1,
+                                         "transport": "PodTransport"},
+                      findings=findings,
+                      stats={"boundaries": len(trace.boundaries),
+                             "eqns": len(closed.jaxpr.eqns)})
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+def run_audit(cases: Optional[Sequence[AuditCase]] = None, *,
+              include_pod: bool = True,
+              include_kernel_lint: bool = True) -> AuditReport:
+    import jax
+
+    from .kernel_lint import DEFAULT_GEOMETRIES, lint_kernels
+
+    if cases is None:
+        cases = default_cases()
+    results: List[CaseResult] = []
+    if include_kernel_lint:
+        kf = lint_kernels(DEFAULT_GEOMETRIES)
+        results.append(CaseResult(
+            name="kernel-contracts",
+            config={"geometries": [g.name for g in DEFAULT_GEOMETRIES]},
+            findings=kf,
+            stats={"contracts": 7,
+                   "geometries": len(DEFAULT_GEOMETRIES)}))
+    for case in cases:
+        results.append(trace_case(case))
+    if include_pod:
+        results.append(trace_pod_case())
+    return AuditReport(
+        cases=results,
+        meta={"jax": jax.__version__, "devices": len(jax.devices()),
+              "audited_cases": len(results)})

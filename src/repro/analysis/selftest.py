@@ -1,0 +1,184 @@
+"""Seeded-mutation self-tests: the auditor must CATCH each planted bug,
+naming the offender — an analyzer that cannot fail is not a gate.
+
+Four mutations, one per invariant family plus the DP-ordering rule:
+
+  * **raw-send** — a transport whose ``send`` returns the raw tensor
+    unencoded: the taint pass must flag the boundary crossing.
+  * **under-count** — a codec whose ``wire_bytes`` reports half the
+    payload its ``encode`` emits: the byte reconciliation must flag the
+    codec and direction.
+  * **bad-blockspec** — the fused kernels' ``BLOCK_B`` is patched so the
+    audited batch geometry no longer tiles: the kernel lint must flag
+    the silently-disabled fused path.
+  * **noise-before-encode** — the pre-fix ``CompressedWANTransport``
+    behavior (DP noise applied BEFORE the lossy encode, so error
+    feedback re-transmits and cancels the mechanism): the sanitizer
+    ordering check must flag it.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import List
+
+from .audit import AuditCase, _make_celu, trace_case
+
+
+@dataclass
+class MutationResult:
+    name: str
+    expected_code: str
+    caught: bool
+    errors: List[str] = field(default_factory=list)
+
+
+def _mut_raw_send() -> MutationResult:
+    from ..core import compression as C
+    from ..core import engine as E
+
+    class RawLeakTransport(E.CompressedWANTransport):
+        """Planted bug: releases the raw cut tensor, codec ignored."""
+
+        def send(self, rng, x, res=None, direction: str = "up"):
+            return x, res
+
+    case = AuditCase(name="mut-raw-send", compression="int8")
+    up, down = C.make_codec_pair("int8")
+    r = trace_case(case, transport=RawLeakTransport(_make_celu(case),
+                                                    up, down))
+    return _grade("raw-send", "taint.raw-boundary", "RawLeakTransport", r)
+
+
+def _mut_under_count() -> MutationResult:
+    from ..core import compression as C
+    from ..core import engine as E
+
+    class UnderCountCodec:
+        """Planted bug: reports half the bytes its payload occupies."""
+
+        lossless = False
+        exact = False
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def encode(self, rng, x):
+            return self._inner.encode(rng, x)
+
+        def decode(self, payload, like):
+            return self._inner.decode(payload, like)
+
+        def wire_bytes(self, shape, dtype) -> int:
+            return self._inner.wire_bytes(shape, dtype) // 2
+
+    case = AuditCase(name="mut-under-count", compression="int8")
+    tp = E.CompressedWANTransport(_make_celu(case),
+                                  UnderCountCodec(C.make_codec("int8")),
+                                  UnderCountCodec(C.make_codec("int8")))
+    r = trace_case(case, transport=tp)
+    return _grade("under-count", "wire.bytes-mismatch", "UnderCountCodec",
+                  r)
+
+
+@contextlib.contextmanager
+def _patched_block(val: int):
+    from ..kernels import cosine_weight as cw
+    from ..kernels import fused_sample as fs
+    o1, o2 = cw.BLOCK_B, fs.BLOCK_B
+    cw.BLOCK_B = fs.BLOCK_B = val
+    try:
+        yield
+    finally:
+        cw.BLOCK_B, fs.BLOCK_B = o1, o2
+
+
+def _mut_bad_blockspec() -> MutationResult:
+    # B=64 stops tiling once BLOCK_B=48: min(48, 64)=48 and 64 % 48 != 0
+    with _patched_block(48):
+        r = trace_case(AuditCase(name="mut-bad-blockspec"))
+    return _grade("bad-blockspec", "kernel.fused-path-disabled",
+                  "cosine_weight", r)
+
+
+def _mut_noise_before_encode() -> MutationResult:
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import compression as C
+    from ..core import engine as E
+
+    class StatelessClaim:
+        """Lossy codec that opts out of error feedback (no residual
+        state) — isolates the ORDERING violation below.  With residuals
+        the same bug surfaces as ``taint.raw-boundary`` instead: the
+        un-noised residual joins the release and dilutes the DP stage
+        out of the taint's sanitizer set."""
+
+        lossless = True      # -> no residual slots in the round state
+        exact = False
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def encode(self, rng, x):
+            return self._inner.encode(rng, x)
+
+        def decode(self, payload, like):
+            return self._inner.decode(payload, like)
+
+        def wire_bytes(self, shape, dtype) -> int:
+            return self._inner.wire_bytes(shape, dtype)
+
+    class NoiseFirstTransport(E.CompressedWANTransport):
+        """Planted bug: the pre-fix DP path — noise rides the value INTO
+        the lossy encode instead of the decoded wire value."""
+
+        def send(self, rng, x, res=None, direction: str = "up"):
+            codec = self.codecs[direction]
+            x, _ = E.SimWANTransport.send(self, rng, x, None, direction)
+            e = x.astype(jnp.float32)
+            if res is not None:
+                e = e + res
+            payload = codec.encode(jax.random.fold_in(rng, 1), e)
+            y = codec.decode(payload, e)
+            return y.astype(x.dtype), None if res is None else e - y
+
+    case = AuditCase(name="mut-noise-before-encode", compression="int8",
+                     dp_sigma=0.3)
+    tp = NoiseFirstTransport(_make_celu(case),
+                             StatelessClaim(C.make_codec("int8")),
+                             StatelessClaim(C.make_codec("int8")))
+    r = trace_case(case, transport=tp)
+    return _grade("noise-before-encode", "taint.sanitizer-order",
+                  "NoiseFirstTransport", r)
+
+
+def _grade(name: str, expected_code: str, offender: str,
+           result) -> MutationResult:
+    hits = [f for f in result.findings
+            if f.code == expected_code and offender in f.where]
+    return MutationResult(
+        name=name, expected_code=expected_code, caught=bool(hits),
+        errors=[f"{f.code} @ {f.where}" for f in result.errors])
+
+
+def run_selftest():
+    """-> (all caught?, per-mutation results)."""
+    results = [_mut_raw_send(), _mut_under_count(), _mut_bad_blockspec(),
+               _mut_noise_before_encode()]
+    return all(m.caught for m in results), results
+
+
+def render(results: List[MutationResult]) -> str:
+    lines = ["seeded-mutation self-test:"]
+    for m in results:
+        status = "caught" if m.caught else "MISSED"
+        lines.append(f"  [{status:6s}] {m.name} -> {m.expected_code}")
+        if not m.caught:
+            lines.append(f"           analyzer errors were: "
+                         f"{m.errors or ['<none>']}")
+    ok = all(m.caught for m in results)
+    lines.append("SELFTEST PASSED" if ok else
+                 "SELFTEST FAILED: the analyzer missed a planted bug")
+    return "\n".join(lines)

@@ -170,6 +170,24 @@ SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
 LONG_CONTEXT_WINDOW = 8192
 
 
+def validate_pipeline_depth(depth: int, W: int) -> None:
+    """THE pipeline-depth capacity rule, stated once.
+
+    A depth-D exchange queue retires the oldest D workset ring slots early
+    (every in-flight exchange owns the slot its merge will overwrite), so
+    D must stay < W or every draw is a bubble.  ``CELUConfig.__post_init__``
+    and the ``PipelinedEngine`` scheduler both call this — the queue-overflow
+    RuntimeErrors at dispatch time derive their capacity from the same
+    ``depth`` and need no second copy of the rule."""
+    if depth < 0:
+        raise ValueError(f"pipeline_depth must be >= 0, got {depth}")
+    if depth and depth >= max(W, 1):
+        raise ValueError(
+            f"pipeline_depth ({depth}) must be < W "
+            f"({W}): a depth-D queue retires the oldest D ring "
+            f"slots early, so D >= W leaves no valid workset draws")
+
+
 @dataclass(frozen=True)
 class CELUConfig:
     """Hyper-parameters of the paper's technique (Section 3 notation)."""
@@ -227,14 +245,7 @@ class CELUConfig:
     pipeline_lr_damping: float = 0.25
 
     def __post_init__(self):
-        if self.pipeline_depth < 0:
-            raise ValueError(
-                f"pipeline_depth must be >= 0, got {self.pipeline_depth}")
-        if self.pipeline_depth >= max(self.W, 1) and self.pipeline_depth:
-            raise ValueError(
-                f"pipeline_depth ({self.pipeline_depth}) must be < W "
-                f"({self.W}): a depth-D queue retires the oldest D ring "
-                f"slots early, so D >= W leaves no valid workset draws")
+        validate_pipeline_depth(self.pipeline_depth, self.W)
         if self.pipeline_lr_damping < 0.0:
             raise ValueError(
                 f"pipeline_lr_damping must be >= 0, got "

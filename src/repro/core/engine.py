@@ -90,7 +90,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, \
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import CELUConfig
+from ..configs.base import CELUConfig, validate_pipeline_depth
 from ..optim import Optimizer, apply_updates
 from .weighting import (instance_weights, pipeline_attenuation,
                         static_staleness, xi_to_cos)
@@ -155,6 +155,16 @@ class SimWANTransport:
         """Per-round transport state (empty: this transport is stateless)."""
         return {}
 
+    def _wire_cast(self, x):
+        """Round-trip through the wire dtype (the simulated quantized
+        transmission).  A separate method so every send path shares one
+        wire stage — and so the static auditor
+        (:mod:`repro.analysis`) can mark exactly this op as the
+        registered wire crossing."""
+        if x.dtype != self.wire:
+            x = x.astype(self.wire).astype(x.dtype)
+        return x
+
     def send(self, rng, x, res=None, direction: str = "up"):
         """The message actually released across the link.  ``res`` is the
         per-message error-feedback residual (unused here — threaded through
@@ -163,9 +173,7 @@ class SimWANTransport:
             from .privacy import DPConfig, privatize
             x = privatize(rng, x, DPConfig(clip=self.celu.dp_clip,
                                            sigma=self.celu.dp_sigma))
-        if x.dtype != self.wire:
-            x = x.astype(self.wire).astype(x.dtype)
-        return x, res
+        return self._wire_cast(x), res
 
     def message_bytes(self, z_shape) -> int:
         import numpy as np
@@ -217,9 +225,34 @@ class CompressedWANTransport(SimWANTransport):
                 for d in self.stateful_directions}
 
     def send(self, rng, x, res=None, direction: str = "up"):
-        x, _ = super().send(rng, x, None, direction)
         codec = self.codecs[direction]
-        if getattr(codec, "exact", False):
+        exact = getattr(codec, "exact", False)
+        if self.celu.dp_sigma > 0.0 and not exact:
+            # DP over a LOSSY codec: the noise must ride the ENCODED
+            # value, not the pre-compression one.  Noising before encode
+            # would (a) spend wire bits and top-k slots on transmitting
+            # noise and (b) leak the noise into the error-feedback
+            # residual, whose next-round retransmission CANCELS it —
+            # error feedback would silently undo the privacy mechanism.
+            # So: clip -> wire cast -> +residual -> encode/decode ->
+            # noise-free residual -> Gaussian noise on the decoded wire
+            # value.  The residual never sees (and never repays) the
+            # noise; sensitivity is still dp_clip because clipping
+            # happens before everything the other party observes.
+            from .privacy import DPConfig, clip_rows, wire_noise
+            cfg = DPConfig(clip=self.celu.dp_clip,
+                           sigma=self.celu.dp_sigma)
+            xc = self._wire_cast(clip_rows(x, cfg.clip))
+            e = xc.astype(jnp.float32)
+            if res is not None:
+                e = e + res
+            payload = codec.encode(jax.random.fold_in(rng, 1), e)
+            y = codec.decode(payload, e)
+            new_res = None if res is None else e - y
+            y = wire_noise(jax.random.fold_in(rng, 2), y, cfg)
+            return y.astype(x.dtype), new_res
+        x, _ = super().send(rng, x, None, direction)
+        if exact:
             # bitwise round-trip (identity): nothing to encode — this is
             # what keeps the identity wire golden-trace-identical to
             # SimWANTransport.  Merely-lossless codecs (fp32-rounding
@@ -922,14 +955,9 @@ class PipelinedEngine:
                  fused_weighting: bool = True, jit: bool = True):
         if depth is None:
             depth = celu.pipeline_depth
-        if depth < 0:
-            raise ValueError(f"pipeline depth must be >= 0, got {depth}")
-        if depth >= celu.W and depth:
-            raise ValueError(
-                f"pipeline depth {depth} exceeds the queue capacity the "
-                f"W={celu.W} workset ring can serve: a depth-D schedule "
-                f"retires the oldest D slots early, so D must be < W or "
-                f"every draw is a bubble")
+        # same rule, same message as CELUConfig.__post_init__ — an
+        # explicit depth= override must not bypass the capacity check
+        validate_pipeline_depth(depth, celu.W)
         self.depth = depth
         self.celu = celu
         # depth >= 2 threads the PER-SLOT staleness dynamically (warmup
@@ -1152,9 +1180,16 @@ def make_pod_round(mesh, opt: Optimizer, *, R: int, cos_xi: float,
     if pipeline_depth not in (0, 1):
         raise ValueError(
             f"make_pod_round supports pipeline_depth 0 or 1 (got "
-            f"{pipeline_depth}): the pod round is a single jitted SPMD "
-            f"program, so the D-deep exchange queue must be scheduled "
-            f"host-side — use PipelinedEngine/make_pipeline")
+            f"{pipeline_depth}): the D-deep exchange queue is scheduled "
+            f"on the HOST — PipelinedEngine keeps the in-flight "
+            f"PendingExchange slots in ``rs.pending`` between three "
+            f"separately jitted stage calls, and the pod round is ONE "
+            f"jitted SPMD program with no host in the loop to carry that "
+            f"queue.  A depth-D pod schedule needs the device-side "
+            f"ppermute-chained queue tracked in ROADMAP.md "
+            f"('Mosaic/pod — the real-TPU milestone').  Use "
+            f"make_pipeline/PipelinedEngine for D >= 2, or depth 1 here "
+            f"(the compiler-overlapped two-worker schedule).")
     tp = transport if transport is not None else PodTransport()
     fused = fused_weighting
 

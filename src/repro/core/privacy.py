@@ -34,14 +34,24 @@ def clip_rows(x, clip: float):
     return (flat * scale).reshape(x.shape).astype(x.dtype)
 
 
+def wire_noise(rng, y, cfg: DPConfig):
+    """The Gaussian-mechanism noise ALONE — ``y`` must already be clipped
+    (sensitivity = cfg.clip).  Split out of :func:`privatize` so the
+    compressed transport can add the noise to the DECODED wire value (after
+    the codec, with the error-feedback residual already taken noise-free)
+    and so the static auditor can mark exactly this op as the DP stage."""
+    if cfg.sigma <= 0.0:
+        return y
+    noise = cfg.sigma * cfg.clip * jax.random.normal(
+        rng, y.shape, jnp.float32)
+    return (y.astype(jnp.float32) + noise).astype(y.dtype)
+
+
 def privatize(rng, x, cfg: DPConfig):
     """Clip + add Gaussian noise (the released message)."""
     if cfg.sigma <= 0.0:
         return x
-    y = clip_rows(x, cfg.clip)
-    noise = cfg.sigma * cfg.clip * jax.random.normal(
-        rng, y.shape, jnp.float32)
-    return (y.astype(jnp.float32) + noise).astype(x.dtype)
+    return wire_noise(rng, clip_rows(x, cfg.clip), cfg)
 
 
 def epsilon_per_release(cfg: DPConfig, delta: float = 1e-5) -> float:

@@ -1,0 +1,135 @@
+"""Residual-aware DP accounting (satellite S1 of the boundary-auditor
+PR): with ``dp_sigma > 0`` over a LOSSY codec the Gaussian noise must
+ride the DECODED wire value — applied after the encode/decode round
+trip, with the error-feedback residual taken from the un-noised
+quantity.  Noising first means (a) the residual re-transmits the noise
+in later rounds, cancelling the mechanism, and (b) wire bits are wasted
+encoding noise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CELUConfig
+from repro.core.compression import IdentityCodec, TopKCodec
+from repro.core.engine import CompressedWANTransport
+from repro.core.privacy import DPConfig, clip_rows, wire_noise
+
+
+def _deterministic_codec():
+    # top-k over identity values: encode/decode ignore the rng entirely,
+    # so residual differences across noise keys isolate the DP path
+    return TopKCodec(0.25, value_codec=IdentityCodec())
+
+
+def _dp_transport(sigma=0.3, clip=0.5):
+    celu = CELUConfig(dp_sigma=sigma, dp_clip=clip)
+    return CompressedWANTransport(celu, _deterministic_codec(),
+                                  _deterministic_codec()), celu
+
+
+@pytest.fixture
+def x():
+    return jax.random.normal(jax.random.PRNGKey(7), (64, 8))
+
+
+@pytest.fixture
+def res():
+    return 0.1 * jax.random.normal(jax.random.PRNGKey(8), (64, 8))
+
+
+def test_residual_independent_of_noise_key(x, res):
+    """THE regression: the error-feedback residual must not depend on
+    the DP noise draw — noise is added after the residual is taken."""
+    tp, _ = _dp_transport()
+    y1, r1 = tp.send(jax.random.PRNGKey(1), x, res, "up")
+    y2, r2 = tp.send(jax.random.PRNGKey(2), x, res, "up")
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    # ...while the RELEASED value is genuinely noised per key
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_send_matches_whitebox_pipeline(x, res):
+    """Bit-exact replication of the required order: clip -> wire cast ->
+    +residual -> encode -> decode -> residual out -> noise -> release."""
+    tp, celu = _dp_transport()
+    rng = jax.random.PRNGKey(3)
+    y, r = tp.send(rng, x, res, "up")
+
+    cfg = DPConfig(clip=celu.dp_clip, sigma=celu.dp_sigma)
+    codec = tp.codecs["up"]
+    e = tp._wire_cast(clip_rows(x, cfg.clip)).astype(jnp.float32) + res
+    payload = codec.encode(jax.random.fold_in(rng, 1), e)
+    decoded = codec.decode(payload, e)
+    np.testing.assert_array_equal(np.asarray(r),
+                                  np.asarray(e - decoded))
+    want_y = wire_noise(jax.random.fold_in(rng, 2), decoded,
+                        cfg).astype(x.dtype)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want_y))
+
+
+def test_release_noise_has_dp_scale(x, res):
+    """y - decode(encode(e)) must be pure Gaussian noise at
+    sigma * clip — the residual is excluded from the noised quantity."""
+    sigma, clip = 0.3, 0.5
+    tp, _ = _dp_transport(sigma, clip)
+    rng = jax.random.PRNGKey(4)
+    y, _ = tp.send(rng, x, res, "up")
+    codec = tp.codecs["up"]
+    e = tp._wire_cast(clip_rows(x, clip)).astype(jnp.float32) + res
+    decoded = codec.decode(codec.encode(jax.random.fold_in(rng, 1), e), e)
+    noise = np.asarray(y - decoded)
+    assert abs(noise.std() - sigma * clip) < 0.25 * sigma * clip
+    assert abs(noise.mean()) < 3 * sigma * clip / np.sqrt(noise.size)
+
+
+def test_dp_zero_path_is_unnoised_error_feedback(x, res):
+    """sigma = 0 keeps the historical lossy path bit-for-bit: no clip,
+    no noise, residual = e - decode(encode(e))."""
+    celu = CELUConfig()
+    tp = CompressedWANTransport(celu, _deterministic_codec(),
+                                _deterministic_codec())
+    rng = jax.random.PRNGKey(5)
+    y, r = tp.send(rng, x, res, "up")
+    codec = tp.codecs["up"]
+    e = x.astype(jnp.float32) + res
+    decoded = codec.decode(codec.encode(jax.random.fold_in(rng, 1), e), e)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(decoded.astype(x.dtype)))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(e - decoded))
+
+
+def test_exact_codec_passes_residual_through(x, res):
+    """Exact codecs skip the residual machinery even under DP — the
+    noised wire value needs no error feedback."""
+    celu = CELUConfig(dp_sigma=0.3, dp_clip=0.5)
+    tp = CompressedWANTransport(celu, IdentityCodec(), IdentityCodec())
+    _, r = tp.send(jax.random.PRNGKey(6), x, res, "up")
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(res))
+
+
+def test_round_with_dp_and_lossy_codec_trains():
+    """Integration: a full engine round under dp + top-k+int8 produces
+    finite loss and finite residual state."""
+    from repro.analysis.audit import _toy_task
+    from repro.core.engine import init_state, make_round, make_transport
+    from repro.optim import make_optimizer
+
+    celu = CELUConfig(R=2, W=3, dp_sigma=0.3, compression="topk_int8")
+    task, params, batches_a, batch_b = _toy_task(1)
+    batches_a = [{"x": jax.random.normal(jax.random.PRNGKey(0), (64, 6))}]
+    batch_b = {"x": jax.random.normal(jax.random.PRNGKey(1), (64, 5)),
+               "y": (jax.random.uniform(jax.random.PRNGKey(2), (64,))
+                     > 0.5).astype(jnp.float32)}
+    opt = make_optimizer("adagrad", 0.1)
+    tp = make_transport(celu)
+    state = init_state(task, params, opt, celu, batches_a, batch_b,
+                       transport=tp)
+    fn = make_round(task, opt, celu, transport=tp)
+    for i in range(3):
+        state, m = fn(state, batches_a, batch_b, jnp.int32(i))
+    assert np.isfinite(float(m["loss"]))
+    for d in ("up", "down"):
+        for rr in state["transport"][d]:
+            assert np.all(np.isfinite(np.asarray(rr)))

@@ -1,0 +1,107 @@
+"""WANClock edge cases (satellite of the boundary-auditor PR): zero-RTT
+links, asymmetric bandwidths, the occupancy-dominated deep-queue regime,
+and depth-0/1 schedule continuity."""
+import pytest
+
+from repro.configs.base import CELUConfig
+from repro.core.engine import make_transport
+from repro.launch.wan import (DEFAULT_CLOCK, WANClock,
+                              transport_round_updown, wan_seconds)
+
+MB = 1e6
+
+
+def test_zero_rtt_wire_is_pure_bandwidth():
+    clk = WANClock(up_bandwidth=10 * MB, down_bandwidth=10 * MB,
+                   latency=0.0)
+    assert clk.rtt == 0.0
+    assert clk.wire_seconds(10 * MB, 0.0) == pytest.approx(1.0)
+    assert clk.wire_seconds(10 * MB, 5 * MB) == pytest.approx(1.5)
+    # zero bytes on a zero-latency link costs nothing
+    assert clk.wire_seconds(0.0, 0.0) == 0.0
+
+
+def test_asymmetric_bandwidths_charge_each_leg_separately():
+    clk = WANClock(up_bandwidth=1 * MB, down_bandwidth=10 * MB,
+                   latency=0.0)
+    # same bytes, 10x slower uplink: the up leg dominates
+    assert clk.up_seconds(2 * MB) == pytest.approx(2.0)
+    assert clk.down_seconds(2 * MB) == pytest.approx(0.2)
+    assert clk.wire_seconds(2 * MB, 2 * MB) == pytest.approx(2.2)
+    # a symmetric clock at the slow rate would overcharge the downlink
+    sym = clk.with_bandwidth(1 * MB)
+    assert sym.down_bandwidth == 1 * MB
+    assert sym.wire_seconds(2 * MB, 2 * MB) == pytest.approx(4.0)
+
+
+def test_with_bandwidth_defaults_down_to_up():
+    clk = DEFAULT_CLOCK.with_bandwidth(5 * MB, 1 * MB)
+    assert clk.up_bandwidth == 5 * MB
+    assert clk.down_bandwidth == 1 * MB
+    assert clk.latency == DEFAULT_CLOCK.latency   # preserved
+
+
+def test_occupancy_dominates_deep_queue():
+    # big wire, cheap compute, deep queue: amortizing the exchange over
+    # D rounds cannot beat the serial link occupancy — each round still
+    # pushes one exchange's bytes through the shared link
+    clk = WANClock(up_bandwidth=10 * MB, down_bandwidth=10 * MB,
+                   latency=0.01)
+    up = down = 80 * MB                       # 8 s per leg
+    occupancy = 16.0
+    for depth in (4, 8, 64):
+        r = clk.round_seconds(up, down, exchange_compute_s=0.1,
+                              local_compute_s=1.0, pipeline_depth=depth)
+        assert r == pytest.approx(occupancy), depth
+    # shallow queue: the per-exchange window dominates instead
+    r1 = clk.round_seconds(up, down, exchange_compute_s=0.1,
+                           local_compute_s=1.0, pipeline_depth=1)
+    assert r1 == pytest.approx(0.1 + clk.wire_seconds(up, down))
+
+
+def test_depth0_depth1_continuity_when_local_is_free():
+    # with no local compute and no exchange compute, depth 1 hides
+    # nothing: both schedules pay exactly the wire
+    clk = WANClock(up_bandwidth=10 * MB, down_bandwidth=10 * MB,
+                   latency=0.0)
+    up, down = 10 * MB, 10 * MB
+    d0 = clk.round_seconds(up, down, pipeline_depth=0)
+    d1 = clk.round_seconds(up, down, pipeline_depth=1)
+    assert d0 == pytest.approx(d1) == pytest.approx(2.0)
+
+
+def test_depth1_is_paper_max_of_exchange_and_local():
+    clk = WANClock(up_bandwidth=10 * MB, down_bandwidth=10 * MB,
+                   latency=0.01)
+    for ex, loc in [(0.0, 0.0), (0.5, 0.1), (0.1, 50.0), (2.0, 2.0)]:
+        got = clk.round_seconds(MB, MB, exchange_compute_s=ex,
+                                local_compute_s=loc, pipeline_depth=1)
+        want = max(ex + clk.wire_seconds(MB, MB), loc)
+        assert got == pytest.approx(want), (ex, loc)
+
+
+def test_zero_wire_round_is_pure_compute():
+    clk = WANClock(latency=0.0)
+    assert clk.round_seconds(0.0, 0.0, exchange_compute_s=0.3,
+                             local_compute_s=0.7) == pytest.approx(1.0)
+    # depth-D with nothing on the wire: the local worker is the period
+    assert clk.round_seconds(0.0, 0.0, exchange_compute_s=0.0,
+                             local_compute_s=0.7,
+                             pipeline_depth=3) == pytest.approx(0.7)
+
+
+def test_time_to_target_scales_linearly():
+    clk = WANClock(latency=0.0, up_bandwidth=MB, down_bandwidth=MB)
+    one = clk.round_seconds(MB, MB, local_compute_s=0.5)
+    assert clk.time_to_target(10, MB, MB, local_compute_s=0.5) == \
+        pytest.approx(10 * one)
+
+
+def test_transport_round_updown_matches_round_bytes():
+    tp = make_transport(CELUConfig(compression="int8_topk"))
+    z_shapes = [(64, 8), (64, 8)]
+    up, down = transport_round_updown(tp, z_shapes)
+    assert up + down == tp.round_bytes(z_shapes)
+    # int8_topk is the asymmetric pair: the split must differ
+    assert up != down
+    assert wan_seconds(up, down) == DEFAULT_CLOCK.wire_seconds(up, down)
