@@ -1,0 +1,285 @@
+"""Chaos lane: celu convergence under the seeded fault matrix.
+
+The claim under test — the whole reason CELU's cached local updates
+exist — is that a slow, UNRELIABLE WAN degrades training gracefully:
+with one party dropped for 5 consecutive rounds mid-training,
+heterogeneous per-party links, and 5% exchange loss (with bounded
+retry), the celu preset must still reach the fault-free run's target
+loss within ``SLACK_X`` (1.5x) the fault-free rounds-to-target.  The
+faulted leg is therefore given ``SLACK_X * rounds`` scheduler rounds —
+the budget the gate promises — and rounds-to-target is charged in
+*scheduler* rounds, so stalled dispatches (a straggler's lost batches)
+count against the faulted run.  The study also
+re-checks checkpointed recovery END TO END: a chaos run interrupted at
+the midpoint and restored into a fresh engine must finish bit-identical
+to the uninterrupted one.
+
+Writes ``results/BENCH_chaos.json``; ``--check`` exits non-zero when the
+convergence ratio or the bit-consistency check fails (the nightly CI
+gate).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import DropoutSpan, FaultPlan
+from repro.core.faults import FaultSchedule
+from repro.launch.wan import (clocks_from_plan, hetero_wire_seconds,
+                              retry_exchange_seconds,
+                              transport_party_updown)
+
+from .common import csv_row, default_workload, run_protocol
+from .end_to_end import LR, _rounds_to_loss, _smoothed
+
+ROUNDS = 400
+SLACK_X = 1.5           # faulted rounds-to-target budget vs fault-free
+BENCH_CHAOS = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "BENCH_chaos.json")
+
+# the acceptance fault matrix: 5% per-attempt loss with two retries, a
+# light straggler tail, party a0 dark for 5 consecutive rounds at
+# mid-training, and a0 on a link ~3x slower than b's side default
+FAULT_PLAN = FaultPlan(
+    seed=7, drop_prob=0.05, max_retries=2, retry_backoff_s=0.5,
+    straggler_prob=0.1, straggler_rounds=2,
+    dropouts=(DropoutSpan(party="a0", start=ROUNDS // 2, rounds=5),),
+    party_clocks=((12.5e6, 12.5e6, 0.02),),   # 100 Mbps, 20 ms legs
+)
+
+
+def _sched_round(losses, n_finite) -> "int | None":
+    """1-based scheduler-round index of the ``n_finite``-th finite loss.
+
+    At depth >= 1 a stalled round reports a non-finite loss (no merge
+    ran), which ``_smoothed`` drops — so ``_rounds_to_loss`` counts
+    *merged* rounds.  The gate converts back to the raw schedule
+    position to charge stalls at their real cost."""
+    import numpy as np
+    if n_finite is None:
+        return None
+    seen = 0
+    for i, x in enumerate(losses):
+        if np.isfinite(x):
+            seen += 1
+            if seen == n_finite:
+                return i + 1
+    return None
+
+
+def _wire_seconds(plan: FaultPlan, telemetry, transport, z_shapes) -> dict:
+    """Price the faulted run on the plan's heterogeneous links: replay
+    the deterministic fate sequence and charge every attempt (plus
+    backoff waits) at the slowest party's drain rate."""
+    K = len(z_shapes)
+    clocks = clocks_from_plan(plan, K)
+    updown = transport_party_updown(transport, z_shapes)
+    sched = FaultSchedule(plan)
+    total = 0.0
+    for t in range(telemetry["rounds"]):
+        if plan.down_parties(t):
+            continue                       # no exchange leaves the box
+        fate = sched.exchange_fate(t)
+        total += retry_exchange_seconds(clocks, updown,
+                                        attempts=fate.attempts,
+                                        backoff_s=plan.retry_backoff_s)
+    return {"wire_seconds": round(total, 2),
+            "per_exchange_seconds": round(
+                hetero_wire_seconds(clocks, updown), 4)}
+
+
+def _checkpoint_consistency(plan: FaultPlan, rounds: int = 24) -> bool:
+    """Mini end-to-end recovery drill: run the chaos engine, snapshot at
+    the midpoint, restore into a FRESH engine, and require the finished
+    params to match the uninterrupted run bit-for-bit."""
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import checkpoint as ckpt
+    from repro.configs.base import CELUConfig
+    from repro.core import engine
+    from repro.core.faults import ChaosEngine
+    from repro.data import synthetic as synth
+    from repro.models.tabular import make_dlrm
+    from repro.optim import make_optimizer
+
+    spec, data, cfg = default_workload("wdl", "criteo")
+    init_fn, task, _ = make_dlrm(cfg)
+    base = CELUConfig(R=3, W=3, xi_degrees=60.0)
+    ccfg, nloc = engine.preset_config("celu", base)
+    opt = make_optimizer("adagrad", LR)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    etask = engine.lift_two_party(task)
+
+    def build():
+        params = init_fn(jax.random.PRNGKey(0), cfg)
+        tp = engine.make_transport(ccfg, "topk_int8")
+        it = synth.aligned_batches(data["train"], 256, seed=0)
+        _, ba, bb = next(it)
+        state = engine.init_state(
+            etask, engine.lift_two_party_params(params), opt, ccfg,
+            [asj(ba)], asj(bb), transport=tp)
+        pe = ChaosEngine(etask, opt, ccfg, plan=plan, depth=2,
+                         local_steps=nloc, transport=tp)
+        return pe, pe.init(state), synth.aligned_batches(
+            data["train"], 256, seed=0)
+
+    def drive(pe, rs, it, n):
+        for _ in range(n):
+            bi, ba, bb = next(it)
+            rs, _ = pe.step(rs, [asj(ba)], asj(bb), bi)
+        return rs
+
+    half = rounds // 2
+    pe0, rs0, it0 = build()
+    rs0 = drive(pe0, rs0, it0, half)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "chaos.npz")
+        ckpt.save_round_state(path, rs0, extra=pe0.host_state())
+        rs0 = drive(pe0, rs0, it0, rounds - half)
+        rs0, _ = pe0.flush(rs0)
+        ref = pe0.finalize(rs0)
+
+        n_pend = ckpt.peek_pending_len(path)
+        pe1, rs_ref, it1 = build()
+        for _ in range(n_pend):
+            bi, ba, bb = next(it1)
+            rs_ref = pe1.dispatch(rs_ref, [asj(ba)], asj(bb), bi)
+        # NB: a direct dispatch() does not grow the host arrival lists —
+        # the extra-reference must be sized to the checkpoint explicitly
+        host_ref = {"now": 0, "dispatch_seq": 0,
+                    "arrival": [0] * n_pend,
+                    "dispatch_round": [0] * n_pend,
+                    "last_merged_dispatch": 0}
+        rs1, host = ckpt.restore_round_state(
+            path, rs_ref, extra_reference=host_ref)
+        pe1.load_host_state(host)
+        for _ in range(half - n_pend):     # reposition at batch `half`
+            next(it1)
+        rs1 = drive(pe1, rs1, it1, rounds - half)
+        rs1, _ = pe1.flush(rs1)
+        got = pe1.finalize(rs1)
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(got)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            return False
+    return True
+
+
+def chaos_study(rounds: int = ROUNDS, check: bool = False,
+                out: str = BENCH_CHAOS) -> dict:
+    import dataclasses
+    spec, data, cfg = default_workload("wdl", "criteo")
+    plan = dataclasses.replace(
+        FAULT_PLAN,
+        dropouts=(DropoutSpan(party="a0", start=rounds // 2, rounds=5),))
+    csv_row(f"# chaos lane: celu R=5 W=5 on wdl/criteo, {rounds} rounds "
+            f"(faulted budget {int(rounds * SLACK_X)}), "
+            f"seed={plan.seed} drop={plan.drop_prob} "
+            f"retries={plan.max_retries} straggler={plan.straggler_prob} "
+            f"dropout=a0@{rounds // 2}x5")
+    f_rounds = int(rounds * SLACK_X)   # the budget the gate promises
+    clean = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
+                         rounds=rounds, lr=LR, eval_every=50,
+                         pipeline_depth=1)
+    faulted = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
+                           rounds=f_rounds, lr=LR, eval_every=50,
+                           pipeline_depth=1, fault_plan=plan)
+    base_smooth = _smoothed(clean["loss_curve"])
+    target = round(base_smooth[-1] * 1.02, 6)
+    r_clean = _sched_round(clean["loss_curve"],
+                           _rounds_to_loss(base_smooth, target))
+    r_fault_merged = _rounds_to_loss(_smoothed(faulted["loss_curve"]),
+                                     target)
+    r_fault = _sched_round(faulted["loss_curve"], r_fault_merged)
+    reached = r_fault is not None and r_clean is not None
+    ratio = round(r_fault / r_clean, 3) if reached else None
+    tele = dict(faulted["fault_telemetry"])
+    events = tele.pop("events")
+    wire = _wire_seconds(plan, tele, *_transport_geom(cfg, data))
+    ckpt_ok = _checkpoint_consistency(plan)
+    csv_row("run", "rounds_to_target", "ratio_vs_clean", "final_auc",
+            "drops", "stalls", "stalled_dispatches",
+            "ckpt_bit_consistent")
+    csv_row("fault-free", r_clean, "1.0x", f"{clean['final_auc']:.4f}",
+            0, 0, 0, "-")
+    csv_row("faulted", r_fault, f"{ratio}x" if reached else "miss",
+            f"{faulted['final_auc']:.4f}", tele["drops"], tele["stalls"],
+            tele["stalled_dispatches"], ckpt_ok)
+    result = {
+        "geometry": {"model": "wdl", "dataset": "criteo", "R": 5, "W": 5,
+                     "rounds": rounds, "faulted_rounds": f_rounds,
+                     "lr": LR, "batch": 256,
+                     "pipeline_depth": 1, "n_train": spec.n_train},
+        "fault_plan": {
+            "seed": plan.seed, "drop_prob": plan.drop_prob,
+            "max_retries": plan.max_retries,
+            "retry_backoff_s": plan.retry_backoff_s,
+            "straggler_prob": plan.straggler_prob,
+            "straggler_rounds": plan.straggler_rounds,
+            "dropouts": [[d.party, d.start, d.rounds]
+                         for d in plan.dropouts],
+            "party_clocks": plan.party_clocks,
+        },
+        "target_loss": target,
+        "clean": {"rounds_to_target": r_clean,
+                  "final_auc": round(clean["final_auc"], 4)},
+        "faulted": {"rounds_to_target": r_fault,
+                    "merged_rounds_to_target": r_fault_merged,
+                    "reached_target": reached,
+                    "ratio_vs_clean": ratio,
+                    "slack_budget": SLACK_X,
+                    "final_auc": round(faulted["final_auc"], 4),
+                    "bytes_total": faulted["bytes_total"],
+                    "telemetry": tele,
+                    "n_events": len(events),
+                    "wan": wire},
+        "checkpoint_bit_consistent": ckpt_ok,
+    }
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    csv_row(f"# wrote {os.path.normpath(out)}")
+    failures = []
+    if not reached:
+        failures.append(f"faulted run never reached the fault-free "
+                        f"target loss {target}")
+    elif ratio > SLACK_X:
+        failures.append(f"rounds-to-target ratio {ratio} exceeds the "
+                        f"{SLACK_X}x budget")
+    if not ckpt_ok:
+        failures.append("checkpoint restore diverged from the "
+                        "uninterrupted run")
+    if failures:
+        csv_row("# CHAOS GATE FAILED: " + "; ".join(failures))
+        if check:
+            raise SystemExit("chaos lane: " + "; ".join(failures))
+    return result
+
+
+def _transport_geom(cfg, data):
+    """(transport, z_shapes) the convergence runs used — for pricing."""
+    from repro.configs.base import CELUConfig
+    from repro.core import engine
+    ccfg, _ = engine.preset_config("celu", CELUConfig(R=5, W=5,
+                                                      xi_degrees=60.0))
+    tp = engine.make_transport(ccfg, None)
+    return tp, [(256, cfg.z_dim)]
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the 1.5x convergence gate "
+                         "or the checkpoint bit-consistency drill fails")
+    args = ap.parse_args(argv)
+    chaos_study(rounds=args.rounds, check=args.check)
+
+
+if __name__ == "__main__":
+    main()

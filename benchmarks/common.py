@@ -45,7 +45,7 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
                  pipeline_depth: int = 0,
                  pipeline_lr_damping: float = 0.25,
                  cache_dtype: str = "float32", cache_fused: bool = True,
-                 transport=None, transport_hook=None
+                 transport=None, transport_hook=None, fault_plan=None
                  ) -> Dict[str, object]:
     """Train with one protocol preset of the K-party round engine; return
     the AUC-vs-round curve and (if target_auc given) the first round
@@ -57,10 +57,21 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     D-deep exchange queue with per-slot staleness damping
     (``pipeline_lr_damping`` is its eta/(1+c*s) coefficient; the first
     D-1 rounds fill the queue and report a NaN loss).  ``transport_hook(transport,
-    smoothed_loss) -> transport|None`` is the host-side control plane,
+    val_loss) -> transport|None`` is the host-side control plane,
     consulted at every eval point — returning a NEW transport (e.g. an
     adaptive top-k ratio step) rebuilds the jitted round around it; the
-    error-feedback residuals in the round state carry over."""
+    error-feedback residuals in the round state carry over.  The hook is
+    fed the VALIDATION log-loss (computed from the test-set logits the
+    eval already produces for AUC), not the smoothed train loss: the
+    adaptive-sparsity schedule should loosen on a generalization plateau,
+    and a depth-D pipeline's train-loss stream opens with D-1 NaNs.
+    Rebuilds are pipeline-safe — the in-flight queue and residuals are
+    dense data, independent of the codec's static shapes — so the hook
+    now composes with ``pipeline_depth >= 1``.  ``fault_plan`` (a
+    ``configs.base.FaultPlan``) runs the round schedule under the chaos
+    engine (``core.faults.ChaosEngine``): seeded exchange drops with
+    retry, stragglers, and party-dropout spans; telemetry lands in the
+    result dict and wire bytes are charged per ATTEMPT."""
     init_fn, task, predict = make_dlrm(cfg)
     base = CELUConfig(R=R, W=W, xi_degrees=xi, weighting=weighting,
                       sampling=sampling or "round_robin",
@@ -78,28 +89,36 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     etask = engine.lift_two_party(task)
     if transport is None:
         transport = engine.make_transport(ccfg, compression)
-    if transport_hook is not None and pipeline_depth:
-        raise ValueError("transport_hook rebuilds the round between "
-                         "evals — drive it at pipeline_depth=0")
     state = engine.init_state(etask, engine.lift_two_party_params(params),
                               opt, ccfg, [asj(ba)], asj(bb),
                               transport=transport)
     z_shapes = [(batch, cfg.z_dim)]
+    chaos = fault_plan is not None
 
-    def build(tp):
-        if pipeline_depth:
-            pe = engine.make_pipeline(etask, opt, ccfg,
-                                      depth=pipeline_depth,
-                                      local_steps=nloc, transport=tp,
-                                      fused_weighting=fused_weighting)
+    def build(tp, old=None):
+        if chaos:
+            from repro.core.faults import ChaosEngine
+            pe = ChaosEngine(etask, opt, ccfg, plan=fault_plan,
+                             depth=pipeline_depth, local_steps=nloc,
+                             transport=tp,
+                             fused_weighting=fused_weighting)
+            if old is not None:   # transport_hook rebuild mid-run: the
+                pe.load_host_state(old.host_state())  # fault clock carries
+                pe.events, pe.counters = old.events, old.counters
             return pe
+        if pipeline_depth:
+            return engine.make_pipeline(etask, opt, ccfg,
+                                        depth=pipeline_depth,
+                                        local_steps=nloc, transport=tp,
+                                        fused_weighting=fused_weighting)
         return engine.make_round(etask, opt, ccfg, local_steps=nloc,
                                  transport=tp,
                                  fused_weighting=fused_weighting,
                                  donate=transport_hook is None)
 
+    pipelined = bool(pipeline_depth) or chaos
     drv = build(transport)
-    if pipeline_depth:
+    if pipelined:
         rs = drv.init(state)
     it = synth.aligned_batches(data["train"], batch, seed=seed)
 
@@ -110,33 +129,46 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     losses: List[float] = []
     bytes_total = 0
     bytes_curve: List[Tuple[int, int]] = []
+    val_curve: List[Tuple[int, float]] = []
     reached = None
+    prev_attempts = 0
     t0 = time.time()
     for i in range(rounds):
         bi, ba, bb = next(it)
-        if pipeline_depth:
+        if pipelined:
             rs, m = drv.step(rs, [asj(ba)], asj(bb), bi)
         else:
             state, m = drv(state, [asj(ba)], asj(bb), bi)
         losses.append(m["loss"])       # device array: no per-round sync
-        bytes_total += transport.round_bytes(z_shapes)
+        if chaos:
+            # charge the wire per ATTEMPT: retried exchanges re-send,
+            # dropped/stalled/dropout rounds send their true byte count
+            att = drv.counters["wire_attempts"]
+            bytes_total += (att - prev_attempts) \
+                * transport.round_bytes(z_shapes)
+            prev_attempts = att
+        else:
+            bytes_total += transport.round_bytes(z_shapes)
         if (i + 1) % eval_every == 0 or i + 1 == rounds:
-            cur = rs.params if pipeline_depth else state["params"]
-            a = auc(np.asarray(predict(engine.unlift_params(cur),
-                                       cfg, tea, teb)),
-                    te["y"])
+            cur = rs.params if pipelined else state["params"]
+            logits = np.asarray(predict(engine.unlift_params(cur),
+                                        cfg, tea, teb), np.float64)
+            a = auc(logits, te["y"])
+            y = np.asarray(te["y"], np.float64)
+            val_loss = float(np.mean(np.maximum(logits, 0.0)
+                                     - logits * y
+                                     + np.log1p(np.exp(-np.abs(logits)))))
             curve.append((i + 1, a))
+            val_curve.append((i + 1, val_loss))
             bytes_curve.append((i + 1, bytes_total))
             if target_auc and reached is None and a >= target_auc:
                 reached = i + 1
             if transport_hook is not None:
-                recent = float(np.mean(
-                    np.asarray(losses[-eval_every:], np.float32)))
-                new_tp = transport_hook(transport, recent)
+                new_tp = transport_hook(transport, val_loss)
                 if new_tp is not None and new_tp is not transport:
                     transport = new_tp
-                    drv = build(transport)
-    if pipeline_depth:
+                    drv = build(transport, drv if chaos else None)
+    if pipelined:
         rs, _ = drv.flush(rs)
         state = drv.finalize(rs)
     up_b = sum(transport.uplink_bytes(s) for s in z_shapes)
@@ -150,9 +182,11 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
         "stat_cache_bytes": sum(workset_nbytes(w, QUANT_KEYS)
                                 for w in tables),
         "weighting": weighting, "curve": curve,
+        "val_curve": val_curve,
         "final_auc": curve[-1][1], "best_auc": max(a for _, a in curve),
         "rounds_to_target": reached, "wall_s": time.time() - t0,
         "loss_curve": [float(x) for x in losses],
+        "fault_telemetry": drv.telemetry() if chaos else None,
         "compression": compression or "",
         "pipeline_depth": pipeline_depth,
         "z_bytes_per_round": transport.round_bytes(z_shapes),

@@ -13,11 +13,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=("ablation", "end_to_end", "roofline", "micro",
-                             "beyond", "local_scan", "pipeline_depth"))
+                             "beyond", "local_scan", "pipeline_depth",
+                             "chaos"))
     args = ap.parse_args()
 
-    from . import (ablation, beyond, end_to_end, local_scan, microbench,
-                   roofline)
+    from . import (ablation, beyond, chaos, end_to_end, local_scan,
+                   microbench, roofline)
     blocks = {
         "micro": microbench.main,
         "local_scan": local_scan.main,     # emits BENCH_local_scan.json
@@ -27,6 +28,9 @@ def main() -> None:
         # study; the nightly CI lane runs it with --check)
         "pipeline_depth": end_to_end.depth_sweep,
         "ablation": ablation.main,
+        # emits BENCH_chaos.json (convergence under the seeded fault
+        # matrix; the nightly chaos CI lane runs it with --check)
+        "chaos": chaos.main,
         "beyond": beyond.main,
     }
     picked = [args.only] if args.only else list(blocks)

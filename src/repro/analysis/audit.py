@@ -47,6 +47,12 @@ class AuditCase:
     cache_dtype: str = "float32"
     dp_sigma: float = 0.0
     wire_dtype: str = "float32"
+    # chaos-layer schedule: the first dispatch's wire transfer is LOST
+    # and the transport's recover_dropped folds its decoded messages back
+    # into the error-feedback residuals before the next dispatch
+    # (core/faults.py) — the audit proves the absorbed residuals still
+    # clear the boundary theorem on the retransmission
+    dropped: bool = False
 
 
 def default_cases(quick: bool = False) -> List[AuditCase]:
@@ -63,12 +69,15 @@ def default_cases(quick: bool = False) -> List[AuditCase]:
              f"dp{kw.get('dp_sigma', 0.0):g}",
              ] + ([kw["wire_dtype"]] if kw.get("wire_dtype",
                                                "float32") != "float32"
-                  else [])))
+                  else [])
+               + (["drop"] if kw.get("dropped") else [])))
         return AuditCase(**kw)
 
     if quick:
         return [mk(), mk(compression="topk_int8", dp_sigma=0.3, depth=2,
                          cache_dtype="int8"),
+                mk(compression="topk_int8", dp_sigma=0.3, depth=2,
+                   cache_dtype="int8", dropped=True),
                 mk(compression="int8", wire_dtype="bfloat16")]
 
     cases = []
@@ -83,6 +92,12 @@ def default_cases(quick: bool = False) -> List[AuditCase]:
         cases.append(mk(depth=2, compression="int8", cache_dtype=cd))
     for spec in ("", "int8"):
         cases.append(mk(compression=spec, wire_dtype="bfloat16"))
+    # chaos layer: lost exchange absorbed into the residuals, with and
+    # without DP noise riding the dropped messages, at both K widths
+    for K in (1, 3):
+        cases.append(mk(K=K, depth=2, compression="topk_int8",
+                        cache_dtype="int8", dp_sigma=0.3, dropped=True))
+    cases.append(mk(depth=2, compression="topk_int8", dropped=True))
     # dedupe (the sweeps overlap at the origin), keep first occurrence
     seen, out = set(), []
     for c in cases:
@@ -234,15 +249,38 @@ def _make_celu(case: AuditCase):
                       pipeline_depth=case.depth)
 
 
-def _compose(case: AuditCase, stages):
+def _compose(case: AuditCase, stages, tp=None):
     """Wire the three stages in the order the schedule under audit runs
     them.  Depth >= 2 chains TWO exchange dispatches through the
     transport-residual state — the PendingExchange queue slots — and
     drives scan/apply with dynamic staleness scalars, exactly like
-    ``PipelinedEngine`` does."""
+    ``PipelinedEngine`` does.  ``case.dropped`` (needs ``tp`` and depth
+    >= 2) audits the chaos layer's drop-absorb path instead: the first
+    dispatch's wire transfer is lost, ``tp.recover_dropped`` folds its
+    decoded messages back into the residuals, and only the SECOND
+    dispatch is merged — the scan rides stale cached statistics the
+    whole time.  Both dispatches still count as wire sends (the bytes
+    left the box before the loss)."""
     import jax.numpy as jnp
     compute, apply_, scan = stages
     depth = case.depth
+
+    if case.dropped:
+        if depth < 2 or tp is None:
+            raise ValueError("dropped cases need depth >= 2 and the "
+                             "audited transport")
+
+        def fn(state, batches_a, batch_b, batch_idx):
+            f1 = compute(state["params"], state["transport"], batches_a,
+                         batch_b, state["comm_rounds"])
+            ts = tp.recover_dropped(f1)          # f1's wire is LOST
+            f2 = compute(state["params"], ts, batches_a, batch_b,
+                         state["comm_rounds"] + 1)
+            state, lm = scan(state, jnp.int32(depth))
+            state, m = apply_(state, f2, batches_a, batch_b,
+                              batch_idx + 1, jnp.int32(depth - 1))
+            return state, {**m, **lm}
+        return fn, 2
 
     if depth == 0:
         def fn(state, batches_a, batch_b, batch_idx):
@@ -341,7 +379,7 @@ def trace_case(case: AuditCase, transport=None) -> CaseResult:
         task, opt, celu, n_local=celu.R, tp=tp, fused=True,
         pipeline_staleness=case.depth,
         lr_damping=celu.pipeline_lr_damping if case.depth >= 2 else 0.0)
-    fn, n_computes = _compose(case, stages)
+    fn, n_computes = _compose(case, stages, tp)
     args = (state, batches_a, batch_b, jnp.int32(3))
 
     # ONE trace, instrumented, returning the output structure too.  (An

@@ -4,27 +4,41 @@ Per-party checkpoints: in a real deployment each party persists only its own
 tower (privacy discipline) — ``save(path, state, party="a")`` selects the
 corresponding subtree.  Restore rebuilds into the exact reference pytree, so
 shapes/dtypes are validated on load.
+
+Storage rules (all round-trips are BIT-exact):
+
+  * bf16 leaves are stored natively as a ``uint16`` bit-view — the
+    historical fp32 detour doubled the bytes and, worse, made
+    save→restore a value-preserving but REPRESENTATION-changing trip for
+    any downstream consumer that compared serialized forms.  Legacy
+    checkpoints with fp32-stored bf16 still restore (value cast).
+  * Custom pytree leaves registered without key paths (the workset
+    cache's ``QuantLeaf``/``CastLeaf``) flatten through
+    ``FlattenedIndexKey`` — their int8 codes and scales land in the file
+    unchanged.
+  * Python scalar leaves (host-side counters) are stored as 0-d arrays
+    and restored to their reference's python type.
+
+``save_round_state`` / ``restore_round_state`` persist a FULL scheduler
+:class:`repro.core.engine.RoundState` — params, optimizer, workset rings,
+transport error-feedback residuals, AND the in-flight exchange queue
+(``PendingExchange`` slots incl. ``dispatched_at`` and the ride-along
+batches) — so a run interrupted mid-pipeline (or killed by the chaos
+layer) resumes bit-consistently.  The restore reference must carry the
+same queue depth; the file records it so a mismatch fails with a clear
+message instead of a missing-key maze.
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"
-
-
-def _flatten(tree) -> dict:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(_key_str(p) for p in path)
-        arr = np.asarray(leaf) if leaf.dtype != jnp.bfloat16 else \
-            np.asarray(leaf.astype(jnp.float32))  # numpy has no bf16
-        flat[key] = arr
-    return flat
+_PENDING_META = "__round_state__" + _SEP + "pending_len"
 
 
 def _key_str(p) -> str:
@@ -34,7 +48,54 @@ def _key_str(p) -> str:
         return str(p.idx)
     if isinstance(p, jax.tree_util.GetAttrKey):
         return p.name
+    if isinstance(p, jax.tree_util.FlattenedIndexKey):
+        return str(p.key)
     return str(p)
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    """Host array for one leaf; bf16 as its uint16 bit pattern (numpy has
+    no native bf16 and the fp32 detour breaks bit-exactness guarantees
+    for consumers comparing serialized forms)."""
+    if getattr(leaf, "dtype", None) == jnp.bfloat16:
+        return np.asarray(leaf).view(np.uint16)
+    return np.asarray(leaf)
+
+
+def _from_numpy(arr: np.ndarray, ref):
+    """Rebuild one leaf into its reference's type/dtype (validated)."""
+    ref_arr = np.asarray(ref)
+    if tuple(arr.shape) != tuple(ref_arr.shape):
+        raise ValueError(f"shape {arr.shape} != {ref_arr.shape}")
+    if isinstance(ref, (bool, int, float)):
+        return type(ref)(arr.item())
+    ref_dtype = getattr(ref, "dtype", ref_arr.dtype)
+    if ref_dtype == jnp.bfloat16 and arr.dtype == np.uint16:
+        return jnp.asarray(arr).view(jnp.bfloat16)   # native bf16 storage
+    return jnp.asarray(arr, dtype=ref_dtype)         # incl. legacy fp32->bf16
+    # (value cast; new-format checkpoints round-trip bf16 bit-exactly)
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_SEP.join(_key_str(p) for p in path)] = _to_numpy(leaf)
+    return flat
+
+
+def _unflatten(flat: dict, reference):
+    leaves_ref, _ = jax.tree_util.tree_flatten_with_path(reference)
+    out = []
+    for pathkeys, ref in leaves_ref:
+        key = _SEP.join(_key_str(p) for p in pathkeys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        try:
+            out.append(_from_numpy(flat[key], ref))
+        except ValueError as e:
+            raise ValueError(f"{key}: {e}") from None
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(reference), out)
 
 
 def save(path: str, tree: Any, party: Optional[str] = None) -> None:
@@ -48,15 +109,68 @@ def restore(path: str, reference: Any) -> Any:
     """Load into the structure of ``reference`` (shape/dtype checked)."""
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files}
-    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(reference)
-    out = []
-    for pathkeys, ref in leaves_ref:
-        key = _SEP.join(_key_str(p) for p in pathkeys)
-        if key not in flat:
-            raise KeyError(f"checkpoint missing {key}")
-        arr = flat[key]
-        if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
-        out.append(jnp.asarray(arr, dtype=ref.dtype))
-    return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(reference), out)
+    return _unflatten(flat, reference)
+
+
+# --------------------------------------------------------------------------
+# Full scheduler-state checkpoints (pipeline- and fault-aware)
+# --------------------------------------------------------------------------
+def save_round_state(path: str, rs, extra: Any = None) -> None:
+    """Persist a full :class:`RoundState` — including the in-flight
+    ``pending`` exchange queue — plus an optional ``extra`` pytree (e.g.
+    ``ChaosEngine.host_state()``)."""
+    tree = {"state": rs.as_state(), "pending": tuple(rs.pending)}
+    if extra is not None:
+        tree["extra"] = extra
+    flat = _flatten(tree)
+    flat[_PENDING_META] = np.asarray(len(rs.pending))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def peek_pending_len(path: str) -> int:
+    """In-flight queue depth recorded in a ``save_round_state`` file —
+    read it FIRST, fabricate a reference with that many dispatches, then
+    :func:`restore_round_state`."""
+    with np.load(path) as data:
+        if _PENDING_META not in data.files:
+            raise KeyError(
+                f"{path} is not a round-state checkpoint (missing "
+                f"{_PENDING_META!r})")
+        return int(data[_PENDING_META])
+
+
+def restore_round_state(path: str, reference,
+                        extra_reference: Any = None) -> Tuple[Any, Any]:
+    """Rebuild a :class:`RoundState` (and the optional extra pytree) from
+    a ``save_round_state`` checkpoint.
+
+    ``reference`` must be a RoundState with the SAME in-flight queue
+    depth and slot structure — after a restart, fabricate one by driving
+    a freshly built engine the same number of dispatches (any batches:
+    only structure/shape/dtype matter, every value is overwritten).
+    Returns ``(round_state, extra)``; ``extra`` is None when no
+    ``extra_reference`` is given."""
+    from ..core.engine import RoundState
+
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    if _PENDING_META not in flat:
+        raise KeyError(
+            f"{path} is not a round-state checkpoint (missing "
+            f"{_PENDING_META!r}) — use restore() for plain pytrees")
+    n = int(flat.pop(_PENDING_META))
+    if n != len(reference.pending):
+        raise ValueError(
+            f"checkpoint holds {n} in-flight exchange(s) but the "
+            f"reference RoundState holds {len(reference.pending)} — "
+            f"rebuild the reference with {n} dispatch(es) before "
+            f"restoring")
+    tree = {"state": reference.as_state(),
+            "pending": tuple(reference.pending)}
+    if extra_reference is not None:
+        tree["extra"] = extra_reference
+    restored = _unflatten(flat, tree)
+    rs = RoundState.from_state(restored["state"],
+                               tuple(restored["pending"]))
+    return rs, restored.get("extra")

@@ -253,6 +253,90 @@ class CELUConfig:
 
 
 @dataclass(frozen=True)
+class DropoutSpan:
+    """One party's outage: ``party`` ("a0".."a{K-1}" or "b") is down for
+    ``rounds`` consecutive scheduler rounds starting at ``start`` (and
+    rejoins elastically at ``start + rounds``)."""
+    party: str
+    start: int
+    rounds: int
+
+    def __post_init__(self):
+        if not (self.party == "b" or (self.party.startswith("a")
+                                      and self.party[1:].isdigit())):
+            raise ValueError(
+                f"DropoutSpan.party must be 'a<i>' or 'b', got "
+                f"{self.party!r}")
+        if self.start < 0 or self.rounds <= 0:
+            raise ValueError(
+                f"DropoutSpan needs start >= 0 and rounds >= 1, got "
+                f"start={self.start} rounds={self.rounds}")
+
+    def covers(self, round_idx: int) -> bool:
+        return self.start <= round_idx < self.start + self.rounds
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic, seeded fault schedule for the chaos engine
+    (``core.faults.ChaosEngine``).  Pure configuration — every fate is a
+    function of ``(seed, round_idx)`` alone, so two runs (or a run and
+    its checkpoint-restored resumption) see identical faults.
+
+    ``party_clocks`` are per-FEATURE-party heterogeneous WAN links as
+    plain ``(up_bandwidth_Bps, down_bandwidth_Bps, latency_s)`` tuples
+    (converted lazily to ``launch.wan.WANClock`` — this module stays a
+    leaf dependency); the slowest party paces each exchange.
+    """
+    seed: int = 0
+    # per-attempt exchange loss probability; a dropped attempt is retried
+    # up to max_retries times with exponential backoff before the round's
+    # exchange is abandoned (the error-feedback residual then absorbs the
+    # lost update — see docs/FAULTS.md)
+    drop_prob: float = 0.0
+    max_retries: int = 2
+    retry_backoff_s: float = 0.5
+    # straggler injection: a delivered exchange arrives this many rounds
+    # late with probability straggler_prob (delay uniform on
+    # [1, straggler_rounds])
+    straggler_prob: float = 0.0
+    straggler_rounds: int = 2
+    dropouts: Tuple[DropoutSpan, ...] = ()
+    party_clocks: Optional[Tuple[Tuple[float, float, float], ...]] = None
+
+    def __post_init__(self):
+        if not (0.0 <= self.drop_prob < 1.0):
+            raise ValueError(f"drop_prob must be in [0, 1), got "
+                             f"{self.drop_prob}")
+        if not (0.0 <= self.straggler_prob <= 1.0):
+            raise ValueError(f"straggler_prob must be in [0, 1], got "
+                             f"{self.straggler_prob}")
+        if self.max_retries < 0 or self.straggler_rounds < 1:
+            raise ValueError(
+                f"need max_retries >= 0 and straggler_rounds >= 1, got "
+                f"{self.max_retries} / {self.straggler_rounds}")
+        if self.retry_backoff_s < 0.0:
+            raise ValueError(f"retry_backoff_s must be >= 0, got "
+                             f"{self.retry_backoff_s}")
+        object.__setattr__(self, "dropouts", tuple(self.dropouts))
+        if self.party_clocks is not None:
+            object.__setattr__(
+                self, "party_clocks",
+                tuple(tuple(float(v) for v in c)
+                      for c in self.party_clocks))
+            for c in self.party_clocks:
+                if len(c) != 3 or c[0] <= 0 or c[1] <= 0 or c[2] < 0:
+                    raise ValueError(
+                        f"party_clocks entries are (up_Bps, down_Bps, "
+                        f"latency_s) with positive bandwidths, got {c}")
+
+    def down_parties(self, round_idx: int) -> Tuple[str, ...]:
+        """Parties down at ``round_idx`` (sorted, deduplicated)."""
+        return tuple(sorted({d.party for d in self.dropouts
+                             if d.covers(round_idx)}))
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     batch_size: int = 256
     lr: float = 0.01

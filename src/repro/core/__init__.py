@@ -5,4 +5,6 @@ from .engine import (CompressedWANTransport, KPartyTask,  # noqa: F401
                      PendingExchange, PipelinedEngine, PodTransport,
                      RoundState, SimWANTransport, make_pipeline,
                      make_transport, preset_config)
+from .faults import ChaosEngine, ExchangeFate, FaultSchedule, \
+    make_chaos_engine  # noqa: F401
 from .protocol import VFLTask, init_state, make_round, protocol_config  # noqa: F401

@@ -169,8 +169,17 @@ class PlateauRatioSchedule:
 
     def update(self, loss) -> Optional[float]:
         """Observe one smoothed loss; return the NEW ratio when the
-        plateau rule fires (else None)."""
+        plateau rule fires (else None).
+
+        Non-finite observations are IGNORED (no stall tick, no ratio
+        step): a depth-D pipeline reports NaN losses for its D-1 warmup
+        rounds, and `NaN < best` / `NaN >= patience-threshold` both being
+        False used to route NaN into the stall branch — a ratio ladder
+        driven entirely by warmup artifacts before the first real loss
+        arrived."""
         loss = float(loss)
+        if not math.isfinite(loss):
+            return None
         if loss < self.best - self.min_delta:
             self.best = loss
             self.stall = 0

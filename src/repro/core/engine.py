@@ -94,8 +94,9 @@ from ..configs.base import CELUConfig, validate_pipeline_depth
 from ..optim import Optimizer, apply_updates
 from .weighting import (instance_weights, pipeline_attenuation,
                         static_staleness, xi_to_cos)
-from .workset import (CastLeaf, QuantLeaf, workset_draw, workset_entry,
-                      workset_init, workset_insert, workset_sample)  # noqa: F401  (workset_sample re-exported: historical import site)
+from .workset import (CastLeaf, QuantLeaf, decode_entry, workset_draw,
+                      workset_entry, workset_init, workset_insert,
+                      workset_sample)  # noqa: F401  (workset_sample re-exported: historical import site)
 
 
 class KPartyTask(NamedTuple):
@@ -194,6 +195,16 @@ class SimWANTransport:
         return sum(self.uplink_bytes(s) + self.downlink_bytes(s)
                    for s in z_shapes)
 
+    def recover_dropped(self, fresh: Dict[str, Any]) -> Dict[str, Any]:
+        """Transport state to resume from when ``fresh``'s wire transfer
+        is LOST (the chaos engine abandons an exchange after its retry
+        budget).  A stateless transport has nothing to recover — the
+        update the dropped messages carried is simply gone (graceful
+        degradation: the local scan keeps running on cached statistics).
+        Stateful transports override this to fold the lost messages back
+        into their error-feedback residuals."""
+        return fresh["tstate"]
+
 
 class CompressedWANTransport(SimWANTransport):
     """Compressed wire (Compressed-VFL): every released message passes the
@@ -271,6 +282,29 @@ class CompressedWANTransport(SimWANTransport):
 
     def downlink_bytes(self, z_shape) -> int:
         return self.codecs["down"].wire_bytes(z_shape, self.wire)
+
+    def recover_dropped(self, fresh: Dict[str, Any]) -> Dict[str, Any]:
+        """Error-feedback recovery of a LOST exchange: fold each dropped
+        decoded message back into its direction's residual.
+
+        The send computed ``y = decode(encode(x + r))`` and carried
+        ``r' = (x + r) - y`` forward; if ``y`` never arrives, setting
+        ``r'' = r' + y = x + r`` makes the NEXT successful send transmit
+        the accumulated ``x + r`` in full — the telescoping invariant
+        (decoded messages sum to the uncompressed signal) survives the
+        drop as a delay instead of a loss.  Under DP the dropped ``y``
+        includes its noise draw, so the recovered residual carries that
+        noise into the next release — conservative (the eventually
+        delivered value is noisier than required), never under-noised,
+        and the dropped noise was never observed so no budget is
+        double-spent.  Lossless directions keep no residual and degrade
+        like the stateless base."""
+        ts = dict(fresh["tstate"])
+        for d in self.stateful_directions:
+            vals = fresh["zs"] if d == "up" else fresh["dzs"]
+            ts[d] = [r + v.astype(jnp.float32)
+                     for r, v in zip(ts[d], vals)]
+        return ts
 
     def scheduled(self, loss) -> "CompressedWANTransport":
         """Host-side control plane: offer one (smoothed) loss observation
@@ -514,6 +548,72 @@ def local_grad_b(loss_b, params_b, entry, cos_xi: float, *,
     return g, w
 
 
+def _fused_ring_weights(slot, dz_new, dz_store, cos_xi: float):
+    """Weights-only fused sample for Party B: gather the slot's stale
+    ∇Z_i straight from the (possibly quantized) ring and row-cosine it
+    against the ad-hoc derivative in one VMEM pass.  Reuses the sample
+    megakernel with the ∇Z ring in both operand positions — the weight
+    output is bit-identical to ``cosine_weight`` over the materialized
+    row (same reduction order, same blocks); the cotangent output rides
+    along unused."""
+    from ..kernels import ops as kops
+    if isinstance(dz_store, QuantLeaf):
+        w, _ = kops.fused_gather_weight_q8(
+            slot, dz_new.astype(jnp.float32), dz_store.q, dz_store.scale,
+            dz_store.q, dz_store.scale, cos_xi)
+        return w
+    ring = _ring_view(dz_store)
+    w, _ = kops.fused_gather_weight(slot, dz_new, ring, ring, cos_xi)
+    return w
+
+
+def local_grad_b_cached(loss_b, params_b, ws, slot, cos_xi: float, *,
+                        weighting: bool = True, fused: bool = True,
+                        cache_fused: bool = True, mask=None,
+                        pipeline_staleness=0):
+    """Label-party local update straight off the workset ring.  The loss
+    CONSUMES the decoded Z list, so the K ``z`` entries must still be
+    materialized — but the K ``dz`` entries' only consumer is the
+    Algorithm-2 cosine, so the fused path reads them in storage precision
+    through the gather→dequant→weight megakernel and never materializes
+    the decoded ∇Z list in HBM.  ``cache_fused=False`` (or an unfusable
+    batch tiling, or ``weighting``/``fused`` off) falls back to
+    materialize-then-weight — the bit-exact reference composition.
+    Returns (grads, weights)."""
+    buf = ws["buf"]
+    batch_b = jax.tree_util.tree_map(lambda b: b[slot], buf["batch"])
+    zs = decode_entry(jax.tree_util.tree_map(lambda b: b[slot], buf["z"]))
+    K = len(zs)
+    if weighting:
+        dz_new = jax.grad(
+            lambda zl: jnp.mean(loss_b(params_b, zl, batch_b)[0]))(
+            [z.astype(jnp.float32) for z in zs])
+        if fused and cache_fused and _fusable(dz_new[0]):
+            w = _fused_ring_weights(slot, dz_new[0], buf["dz"][0], cos_xi)
+            for i in range(1, K):
+                w = jnp.minimum(w, _fused_ring_weights(
+                    slot, dz_new[i], buf["dz"][i], cos_xi))
+        else:
+            dzs = decode_entry(jax.tree_util.tree_map(
+                lambda b: b[slot], buf["dz"]))
+            w = staleness_weights(dz_new[0], dzs[0], cos_xi, fused=fused)
+            for i in range(1, K):
+                w = jnp.minimum(w, staleness_weights(
+                    dz_new[i], dzs[i], cos_xi, fused=fused))
+        w = pipeline_attenuation(w, pipeline_staleness)
+    else:
+        w = jnp.ones((zs[0].shape[0],), jnp.float32)
+    if mask is not None:
+        w = w * mask
+
+    def weighted(p):
+        li, aux = loss_b(p, zs, batch_b)
+        return jnp.mean(w * li) + aux
+
+    g = jax.grad(weighted)(params_b)
+    return g, w
+
+
 # --------------------------------------------------------------------------
 # State
 # --------------------------------------------------------------------------
@@ -696,7 +796,15 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
         }
         return new_state, {"loss": fresh["loss"]}
 
-    def local_scan(state, staleness=None):
+    def local_scan(state, staleness=None, party_mask=None):
+        # ``party_mask`` ((K+1,) float32 — a_0..a_{K-1}, b; None = all
+        # live) freezes a dropped-out party's local updates: its draw's
+        # valid factor is multiplied by the mask, zeroing the weights,
+        # the cotangent, and the optimizer update while the surviving
+        # parties keep local-updating off their cached statistics.  The
+        # masked party's ring clocks still tick (use_count, cursor) — a
+        # conservative choice that drains its cache at the same rate as
+        # everyone else's, so rejoin never resurrects over-aged entries.
         K = len(state["params"]["a"])
         if n_local == 0:
             zero = jnp.float32(0.0)
@@ -734,6 +842,8 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
                     wsas[i], celu.R, celu.sampling, rng=ki,
                     pipeline_staleness=s_loc)
                 vf = valid.astype(jnp.float32)
+                if party_mask is not None:
+                    vf = vf * party_mask[i]
                 g, w = local_grad_a_cached(
                     task.forward_a, pas[i], wsas[i], slot, cos_xi,
                     weighting=celu.weighting, fused=fused,
@@ -743,7 +853,9 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
                 uf = vf if damp is None else vf * damp
                 upd = jax.tree_util.tree_map(lambda u: u * uf, upd)
                 pas[i] = apply_updates(pas[i], upd)
-                nas[i] = nas[i] + valid.astype(jnp.int32)
+                nas[i] = nas[i] + (valid.astype(jnp.int32)
+                                   if party_mask is None
+                                   else (vf > 0).astype(jnp.int32))
                 w_means.append(jnp.mean(w))
                 w_zeros.append(jnp.mean(w == 0.0))
 
@@ -752,16 +864,20 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
             wsb, slot_b, _, valid = workset_draw(
                 wsb, celu.R, celu.sampling, rng=kb,
                 pipeline_staleness=s_loc)
-            e = workset_entry(wsb, slot_b)
             vf = valid.astype(jnp.float32)
-            g, w = local_grad_b(task.loss_b, pb, e, cos_xi,
-                                weighting=celu.weighting, fused=fused,
-                                mask=vf, pipeline_staleness=s_loc)
+            if party_mask is not None:
+                vf = vf * party_mask[K]
+            g, w = local_grad_b_cached(
+                task.loss_b, pb, wsb, slot_b, cos_xi,
+                weighting=celu.weighting, fused=fused,
+                cache_fused=celu.cache_fused, mask=vf,
+                pipeline_staleness=s_loc)
             upd, ob = opt.update(g, ob, pb)
             uf = vf if damp is None else vf * damp
             upd = jax.tree_util.tree_map(lambda u: u * uf, upd)
             pb = apply_updates(pb, upd)
-            nb = nb + valid.astype(jnp.int32)
+            nb = nb + (valid.astype(jnp.int32) if party_mask is None
+                       else (vf > 0).astype(jnp.int32))
             w_means.append(jnp.mean(w))
             w_zeros.append(jnp.mean(w == 0.0))
 
@@ -952,7 +1068,8 @@ class PipelinedEngine:
     def __init__(self, task: KPartyTask, opt: Optimizer, celu: CELUConfig,
                  *, depth: Optional[int] = None, local_steps: int = -1,
                  transport=None, compression: Optional[str] = None,
-                 fused_weighting: bool = True, jit: bool = True):
+                 fused_weighting: bool = True, jit: bool = True,
+                 dynamic_staleness: Optional[bool] = None):
         if depth is None:
             depth = celu.pipeline_depth
         # same rule, same message as CELUConfig.__post_init__ — an
@@ -962,8 +1079,13 @@ class PipelinedEngine:
         self.celu = celu
         # depth >= 2 threads the PER-SLOT staleness dynamically (warmup
         # and drain see their true, smaller offsets); depths 0/1 keep the
-        # static golden-pinned plumbing
-        self.dynamic = depth >= 2
+        # static golden-pinned plumbing.  ``dynamic_staleness=True``
+        # forces the dynamic path at ANY depth — the chaos engine needs
+        # it to charge fault-induced extra age even at depths 0/1
+        # (core/faults.py; a ``FaultPlan=None`` chaos engine keeps the
+        # default so the no-fault schedule stays golden-identical).
+        self.dynamic = (depth >= 2) if dynamic_staleness is None \
+            else bool(dynamic_staleness)
         n_local = celu.R if local_steps < 0 else local_steps
         self.n_local = n_local
         tp = transport if transport is not None \
@@ -1020,30 +1142,52 @@ class PipelinedEngine:
                              dispatched_at=rs.comm_rounds)
         return rs._replace(pending=rs.pending + (pe,))
 
-    def local(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
+    def local(self, rs: RoundState, *, staleness=None, party_mask=None
+              ) -> Tuple[RoundState, Dict[str, Any]]:
         """Run the R staleness-weighted local updates (the foreground
         worker) against the workset as of the last merged exchange.  At
         depth >= 2 the scan is charged the CURRENT in-flight count as its
-        per-slot staleness."""
-        if self.dynamic:
+        per-slot staleness.  ``staleness`` overrides that charge and
+        ``party_mask`` ((K+1,) floats) freezes dropped-out parties — both
+        are the chaos scheduler's hooks and need the dynamic stage
+        plumbing."""
+        if staleness is not None or party_mask is not None:
+            if not self.dynamic:
+                raise RuntimeError(
+                    "staleness/party_mask overrides need the dynamic "
+                    "stage plumbing — build the engine with "
+                    "dynamic_staleness=True")
+            s = jnp.int32(len(rs.pending)) if staleness is None \
+                else jnp.int32(staleness)
+            state, lm = self._scan(rs.as_state(), s, party_mask)
+        elif self.dynamic:
             state, lm = self._scan(rs.as_state(),
                                    jnp.int32(len(rs.pending)))
         else:
             state, lm = self._scan(rs.as_state())
         return RoundState.from_state(state, rs.pending), lm
 
-    def merge(self, rs: RoundState) -> Tuple[RoundState, Dict[str, Any]]:
+    def merge(self, rs: RoundState, *, staleness=None
+              ) -> Tuple[RoundState, Dict[str, Any]]:
         """Adopt the OLDEST in-flight exchange: fresh optimizer steps
         (applied to the params as they are NOW — after any overlapped
         local updates, lr-damped by the slot's age at depth >= 2), workset
-        inserts, transport residuals, counters."""
+        inserts, transport residuals, counters.  ``staleness`` overrides
+        the slot-age charge (the chaos scheduler passes the true
+        scheduler-round age, which exceeds ``comm_rounds - dispatched_at``
+        when merges were missed to faults)."""
         if not rs.pending:
             raise RuntimeError("no exchange in flight — dispatch() first")
         p, rest = rs.pending[0], rs.pending[1:]
+        if staleness is not None and not self.dynamic:
+            raise RuntimeError(
+                "staleness override needs the dynamic stage plumbing — "
+                "build the engine with dynamic_staleness=True")
         if self.dynamic:
+            s = (rs.comm_rounds - p.dispatched_at) if staleness is None \
+                else jnp.int32(staleness)
             state, m = self._apply(rs.as_state(), p.fresh, p.batches_a,
-                                   p.batch_b, p.batch_idx,
-                                   rs.comm_rounds - p.dispatched_at)
+                                   p.batch_b, p.batch_idx, s)
         else:
             state, m = self._apply(rs.as_state(), p.fresh, p.batches_a,
                                    p.batch_b, p.batch_idx)

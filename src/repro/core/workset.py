@@ -212,19 +212,28 @@ def workset_nbytes(ws: Dict[str, Any], keys=None) -> int:
 
 def sample_hbm_bytes(entry_example: Dict[str, Any],
                      cache_dtype: str = "float32",
-                     fused: bool = True) -> int:
-    """Roofline counter: HBM bytes moved by ONE party-A local-update
-    sample over the cut statistics — gather from the ring, dequantize,
-    row-cosine against the ad-hoc statistics, cotangent scale.  Excludes
-    the forward/backward over the party model (identical across paths).
+                     fused: bool = True, party: str = "a") -> int:
+    """Roofline counter: HBM bytes moved by ONE local-update sample over
+    the cut statistics — gather from the ring, dequantize, row-cosine
+    against the ad-hoc statistics, cotangent scale.  Excludes the
+    forward/backward over the party model (identical across paths).
 
-    Unfused: the sampled ``z``/``dz`` rows are gathered into a
-    full-precision entry copy (read stored + write fp32), then the
-    weighting kernel re-reads ad-hoc + both copies and writes w + cot.
-    Fused: one pass — read stored z/dz + ad-hoc, write w + cot."""
+    ``party="a"`` (a feature party) — unfused: the sampled ``z``/``dz``
+    rows are gathered into a full-precision entry copy (read stored +
+    write fp32), then the weighting kernel re-reads ad-hoc + both copies
+    and writes w + cot.  Fused: one pass — read stored z/dz + ad-hoc,
+    write w + cot.
+
+    ``party="b"`` (the label party, ``engine.local_grad_b_cached``) — the
+    loss CONSUMES the dequantized Z list, so the decoded fp32 z copy is
+    always materialized (read stored + write fp32) regardless of fusion;
+    only the dz-side cosine weighting fuses against the stored ring (read
+    stored dz + ad-hoc, write w + the kernel's ride-along cot)."""
     if cache_dtype not in CACHE_DTYPES:
         raise ValueError(f"cache_dtype must be one of {CACHE_DTYPES}, "
                          f"got {cache_dtype!r}")
+    if party not in ("a", "b"):
+        raise ValueError(f"party must be 'a' or 'b', got {party!r}")
     itemsize = {"float32": 4, "bfloat16": 2, "int8": 1}[cache_dtype]
     z_leaves = jax.tree_util.tree_leaves(entry_example.get("z", {}))
     dz_leaves = jax.tree_util.tree_leaves(entry_example.get("dz", {}))
@@ -232,16 +241,32 @@ def sample_hbm_bytes(entry_example: Dict[str, Any],
     for a in z_leaves + dz_leaves:           # the ring reads, at rest
         B, F = _row_shape(a)
         total += B * F * itemsize + (B * 4 if cache_dtype == "int8" else 0)
-    for a in z_leaves:                       # per ⟨z, dz⟩ pair:
+    if party == "a":
+        for a in z_leaves:                   # per ⟨z, dz⟩ pair:
+            B, F = _row_shape(a)
+            f32 = B * F * 4
+            if fused:
+                # one pass: + read ad-hoc, write cot + w
+                total += f32 + f32 + B * 4
+            else:
+                # gather writes a fp32 entry copy (z + dz), the weighting
+                # kernel re-reads it plus the ad-hoc stats, writes cot + w
+                total += 2 * f32 + (3 * f32) + f32 + B * 4
+        return total
+    for a in z_leaves:                       # decoded Z the loss consumes
+        B, F = _row_shape(a)
+        total += B * F * 4                   # fp32 copy write, both paths
+    for a in dz_leaves:                      # dz-side cosine weighting
         B, F = _row_shape(a)
         f32 = B * F * 4
         if fused:
-            # one pass: + read ad-hoc, write cot + w
+            # one pass over the stored ring: + read ad-hoc dz,
+            # write w + the ride-along cot
             total += f32 + f32 + B * 4
         else:
-            # gather writes a fp32 entry copy (z + dz), the weighting
-            # kernel re-reads it plus the ad-hoc stats, writes cot + w
-            total += 2 * f32 + (3 * f32) + f32 + B * 4
+            # gather writes a decoded fp32 dz copy, the weighting kernel
+            # re-reads it plus the ad-hoc dz, writes w
+            total += f32 + 2 * f32 + B * 4
     return total
 
 

@@ -45,6 +45,43 @@ def _as_jax(d: Dict[str, np.ndarray]):
     return {k: jnp.asarray(v) for k, v in d.items()}
 
 
+def _fault_plan_from_args(args):
+    """Build a ``FaultPlan`` from the --fault-* flags (None when no fault
+    axis is set — the scheduler stays golden-identical)."""
+    from ..configs.base import DropoutSpan, FaultPlan
+    spans = []
+    for s in args.fault_dropout or ():
+        try:
+            party, start, rounds = s.split(":")
+            spans.append(DropoutSpan(party=party, start=int(start),
+                                     rounds=int(rounds)))
+        except ValueError:
+            raise SystemExit(
+                f"--fault-dropout wants PARTY:START:ROUNDS (e.g. "
+                f"a0:40:5), got {s!r}")
+    if not (args.fault_drop_prob or args.fault_straggler_prob or spans):
+        return None
+    return FaultPlan(seed=args.fault_seed,
+                     drop_prob=args.fault_drop_prob,
+                     max_retries=args.fault_max_retries,
+                     straggler_prob=args.fault_straggler_prob,
+                     straggler_rounds=args.fault_straggler_rounds,
+                     dropouts=tuple(spans))
+
+
+def _ckpt_extra_ref(n_pending: int, chaos: bool):
+    """Structural reference for the checkpoint's extra pytree: the resume
+    round, plus (chaos runs only) the scheduler's host bookkeeping with
+    one arrival/dispatch entry per in-flight exchange."""
+    extra = {"round": 0}
+    if chaos:
+        extra["host"] = {"now": 0, "dispatch_seq": 0,
+                         "arrival": [0] * n_pending,
+                         "dispatch_round": [0] * n_pending,
+                         "last_merged_dispatch": 0}
+    return extra
+
+
 # --------------------------------------------------------------------------
 def llm_task(cfg: ArchConfig) -> proto.VFLTask:
     """VFLTask over the LLM backbone split (text archs)."""
@@ -98,13 +135,43 @@ def train_dlrm(args) -> Dict[str, Any]:
           f"{celu_cfg.cache_dtype}; fused sample "
           f"{'on' if celu_cfg.cache_fused else 'off'})", flush=True)
     depth = celu_cfg.pipeline_depth
-    if depth:
-        pe = engine.make_pipeline(etask, opt, celu_cfg, depth=depth,
-                                  local_steps=n_local, transport=transport)
+    plan = _fault_plan_from_args(args)
+    # chaos, checkpointing, and resume all need the explicit scheduler
+    # object (ChaosEngine with plan=None is bit-identical to the base
+    # pipeline, so the checkpoint paths reuse it at every depth)
+    engineful = bool(depth) or plan is not None or args.checkpoint \
+        or args.resume
+    if engineful:
+        from .. import checkpoint as ckpt
+        from ..core.faults import ChaosEngine
+        pe = ChaosEngine(etask, opt, celu_cfg, plan=plan, depth=depth,
+                         local_steps=n_local, transport=transport)
         rs = pe.init(state)
     else:
         rnd = engine.make_round(etask, opt, celu_cfg, local_steps=n_local,
                                 transport=transport, donate=True)
+    start_round = 0
+    if args.resume:
+        n_pend = ckpt.peek_pending_len(args.resume)
+        # fabricate a structural reference: same engine, n dispatches
+        # (values are irrelevant — every leaf is overwritten)
+        it_ref = synth.aligned_batches(data["train"], args.batch_size,
+                                       seed=args.seed)
+        rs_ref = rs
+        for _ in range(n_pend):
+            bi_r, ba_r, bb_r = next(it_ref)
+            rs_ref = pe.dispatch(rs_ref, [_as_jax(ba_r)], _as_jax(bb_r),
+                                 bi_r)
+        rs, extra = ckpt.restore_round_state(
+            args.resume, rs_ref,
+            extra_reference=_ckpt_extra_ref(n_pend, plan is not None))
+        start_round = int(extra["round"])
+        if plan is not None:
+            pe.load_host_state(extra["host"])
+        else:   # fabrication advanced the (unused) chaos counters
+            pe.load_host_state(_ckpt_extra_ref(0, True)["host"])
+        print(f"[resume] {args.resume}: round {start_round}, "
+              f"{n_pend} in-flight exchange(s)", flush=True)
     # per-direction wire accounting from the transport's explicit split
     # (asymmetric codecs: sparse sketches up, dense low-bit down)
     z_shapes = [(args.batch_size, cfg.z_dim)]
@@ -116,25 +183,39 @@ def train_dlrm(args) -> Dict[str, Any]:
                 {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])})
     it = synth.aligned_batches(data["train"], args.batch_size,
                                seed=args.seed)
+    for _ in range(start_round):    # deterministic stream: replay the
+        next(it)                    # consumed prefix, bit-consistent
     t0 = time.time()
     history = []
-    for i in range(args.rounds):
+    for i in range(start_round, args.rounds):
         bi, ba, bb = next(it)
-        if depth:
+        if engineful:
             rs, m = pe.step(rs, [_as_jax(ba)], _as_jax(bb), bi)
         else:
             state, m = rnd(state, [_as_jax(ba)], _as_jax(bb), bi)
+        if args.checkpoint and (i + 1) % args.checkpoint_every == 0:
+            extra = {"round": i + 1}
+            if plan is not None:
+                extra["host"] = pe.host_state()
+            ckpt.save_round_state(args.checkpoint, rs, extra=extra)
         if (i + 1) % max(1, args.rounds // 10) == 0:
-            cur = rs.params if depth else state["params"]
+            cur = rs.params if engineful else state["params"]
             logits = predict(engine.unlift_params(cur), cfg, tea, teb)
             a = auc(np.asarray(logits), te["y"])
             history.append((i + 1, float(m["loss"]), a))
             print(f"round {i+1:6d} loss {float(m['loss']):.4f} "
                   f"AUC {a:.4f} local_steps {int(m.get('local_steps', 0))} "
                   f"w_mean {float(m.get('w_mean', 0)):.3f}", flush=True)
-    if depth:
+    if engineful:
         rs, _ = pe.flush(rs)
         state = pe.finalize(rs)
+    if plan is not None:
+        tel = pe.telemetry()
+        print(f"[chaos] {tel['merges']} merges / {tel['dispatches']} "
+              f"dispatches over {tel['rounds']} rounds: "
+              f"{tel['drops']} drops, {tel['stalls']} stalls, "
+              f"{tel['dropout_rounds']} dropout rounds, "
+              f"{tel['wire_attempts']} wire attempts", flush=True)
     wall = time.time() - t0
     # overlap-aware simulated wall-clock: split the measured compute into
     # the exchange share (1 fresh update) and the local share (n_local
@@ -149,19 +230,26 @@ def train_dlrm(args) -> Dict[str, Any]:
     seq_s = DEFAULT_WAN.time_to_target(
         args.rounds, up_bytes, down_bytes, exchange_compute_s=ex_c,
         local_compute_s=loc_c, pipeline_depth=0)
+    # chaos runs charge the wire per ATTEMPT (retries re-send; dropout/
+    # stall rounds send nothing)
+    wire_rounds = pe.counters["wire_attempts"] if plan is not None \
+        else args.rounds
     out = {
         "arch": args.arch, "protocol": args.protocol,
         "rounds": args.rounds, "final_auc": history[-1][2] if history else None,
-        "comm_bytes": args.rounds * z_bytes,
-        "uplink_bytes": args.rounds * up_bytes,
-        "downlink_bytes": args.rounds * down_bytes,
+        "comm_bytes": wire_rounds * z_bytes,
+        "uplink_bytes": wire_rounds * up_bytes,
+        "downlink_bytes": wire_rounds * down_bytes,
+        "fault_telemetry": pe.telemetry() if plan is not None else None,
         "sim_wan_s": comm_s, "sim_wan_sequential_s": seq_s,
         "pipeline_depth": depth, "compute_wall_s": wall,
         "history": history,
     }
     pipe_note = (f" (sequential would be {seq_s:.1f}s -> "
                  f"{seq_s / comm_s:.2f}x overlap win)") if depth else ""
-    print(f"[done] {args.protocol}: AUC={out['final_auc']:.4f} "
+    auc_note = "n/a" if out["final_auc"] is None \
+        else f"{out['final_auc']:.4f}"
+    print(f"[done] {args.protocol}: AUC={auc_note} "
           f"comm={out['comm_bytes']/1e6:.1f}MB "
           f"(up {up_bytes/1e3:.0f}KB/dn {down_bytes/1e3:.0f}KB per round) "
           f"simWAN={comm_s:.1f}s wall={wall:.1f}s{pipe_note}")
@@ -266,6 +354,38 @@ def main(argv=None):
                     help="disable the fused gather→dequant→weight sample "
                          "megakernel (pin the materializing reference "
                          "path)")
+    ap.add_argument("--fault-drop-prob", type=float, default=0.0,
+                    metavar="P",
+                    help="per-attempt exchange drop probability of the "
+                         "chaos layer (core/faults.py); any --fault-* "
+                         "axis switches the scheduler to the seeded "
+                         "ChaosEngine")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the deterministic fault schedule")
+    ap.add_argument("--fault-max-retries", type=int, default=2,
+                    help="wire retries per exchange before the round's "
+                         "update is abandoned (residuals absorb it)")
+    ap.add_argument("--fault-straggler-prob", type=float, default=0.0,
+                    metavar="P",
+                    help="probability a delivered exchange arrives late")
+    ap.add_argument("--fault-straggler-rounds", type=int, default=2,
+                    help="max rounds of straggler delay")
+    ap.add_argument("--fault-dropout", action="append", default=[],
+                    metavar="PARTY:START:ROUNDS",
+                    help="drop a party for a span of rounds (repeatable), "
+                         "e.g. a0:40:5 or b:100:10; the survivors keep "
+                         "local-updating on cached statistics")
+    ap.add_argument("--checkpoint", default="", metavar="PATH",
+                    help="save the FULL round state (params, optimizer, "
+                         "worksets, transport residuals, in-flight "
+                         "exchange queue) to PATH every "
+                         "--checkpoint-every rounds; restored runs are "
+                         "bit-consistent")
+    ap.add_argument("--checkpoint-every", type=int, default=50,
+                    metavar="N")
+    ap.add_argument("--resume", default="", metavar="PATH",
+                    help="resume from a --checkpoint file (bit-exact: "
+                         "same flags, same seed)")
     ap.add_argument("--optimizer", default="adagrad")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)

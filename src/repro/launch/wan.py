@@ -113,3 +113,53 @@ def wan_seconds(up_bytes: float, down_bytes: float, *,
     required — the historical one-argument form took the ROUND TOTAL and
     would silently double-count if it defaulted here."""
     return clock.wire_seconds(up_bytes, down_bytes)
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous / unreliable links (the chaos engine's price model)
+# --------------------------------------------------------------------------
+def clocks_from_plan(plan, K: int):
+    """Per-feature-party :class:`WANClock` list for a
+    ``configs.base.FaultPlan``.  ``plan.party_clocks`` holds plain
+    ``(up_Bps, down_Bps, latency_s)`` tuples (configs stays a leaf
+    module); missing entries (or ``plan=None`` / ``party_clocks=None``)
+    fall back to the homogeneous default link, and a shorter tuple than K
+    cycles — handy for 'one slow party' plans."""
+    tuples = getattr(plan, "party_clocks", None) if plan is not None \
+        else None
+    if not tuples:
+        return [DEFAULT_CLOCK] * K
+    return [WANClock(up_bandwidth=tuples[i % len(tuples)][0],
+                     down_bandwidth=tuples[i % len(tuples)][1],
+                     latency=tuples[i % len(tuples)][2])
+            for i in range(K)]
+
+
+def transport_party_updown(transport, z_shapes):
+    """Per-party [(uplink, downlink)] byte pairs — the per-link loads a
+    heterogeneous clock set prices individually."""
+    return [(transport.uplink_bytes(s), transport.downlink_bytes(s))
+            for s in z_shapes]
+
+
+def hetero_wire_seconds(clocks, party_updown) -> float:
+    """One K-party exchange over per-party links: each party's ⟨Z_i, ∇Z_i⟩
+    legs ride its OWN link concurrently with the other parties', so the
+    exchange completes when the SLOWEST link drains (the merge needs every
+    party's statistics)."""
+    return max(c.wire_seconds(u, d)
+               for c, (u, d) in zip(clocks, party_updown))
+
+
+def retry_exchange_seconds(clocks, party_updown, *, attempts: int = 1,
+                           backoff_s: float = 0.0) -> float:
+    """Wall-clock of one exchange delivered on its ``attempts``-th try
+    under exponential backoff: every attempt re-pays the full
+    heterogeneous wire time (the exchange is retried whole — partial
+    per-party redelivery would break the K-party merge atomicity), and
+    attempt k+1 waits ``backoff_s * 2**(k-1)`` first."""
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
+    wire = hetero_wire_seconds(clocks, party_updown)
+    waits = sum(backoff_s * (2.0 ** k) for k in range(attempts - 1))
+    return attempts * wire + waits

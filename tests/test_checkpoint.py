@@ -1,0 +1,146 @@
+"""Round-state checkpointing (checkpoint.save_round_state & friends).
+
+The plain ``save``/``restore`` pytree round-trip is pinned in
+test_system.py; this file covers what PR 7 added: native bf16 storage
+(bit-exact, half the bytes), python-scalar leaves, and the FULL
+scheduler-state checkpoint — params, optimizer, quantized workset rings,
+transport error-feedback residuals, and the in-flight exchange queue —
+restored into a fresh engine bit-consistently.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs.base import CELUConfig
+from repro.core import engine
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.models.tabular import DLRMConfig, make_dlrm
+from repro.optim import make_optimizer
+
+
+# --------------------------------------------------------------------------
+# Leaf-level storage rules
+# --------------------------------------------------------------------------
+def test_bf16_stored_natively_and_bit_exact(tmp_path):
+    """bf16 leaves land in the file as uint16 bit-views (half the bytes
+    of the historical fp32 detour) and restore bit-exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 8)).astype(
+        jnp.bfloat16)
+    path = str(tmp_path / "bf16.npz")
+    ckpt.save(path, {"x": x})
+    with np.load(path) as data:
+        assert data["x"].dtype == np.uint16         # native storage
+    got = ckpt.restore(path, {"x": jnp.zeros_like(x)})["x"]
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(x).view(np.uint16),
+                                  np.asarray(got).view(np.uint16))
+
+
+def test_legacy_fp32_stored_bf16_still_restores(tmp_path):
+    """Checkpoints written before native bf16 storage hold fp32 values
+    under bf16 references — they restore via value cast."""
+    x = jnp.asarray([1.5, -2.25, 3.0], jnp.bfloat16)
+    path = str(tmp_path / "legacy.npz")
+    np.savez(path, x=np.asarray(x, np.float32))     # the old format
+    got = ckpt.restore(path, {"x": jnp.zeros_like(x)})["x"]
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                  np.asarray(got, np.float32))
+
+
+def test_python_scalar_leaves_roundtrip(tmp_path):
+    tree = {"n": 7, "lr": 0.05, "on": True}
+    path = str(tmp_path / "scalars.npz")
+    ckpt.save(path, tree)
+    got = ckpt.restore(path, {"n": 0, "lr": 0.0, "on": False})
+    assert got == tree
+    assert {k: type(v) for k, v in got.items()} == \
+        {"n": int, "lr": float, "on": bool}
+
+
+# --------------------------------------------------------------------------
+# Full scheduler state
+# --------------------------------------------------------------------------
+def _build(depth, *, cache_dtype="int8", seed=0):
+    spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
+                       n_train=2048, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=32, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    init_fn, task, _ = make_dlrm(cfg)
+    base = CELUConfig(R=3, W=3, xi_degrees=60.0, cache_dtype=cache_dtype)
+    ccfg, nloc = engine.preset_config("celu", base)
+    params = init_fn(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer("adagrad", 0.05)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    etask = engine.lift_two_party(task)
+    tp = engine.make_transport(ccfg, "topk_int8")
+    it = aligned_batches(data["train"], 64, seed=seed)
+    _, ba, bb = next(it)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, ccfg, [asj(ba)], asj(bb), transport=tp)
+    pe = engine.make_pipeline(etask, opt, ccfg, depth=depth,
+                              local_steps=nloc, transport=tp)
+    return pe, pe.init(state), aligned_batches(data["train"], 64,
+                                               seed=seed), asj
+
+
+def _steps(pe, rs, it, asj, n):
+    ms = []
+    for _ in range(n):
+        bi, ba, bb = next(it)
+        rs, m = pe.step(rs, [asj(ba)], asj(bb), bi)
+        ms.append(float(np.float32(m["loss"])))
+    return rs, ms
+
+
+def test_round_state_mid_pipeline_resume_bit_exact(tmp_path):
+    """depth-2 run with an int8 workset cache and topk_int8 residuals:
+    save after 4 rounds, restore into a FRESH engine (reference
+    fabricated via the recorded pending depth), and the next step is
+    bit-identical to the uninterrupted run — queue, QuantLeaf codes,
+    residual chain and all."""
+    pe0, rs0, it0, asj = _build(2)
+    rs0, _ = _steps(pe0, rs0, it0, asj, 4)
+    path = str(tmp_path / "mid.npz")
+    ckpt.save_round_state(path, rs0, extra={"round": 4})
+    rs0, l_ref = _steps(pe0, rs0, it0, asj, 1)      # uninterrupted step 5
+
+    n = ckpt.peek_pending_len(path)
+    assert n == len(rs0.pending)                     # steady state: D-1
+    pe1, rs_ref, it1, asj = _build(2)
+    for _ in range(n):
+        bi, ba, bb = next(it1)
+        rs_ref = pe1.dispatch(rs_ref, [asj(ba)], asj(bb), bi)
+    rs1, extra = ckpt.restore_round_state(path, rs_ref,
+                                          extra_reference={"round": 0})
+    assert extra == {"round": 4}
+    for _ in range(4 - n):   # position it1 at batch 4 (step 5's batch)
+        next(it1)
+    rs1, l_got = _steps(pe1, rs1, it1, asj, 1)       # resumed step 5
+    np.testing.assert_array_equal(np.asarray(l_ref, np.float32),
+                                  np.asarray(l_got, np.float32))
+    for a, b in zip(jax.tree_util.tree_leaves(rs0.as_state()),
+                    jax.tree_util.tree_leaves(rs1.as_state())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_round_state_wrong_queue_depth_fails_loud(tmp_path):
+    pe, rs, it, asj = _build(1)
+    rs, _ = _steps(pe, rs, it, asj, 2)               # depth 1: no pending
+    path = str(tmp_path / "d1.npz")
+    ckpt.save_round_state(path, rs)
+    assert ckpt.peek_pending_len(path) == 0
+    bi, ba, bb = next(it)
+    rs_bad = pe.dispatch(rs, [asj(ba)], asj(bb), bi)
+    with pytest.raises(ValueError, match="in-flight"):
+        ckpt.restore_round_state(path, rs_bad)
+
+
+def test_plain_pytree_file_is_not_a_round_state(tmp_path):
+    path = str(tmp_path / "plain.npz")
+    ckpt.save(path, {"x": jnp.zeros(3)})
+    with pytest.raises(KeyError, match="round-state"):
+        ckpt.peek_pending_len(path)

@@ -234,6 +234,28 @@ def test_plateau_ratio_schedule_steps_on_stall():
     assert s.ratio == 0.4
 
 
+def test_plateau_ratio_schedule_ignores_nonfinite():
+    """Regression: a depth-D pipeline reports NaN losses for its D-1
+    warmup rounds, and NaN used to fall through to the stall branch
+    (``NaN < best`` is False) — the ratio ladder stepped on warmup
+    artifacts before the first real loss arrived.  Non-finite
+    observations must be complete no-ops: no stall tick, no best update,
+    no ratio step."""
+    s = C.PlateauRatioSchedule(ratios=(0.1, 0.2), patience=2,
+                               min_delta=0.01)
+    for bad in (float("nan"), float("inf"), float("-inf"),
+                jnp.float32(jnp.nan)):
+        assert s.update(bad) is None
+    assert (s.ratio, s.stall, s.best) == (0.1, 0, float("inf"))
+    # a NaN mid-stall neither extends nor resets the stall count
+    assert s.update(1.0) is None
+    assert s.update(1.0) is None            # stall 1
+    assert s.update(float("nan")) is None   # ignored
+    assert s.stall == 1
+    assert s.update(1.0) == 0.2             # stall 2 -> step
+    assert s.ratio == 0.2
+
+
 def test_topk_ratio_schedule_hook():
     """with_ratio / scheduled rebuild the codec around a new keep-ratio
     (larger wire) while preserving the value codec and the hook."""

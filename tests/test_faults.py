@@ -1,0 +1,304 @@
+"""The unreliable-party chaos layer (core/faults.py).
+
+Contracts under test:
+  * ``FaultPlan=None`` defers every decision to the base scheduler —
+    bit-identical losses AND final state vs ``PipelinedEngine`` at every
+    depth (the golden traces pin the base; this pins the wrapper).
+  * The fault schedule is a pure function of ``(seed, round)`` —
+    deterministic across instances and call orders, so a restored run
+    replays the identical fault sequence.
+  * A dropped exchange is ABSORBED, not lost: the transport's
+    error-feedback residuals swallow the decoded update (``r'' = x + r``
+    telescoping), the local scan keeps running on stale cached
+    statistics, and training continues to finite losses.
+  * A party dropout span freezes exactly that party (params, opt,
+    step counters) while the survivors keep local-updating; the rejoin
+    needs no ceremony.
+  * Checkpointed recovery: ``save_round_state`` + ``host_state`` restore
+    into a FRESH engine bit-consistently — the continued run matches the
+    uninterrupted one array-for-array.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs.base import CELUConfig, DropoutSpan, FaultPlan
+from repro.core import engine
+from repro.core.faults import ChaosEngine, ExchangeFate, FaultSchedule
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.models.tabular import DLRMConfig, make_dlrm
+from repro.optim import make_optimizer
+
+
+def _workload():
+    spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
+                       n_train=2048, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=32, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    return data, cfg
+
+
+def _build(depth, plan=None, *, chaos=True, compression="topk_int8",
+           cache_dtype="float32", seed=0):
+    data, cfg = _workload()
+    init_fn, task, _ = make_dlrm(cfg)
+    base = CELUConfig(R=3, W=3, xi_degrees=60.0, cache_dtype=cache_dtype)
+    ccfg, nloc = engine.preset_config("celu", base)
+    params = init_fn(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer("adagrad", 0.05)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    etask = engine.lift_two_party(task)
+    tp = engine.make_transport(ccfg, compression)
+    it = aligned_batches(data["train"], 64, seed=seed)
+    _, ba, bb = next(it)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, ccfg, [asj(ba)], asj(bb), transport=tp)
+    if chaos:
+        pe = ChaosEngine(etask, opt, ccfg, plan=plan, depth=depth,
+                         local_steps=nloc, transport=tp)
+    else:
+        pe = engine.make_pipeline(etask, opt, ccfg, depth=depth,
+                                  local_steps=nloc, transport=tp)
+    batches = aligned_batches(data["train"], 64, seed=seed)
+    return pe, pe.init(state), batches, asj
+
+
+def _drive(pe, rs, batches, asj, rounds):
+    losses = []
+    for _ in range(rounds):
+        bi, ba, bb = next(batches)
+        rs, m = pe.step(rs, [asj(ba)], asj(bb), bi)
+        losses.append(float(np.float32(m["loss"])))
+    return rs, losses
+
+
+def _assert_trees_equal(t0, t1):
+    l0, l1 = jax.tree_util.tree_leaves(t0), jax.tree_util.tree_leaves(t1)
+    assert len(l0) == len(l1)
+    for a, b in zip(l0, l1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# FaultPlan=None: bit-identical to the base scheduler
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("depth", [0, 1, 2])
+def test_plan_none_bit_identical(depth):
+    pe0, rs0, it0, asj = _build(depth, chaos=False)
+    rs0, l0 = _drive(pe0, rs0, it0, asj, 10)
+    rs0, _ = pe0.flush(rs0)
+    st0 = pe0.finalize(rs0)
+
+    pe1, rs1, it1, asj = _build(depth, plan=None, chaos=True)
+    rs1, l1 = _drive(pe1, rs1, it1, asj, 10)
+    rs1, _ = pe1.flush(rs1)
+    st1 = pe1.finalize(rs1)
+
+    np.testing.assert_array_equal(np.asarray(l0, np.float32),
+                                  np.asarray(l1, np.float32))
+    _assert_trees_equal(st0, st1)
+
+
+# --------------------------------------------------------------------------
+# Deterministic schedule
+# --------------------------------------------------------------------------
+def test_fault_schedule_deterministic():
+    plan = FaultPlan(seed=11, drop_prob=0.4, max_retries=3,
+                     straggler_prob=0.5, straggler_rounds=4)
+    a, b = FaultSchedule(plan), FaultSchedule(plan)
+    # same (seed, t) -> same fate, regardless of instance or call order
+    fates_fwd = [a.exchange_fate(t) for t in range(50)]
+    fates_rev = [b.exchange_fate(t) for t in reversed(range(50))][::-1]
+    assert fates_fwd == fates_rev
+    # a different seed decorrelates
+    c = FaultSchedule(dataclasses.replace(plan, seed=12))
+    assert fates_fwd != [c.exchange_fate(t) for t in range(50)]
+    # attempts bounded by max_retries + 1; delays within the span
+    for f in fates_fwd:
+        assert 1 <= f.attempts <= 4
+        assert 0 <= f.delay_rounds <= 4
+        if not f.delivered:
+            assert f.attempts == 4 and f.delay_rounds == 0
+    # fault-free plan short-circuits to a constant fate
+    quiet = FaultSchedule(FaultPlan(seed=0))
+    assert quiet.exchange_fate(7) == ExchangeFate(True, 1, 0)
+
+
+def test_dropout_span_and_mask():
+    plan = FaultPlan(dropouts=(DropoutSpan(party="a0", start=3, rounds=2),
+                               DropoutSpan(party="b", start=4, rounds=1)))
+    sched = FaultSchedule(plan)
+    assert sched.down(2) == ()
+    assert sched.down(3) == ("a0",)
+    assert set(sched.down(4)) == {"a0", "b"}
+    assert sched.down(5) == ()
+    mask = np.asarray(sched.party_mask(4, K=2))
+    np.testing.assert_array_equal(mask, [0.0, 1.0, 0.0])
+    assert sched.party_mask(2, K=2) is None
+    # "a1" names a feature party a K=1 engine doesn't have — it must NOT
+    # silently land on slot 1 (party b's)
+    bad = FaultSchedule(FaultPlan(
+        dropouts=(DropoutSpan(party="a1", start=0, rounds=1),)))
+    with pytest.raises(ValueError, match="K=1"):
+        bad.party_mask(0, K=1)
+
+
+# --------------------------------------------------------------------------
+# Drop-absorb: the error-feedback telescoping survives as delay
+# --------------------------------------------------------------------------
+def test_recover_dropped_absorbs_decoded_update():
+    celu = CELUConfig()
+    tp = engine.make_transport(celu, "topk_int8")
+    z = [jax.random.normal(jax.random.PRNGKey(0), (32, 8))]
+    dz = [jax.random.normal(jax.random.PRNGKey(1), (32, 8))]
+    ts = tp.init_state(z)
+    rng = jax.random.PRNGKey(2)
+    assert set(tp.stateful_directions) == {"up", "down"}
+    z_wire, r_up = tp.send(rng, z[0], ts["up"][0], "up")
+    dz_wire, r_down = tp.send(rng, dz[0], ts["down"][0], "down")
+    ts2 = {"up": [r_up], "down": [r_down]}
+    fresh = {"tstate": ts2, "zs": [z_wire], "dzs": [dz_wire]}
+    rec = tp.recover_dropped(fresh)
+    # post-send residual r' = (x + r) - y; absorbing the lost decoded y
+    # gives r'' = r' + y = x + r — the NEXT successful send transmits the
+    # accumulated signal, so the dropped update is delayed, never lost.
+    for d, x in (("up", z[0]), ("down", dz[0])):
+        xw = tp._wire_cast(x).astype(jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(rec[d][0]), np.asarray(xw + ts[d][0]),
+            rtol=1e-6, atol=1e-6)
+    # stateless transport: graceful no-op (update simply lost)
+    tp_plain = engine.SimWANTransport(celu)
+    ts_p = tp_plain.init_state(z)
+    assert tp_plain.recover_dropped({"tstate": ts_p}) is ts_p
+
+
+def test_dropped_exchange_training_continues():
+    """Every exchange in the run is lost (seed 3 drops all 6 rounds at
+    p=0.95 with no retry).  The scan must keep running on the initial
+    cached statistics, states stay finite, and no merge ever lands
+    (comm_rounds pinned at 0)."""
+    plan = FaultPlan(seed=3, drop_prob=0.95, max_retries=0)
+    pe, rs, it, asj = _build(1, plan=plan)
+    rs, losses = _drive(pe, rs, it, asj, 6)
+    assert all(np.isnan(x) for x in losses)      # no merge -> no loss obs
+    assert pe.counters["drops"] == 6
+    assert pe.counters["merges"] == 0
+    assert pe.counters["wire_attempts"] == 6     # 1 attempt per round
+    assert int(rs.comm_rounds) == 0
+    for leaf in jax.tree_util.tree_leaves(rs.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    rs, _ = pe.flush(rs)
+    pe.finalize(rs)                              # drains clean
+
+
+# --------------------------------------------------------------------------
+# Dropout span: freeze exactly the down party, elastic rejoin
+# --------------------------------------------------------------------------
+def test_dropout_recovery_smoke():
+    """One party down for a span mid-training: its tower freezes, the
+    survivors keep stepping, and after the rejoin everyone advances
+    again.  Cheap — the CI fast lane runs this."""
+    span = DropoutSpan(party="a0", start=3, rounds=3)
+    plan = FaultPlan(seed=0, dropouts=(span,))
+    pe, rs, it, asj = _build(1, plan=plan)
+    rs, _ = _drive(pe, rs, it, asj, 3)           # up to the span
+    frozen_a = jax.tree_util.tree_map(np.asarray, rs.params["a"][0])
+    steps_a = int(rs.steps["a"][0])
+    sb_before = int(rs.steps["b"])
+    rs, _ = _drive(pe, rs, it, asj, 3)           # the down span
+    _assert_trees_equal(frozen_a, rs.params["a"][0])
+    assert int(rs.steps["a"][0]) == steps_a      # frozen counter too
+    assert int(rs.steps["b"]) > sb_before        # survivor kept stepping
+    assert pe.counters["dropout_rounds"] == 3
+    rs, losses = _drive(pe, rs, it, asj, 4)      # elastic rejoin
+    assert int(rs.steps["a"][0]) > steps_a
+    assert any(np.isfinite(x) for x in losses)
+    rs, _ = pe.flush(rs)
+    st = pe.finalize(rs)
+    for leaf in jax.tree_util.tree_leaves(st["params"]):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_straggler_defers_merge():
+    """Every exchange arrives one round late at depth 1: merges lag the
+    schedule (stall rounds appear) but nothing is lost — by the flush,
+    every dispatched exchange has merged exactly once."""
+    plan = FaultPlan(seed=5, straggler_prob=1.0, straggler_rounds=1)
+    pe, rs, it, asj = _build(1, plan=plan)
+    rs, _ = _drive(pe, rs, it, asj, 8)
+    assert pe.counters["stalls"] > 0
+    rs, _ = pe.flush(rs)
+    st = pe.finalize(rs)
+    assert int(st["comm_rounds"]) == pe.counters["dispatches"]
+    assert pe.counters["merges"] == pe.counters["dispatches"]
+
+
+# --------------------------------------------------------------------------
+# Checkpointed recovery: bit-consistent resume into a FRESH engine
+# --------------------------------------------------------------------------
+def test_chaos_checkpoint_resume_bit_exact(tmp_path):
+    plan = FaultPlan(seed=9, drop_prob=0.25, max_retries=1,
+                     straggler_prob=0.3, straggler_rounds=2,
+                     dropouts=(DropoutSpan(party="a0", start=5, rounds=2),))
+    # uninterrupted reference: 12 rounds + flush
+    pe0, rs0, it0, asj = _build(2, plan=plan)
+    rs0, l0 = _drive(pe0, rs0, it0, asj, 12)
+    rs0, _ = pe0.flush(rs0)
+    st0 = pe0.finalize(rs0)
+
+    # interrupted run: 7 rounds, checkpoint, DISCARD the engine
+    pe1, rs1, it1, asj = _build(2, plan=plan)
+    rs1, l1a = _drive(pe1, rs1, it1, asj, 7)
+    path = str(tmp_path / "chaos.npz")
+    ckpt.save_round_state(path, rs1, extra=pe1.host_state())
+    n_pend = len(rs1.pending)
+    del pe1, rs1
+
+    # fresh engine; fabricate a reference with n_pend dispatches
+    pe2, rs_ref, it_ref, asj = _build(2, plan=plan)
+    for _ in range(n_pend):
+        bi, ba, bb = next(it_ref)
+        rs_ref = pe2.dispatch(rs_ref, [asj(ba)], asj(bb), bi)
+    host_ref = {"now": 0, "dispatch_seq": 0, "arrival": [0] * n_pend,
+                "dispatch_round": [0] * n_pend, "last_merged_dispatch": 0}
+    rs2, host = ckpt.restore_round_state(path, rs_ref,
+                                         extra_reference=host_ref)
+    pe2.load_host_state(host)
+
+    # replay the consumed batch prefix, then continue 5 more rounds
+    it2 = iter(it1)   # it1 is already positioned after round 7
+    rs2, l1b = _drive(pe2, rs2, it2, asj, 5)
+    rs2, _ = pe2.flush(rs2)
+    st2 = pe2.finalize(rs2)
+
+    np.testing.assert_array_equal(np.asarray(l0, np.float32),
+                                  np.asarray(l1a + l1b, np.float32))
+    _assert_trees_equal(st0, st2)
+
+
+# --------------------------------------------------------------------------
+# Chaos + flush drain after a dropped dispatch
+# --------------------------------------------------------------------------
+def test_flush_after_drop_drains_clean():
+    """A dropped dispatch leaves the depth-2 queue under-filled; flush
+    must drain what IS there (merge order by dispatch), never
+    double-merge, and finalize."""
+    plan = FaultPlan(seed=2, drop_prob=0.35, max_retries=0)
+    pe, rs, it, asj = _build(2, plan=plan)
+    rs, _ = _drive(pe, rs, it, asj, 9)
+    assert pe.counters["drops"] > 0              # seed 2 drops in 9 rounds
+    n_pending = len(rs.pending)
+    merges_before = pe.counters["merges"]
+    rs, _ = pe.flush(rs)
+    assert not rs.pending
+    assert pe.counters["merges"] == merges_before + n_pending
+    st = pe.finalize(rs)
+    assert int(st["comm_rounds"]) == pe.counters["merges"]
+    assert int(st["comm_rounds"]) == \
+        pe.counters["dispatches"] - pe.counters["drops"]

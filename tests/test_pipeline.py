@@ -324,3 +324,83 @@ def test_wan_seconds_wrapper_and_transport_split():
     # the round TOTAL — a silent default would double-count it)
     with pytest.raises(TypeError):
         wan_seconds(1e6, clock=clock)
+
+
+# --------------------------------------------------------------------------
+# Flush/merge drain semantics on a PARTIALLY filled queue
+# --------------------------------------------------------------------------
+def _build_engine(depth, compression="topk_int8"):
+    data, cfg = _workload()
+    init_fn, task, _ = make_dlrm(cfg)
+    base = CELUConfig(R=3, W=3, xi_degrees=60.0)
+    ccfg, nloc = engine.preset_config("celu", base)
+    params = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adagrad", 0.05)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+    tp = engine.make_transport(ccfg, compression)
+    etask = engine.lift_two_party(task)
+    it = aligned_batches(data["train"], 64, seed=0)
+    _, ba, bb = next(it)
+    state = engine.init_state(etask, engine.lift_two_party_params(params),
+                              opt, ccfg, [asj(ba)], asj(bb), transport=tp)
+    pe = engine.make_pipeline(etask, opt, ccfg, depth=depth,
+                              local_steps=nloc, transport=tp)
+    return pe, pe.init(state), aligned_batches(data["train"], 64, seed=0), asj
+
+
+def test_flush_partial_queue_merges_in_dispatch_order():
+    """Interrupting a depth-2 run mid-warmup leaves the exchange queue
+    partially filled; flush must merge oldest-first (batch_idx order),
+    exactly once each, with the in-flight transport-residual chain
+    adopted intact."""
+    pe, rs, it, asj = _build_engine(2)
+    idxs = []
+    for _ in range(2):                     # fill by hand: no merges yet
+        bi, ba, bb = next(it)
+        rs = pe.dispatch(rs, [asj(ba)], asj(bb), bi)
+        idxs.append(int(np.asarray(bi)))
+    assert [int(np.asarray(p.batch_idx)) for p in rs.pending] == idxs
+    with pytest.raises(RuntimeError, match="in flight"):
+        pe.dispatch(rs, [asj(ba)], asj(bb), bi)   # queue is at capacity
+    # the newest pending slot carries the LIVE residuals; the round-state
+    # copy is stale until the merges adopt them
+    tail_ts = jax.tree_util.tree_map(np.asarray,
+                                     rs.pending[-1].fresh["tstate"])
+    merged = []
+    orig_merge = pe.merge
+
+    def recording_merge(rs, **kw):
+        merged.append(int(np.asarray(rs.pending[0].batch_idx)))
+        return orig_merge(rs, **kw)
+
+    pe.merge = recording_merge
+    c0 = int(np.asarray(rs.comm_rounds))
+    rs, lm = pe.flush(rs)
+    assert merged == idxs                       # oldest first, once each
+    assert int(np.asarray(rs.comm_rounds)) == c0 + 2
+    assert not rs.pending
+    assert int(lm["local_steps"]) > 0           # drain scans ran
+    for got, want in zip(jax.tree_util.tree_leaves(rs.transport),
+                         jax.tree_util.tree_leaves(tail_ts)):
+        np.testing.assert_array_equal(np.asarray(got), want)
+    with pytest.raises(RuntimeError, match="no exchange in flight"):
+        orig_merge(rs)                          # nothing left to merge
+    pe.finalize(rs)
+
+
+def test_flush_partial_queue_single_slot():
+    """One step into a depth-2 run the queue holds a single exchange
+    (warmup reported a NaN loss, no merge); flush completes exactly that
+    one merge and finalize's step counters stay honest."""
+    pe, rs, it, asj = _build_engine(2)
+    bi, ba, bb = next(it)
+    rs, m = pe.step(rs, [asj(ba)], asj(bb), bi)
+    assert np.isnan(float(np.float32(m["loss"])))
+    assert len(rs.pending) == 1
+    c0 = int(np.asarray(rs.comm_rounds))
+    rs, _ = pe.flush(rs)
+    assert not rs.pending
+    st = pe.finalize(rs)
+    assert int(np.asarray(st["comm_rounds"])) == c0 + 1
+    # one merge -> one deferred insert -> the scans that ran saw it
+    assert int(np.asarray(st["steps"]["b"])) > 0
