@@ -45,6 +45,7 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
                  pipeline_depth: int = 0,
                  pipeline_lr_damping: float = 0.25,
                  cache_dtype: str = "float32", cache_fused: bool = True,
+                 opt_state_dtype: str = "float32",
                  transport=None, transport_hook=None, fault_plan=None
                  ) -> Dict[str, object]:
     """Train with one protocol preset of the K-party round engine; return
@@ -82,7 +83,9 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     if sampling is not None and protocol == "celu":
         ccfg = dataclasses.replace(ccfg, sampling=sampling)
     params = init_fn(jax.random.PRNGKey(seed), cfg)
-    opt = make_optimizer(optimizer, lr)
+    opt_kw = {} if opt_state_dtype == "float32" \
+        else {"state_dtype": opt_state_dtype}
+    opt = make_optimizer(optimizer, lr, **opt_kw)
     it = synth.aligned_batches(data["train"], batch, seed=seed)
     _, ba, bb = next(it)
     asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
@@ -178,6 +181,7 @@ def run_protocol(protocol: str, data, cfg, *, R=5, W=5, xi=60.0,
     return {
         "protocol": protocol, "R": R, "W": W, "xi": xi,
         "cache_dtype": cache_dtype, "cache_fused": cache_fused,
+        "opt_state_dtype": opt_state_dtype,
         "cache_bytes": sum(workset_nbytes(w) for w in tables),
         "stat_cache_bytes": sum(workset_nbytes(w, QUANT_KEYS)
                                 for w in tables),

@@ -1,12 +1,14 @@
-"""Benchmark-regression gate: diff a fresh ``BENCH_local_scan.json``
-against the committed baseline (``results/BENCH_baseline.json``).
+"""Benchmark-regression gate: diff a fresh benchmark JSON against its
+committed baseline.  Gates two files in CI: ``BENCH_local_scan.json``
+(vs ``results/BENCH_baseline.json``) and the LLM-geometry memory table
+``BENCH_llm.json`` (vs ``results/BENCH_llm_baseline.json``).
 
 Two classes of signal, two thresholds:
 
-  * **Deterministic counters** — the table's device bytes
-    (``cache_bytes``/``stat_cache_bytes``) and the analytic roofline
-    counters (``sample_hbm_bytes_per_step``/``hbm_bytes_per_round``) are
-    exact functions of the code, not the machine.  ANY increase over the
+  * **Deterministic counters** — the named roofline counters in
+    ``EXACT_KEYS`` plus EVERY per-variant key ending in ``_bytes`` (the
+    LLM table's per-party params/opt-state/cache budgets) are exact
+    functions of the code, not the machine.  ANY increase over the
     baseline fails the gate.
   * **Measured wall** — ``local_step_ms`` is a CPU wall measurement on a
     shared CI runner; it may drift up to ``--wall-tol`` (default 25%)
@@ -39,6 +41,16 @@ EXACT_KEYS = ("cache_bytes", "stat_cache_bytes",
 WALL_KEY = "local_step_ms"
 
 
+def _exact_keys(base: dict, cur: dict):
+    """Deterministic keys of one variant: the named counters plus every
+    ``*_bytes`` field (memory budgets are exact by construction)."""
+    keys = set(EXACT_KEYS)
+    for k, v in list(base.items()) + list(cur.items()):
+        if k.endswith("_bytes") and isinstance(v, (int, float)):
+            keys.add(k)
+    return sorted(keys)
+
+
 def compare(baseline: dict, current: dict, wall_tol: float = 0.25):
     """-> (failures, notes): lists of human-readable strings.  A failure
     is a regression the gate must reject; a note is an improvement or a
@@ -56,7 +68,7 @@ def compare(baseline: dict, current: dict, wall_tol: float = 0.25):
             failures.append(f"variant {name!r} present in baseline but "
                             f"missing from the current run")
             continue
-        for k in EXACT_KEYS:
+        for k in _exact_keys(base, cur):
             b, c = base.get(k), cur.get(k)
             if b is None or c is None:
                 continue

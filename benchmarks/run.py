@@ -14,14 +14,18 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=("ablation", "end_to_end", "roofline", "micro",
                              "beyond", "local_scan", "pipeline_depth",
-                             "chaos"))
+                             "chaos", "llm"))
     args = ap.parse_args()
 
-    from . import (ablation, beyond, chaos, end_to_end, local_scan,
+    from . import (ablation, beyond, chaos, end_to_end, llm, local_scan,
                    microbench, roofline)
     blocks = {
         "micro": microbench.main,
         "local_scan": local_scan.main,     # emits BENCH_local_scan.json
+        # emits BENCH_llm.json (exact per-party HBM at full LLM geometry
+        # + the at-rest quantization ladder; the fast CI lane runs it
+        # --reduced --check, the nightly lane adds the convergence leg)
+        "llm": llm.main,
         "roofline": roofline.main,
         "end_to_end": end_to_end.main,
         # emits BENCH_pipeline_depth.json (the depth-knob convergence

@@ -1,9 +1,18 @@
-"""CELU-VFL on an LLM backbone: Party A holds an auxiliary token stream,
-Party B the main tokens + labels.  Runs the full protocol stack (workset
-table, round-robin sampling, instance weighting) on a reduced smollm
-config — the same code path the production configs lower through.
+"""CELU-VFL on an LLM backbone at FULL model geometry: Party A holds an
+auxiliary token stream, Party B the main tokens + labels, and the full
+protocol stack (workset ring, round-robin sampling, instance weighting,
+int4-at-rest cache, int8 optimizer state) runs over the real 32-layer
+smollm-360m config — the quantized at-rest storage is what makes that
+geometry practical, and the script prints the exact per-party HBM math
+(``repro.launch.budget``, the same counters ``results/BENCH_llm.json``
+gates) before training.
 
-    PYTHONPATH=src python examples/llm_vfl_training.py [--arch hymba-1.5b]
+Defaults are full geometry with a small demo batch; pass ``--reduced``
+for the 2-layer CPU smoke variant (the historical quick path).
+
+    PYTHONPATH=src python examples/llm_vfl_training.py
+    PYTHONPATH=src python examples/llm_vfl_training.py --reduced \
+        --cache-dtype float32 --opt-state-dtype float32
 """
 import argparse
 import os
@@ -11,18 +20,59 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.configs import get_config  # noqa: E402
 from repro.launch import train as T  # noqa: E402
+from repro.launch.budget import format_budget, party_hbm_budget  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke variant instead of full geometry")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="default: 3 full-geometry rounds, 12 reduced")
+    ap.add_argument("--cache-dtype", default="int4",
+                    choices=("float32", "bfloat16", "int8", "int4"))
+    ap.add_argument("--opt-state-dtype", default="int8",
+                    choices=("float32", "bfloat16", "int8"))
     args = ap.parse_args()
-    T.main(["--arch", args.arch, "--protocol", "celu",
-            "--rounds", str(args.rounds), "--batch-size", "4",
-            "--seq-len", "32", "--reduced", "--R", "3", "--W", "3",
-            "--lr", "0.02"])
+
+    cfg = get_config(args.arch)
+    W = 3
+    if args.reduced:
+        batch, seq, rounds = 4, 32, args.rounds or 12
+    else:
+        batch, seq, rounds = 2, 64, args.rounds or 3
+
+    # The per-party device-memory math, before any weight exists: the
+    # demo shape actually trained below, then the paper-shape train_4k
+    # batch the benchmark gates — where the at-rest ladder decides
+    # whether a party fits one device at all.
+    shape_cfg = cfg.reduced() if args.reduced else cfg
+    demo = party_hbm_budget(shape_cfg, batch_size=batch, seq_len=seq, W=W,
+                            cache_dtype=args.cache_dtype,
+                            opt_state_dtype=args.opt_state_dtype)
+    print(format_budget(f"{shape_cfg.name} (this run: B={batch} S={seq} "
+                        f"W={W}, cache {args.cache_dtype}, opt state "
+                        f"{args.opt_state_dtype})", demo))
+    if not args.reduced:
+        for cd, od in (("float32", "float32"),
+                       (args.cache_dtype, args.opt_state_dtype)):
+            full = party_hbm_budget(cfg, batch_size=256, seq_len=4096, W=5,
+                                    cache_dtype=cd, opt_state_dtype=od)
+            print(format_budget(f"{cfg.name} (paper-shape train_4k: B=256 "
+                                f"S=4096 W=5, cache {cd}, opt state {od})",
+                                full))
+
+    argv = ["--arch", args.arch, "--protocol", "celu",
+            "--rounds", str(rounds), "--batch-size", str(batch),
+            "--seq-len", str(seq), "--R", "3", "--W", str(W),
+            "--cache-dtype", args.cache_dtype,
+            "--opt-state-dtype", args.opt_state_dtype, "--lr", "0.02"]
+    if args.reduced:
+        argv.append("--reduced")
+    T.main(argv)
 
 
 if __name__ == "__main__":

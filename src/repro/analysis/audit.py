@@ -78,6 +78,7 @@ def default_cases(quick: bool = False) -> List[AuditCase]:
                          cache_dtype="int8"),
                 mk(compression="topk_int8", dp_sigma=0.3, depth=2,
                    cache_dtype="int8", dropped=True),
+                mk(depth=2, compression="int8", cache_dtype="int4"),
                 mk(compression="int8", wire_dtype="bfloat16")]
 
     cases = []
@@ -88,8 +89,14 @@ def default_cases(quick: bool = False) -> List[AuditCase]:
         for depth in (0, 1, 2, 4):
             cases.append(mk(K=K, depth=depth, compression="topk_int8",
                             cache_dtype="int8", dp_sigma=0.3))
-    for cd in ("float32", "bfloat16", "int8"):
+    for cd in ("float32", "bfloat16", "int8", "int4"):
         cases.append(mk(depth=2, compression="int8", cache_dtype=cd))
+    # int4 at-rest rides the packed-nibble fused sample path; cover it at
+    # K > 1 and under the chaos drop-absorb schedule too
+    cases.append(mk(K=3, depth=2, compression="topk_int8",
+                    cache_dtype="int4", dp_sigma=0.3))
+    cases.append(mk(depth=2, compression="topk_int8", cache_dtype="int4",
+                    dropped=True))
     for spec in ("", "int8"):
         cases.append(mk(compression=spec, wire_dtype="bfloat16"))
     # chaos layer: lost exchange absorbed into the residuals, with and
@@ -524,7 +531,7 @@ def run_audit(cases: Optional[Sequence[AuditCase]] = None, *,
               include_kernel_lint: bool = True) -> AuditReport:
     import jax
 
-    from .kernel_lint import DEFAULT_GEOMETRIES, lint_kernels
+    from .kernel_lint import CONTRACTS, DEFAULT_GEOMETRIES, lint_kernels
 
     if cases is None:
         cases = default_cases()
@@ -535,7 +542,7 @@ def run_audit(cases: Optional[Sequence[AuditCase]] = None, *,
             name="kernel-contracts",
             config={"geometries": [g.name for g in DEFAULT_GEOMETRIES]},
             findings=kf,
-            stats={"contracts": 7,
+            stats={"contracts": len(CONTRACTS),
                    "geometries": len(DEFAULT_GEOMETRIES)}))
     for case in cases:
         results.append(trace_case(case))

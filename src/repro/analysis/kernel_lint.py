@@ -76,6 +76,12 @@ def _i32(*shape):
     return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
 
 
+def _u8(*shape):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.uint8)
+
+
 @dataclass
 class KernelContract:
     name: str                       # kernels/<name>.py
@@ -114,6 +120,22 @@ def _fs_q8_vmem(g: Geometry) -> int:
     bb = min(BLOCK_B, g.B)
     # int8 rings + f32 row scales + f32 ad_hoc/out blocks
     return (2 * bb * g.F + 2 * bb * 4 + 2 * bb * g.F * 4 + bb * 4 + 4)
+
+
+def _fs_q4_vmem(g: Geometry) -> int:
+    from ..kernels.fused_sample import BLOCK_B
+    bb = min(BLOCK_B, g.B)
+    P = -(-g.F // 2)
+    # packed uint8 rings + f32 row scales + f32 ad_hoc/out blocks; the
+    # unpacked fp32 rows live only in registers/VPU, never as an operand
+    return (2 * bb * P + 2 * bb * 4 + 2 * bb * 2 * P * 4 + bb * 4 + 4)
+
+
+def _ag_q8_vmem(g: Geometry) -> int:
+    from ..kernels.fused_adagrad import BLOCK, ROWS
+    # grad f32 + codes int8 + scale f32 + uniforms f32 in;
+    # update f32 + codes int8 + scale f32 out
+    return ROWS * BLOCK * (4 + 1 + 4 + 4 + 1) + 2 * ROWS * 4
 
 
 def _q_div(g: Geometry):
@@ -178,6 +200,24 @@ def _probe_fs_q8(g: Geometry):
                                         _f32(g.W, g.B), 0.5)
 
 
+def _probe_fs_q4(g: Geometry):
+    from ..kernels import ops
+    P = -(-g.F // 2)
+    return ops.fused_gather_weight_q4, (_i32(), _f32(g.B, g.F),
+                                        _u8(g.W, g.B, P),
+                                        _f32(g.W, g.B),
+                                        _u8(g.W, g.B, P),
+                                        _f32(g.W, g.B), 0.5)
+
+
+def _probe_ag_q8(g: Geometry):
+    from ..kernels import ops
+    from ..kernels.fused_adagrad import BLOCK, ROWS
+    return ops.fused_adagrad_q8, (_f32(ROWS, BLOCK), _i8(ROWS, BLOCK),
+                                  _f32(ROWS, 1), _f32(ROWS, BLOCK),
+                                  0.1, 1e-10)
+
+
 def _probe_q(g: Geometry):
     from ..kernels import ops
     T = g.tiles()
@@ -204,12 +244,16 @@ CONTRACTS: Tuple[KernelContract, ...] = (
                    _cw_div, _fs_vmem, _probe_fs),
     KernelContract("fused_sample", "fused_sample_q8_ref",
                    _cw_div, _fs_q8_vmem, _probe_fs_q8),
+    KernelContract("fused_sample", "fused_sample_q4_ref",
+                   _cw_div, _fs_q4_vmem, _probe_fs_q4),
     KernelContract("quantize", "quantize_sr_ref",
                    _q_div, _q_vmem, _probe_q),
     KernelContract("flash_attention", "flash_attention_ref",
                    _fa_div, _fa_vmem, _probe_flash),
     KernelContract("fused_adagrad", "fused_adagrad_ref",
                    None, _ag_vmem, _probe_ag),
+    KernelContract("fused_adagrad", "fused_adagrad_q8_ref",
+                   None, _ag_q8_vmem, _probe_ag_q8),
 )
 
 

@@ -13,9 +13,11 @@ Storage rules (all round-trips are BIT-exact):
     any downstream consumer that compared serialized forms.  Legacy
     checkpoints with fp32-stored bf16 still restore (value cast).
   * Custom pytree leaves registered without key paths (the workset
-    cache's ``QuantLeaf``/``CastLeaf``) flatten through
-    ``FlattenedIndexKey`` — their int8 codes and scales land in the file
-    unchanged.
+    cache's ``QuantLeaf``/``CastLeaf``/``Quant4Leaf``, the quantized
+    optimizer's ``QuantAccum``) flatten through ``FlattenedIndexKey`` —
+    their int8 codes, packed uint8 nibbles, and fp32 scales land in the
+    file unchanged (no fp32 round-trip; an int4 ring checkpoints at int4
+    size).
   * Python scalar leaves (host-side counters) are stored as 0-d arrays
     and restored to their reference's python type.
 

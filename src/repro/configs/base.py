@@ -217,7 +217,10 @@ class CELUConfig:
     # historical table — golden-pinned); "bfloat16" halves the footprint;
     # "int8" stores SR-quantized codes + one fp32 scale per instance row
     # (~4x smaller; unbiased through Algorithm-2's cosine — see
-    # tests/test_workset_cache.py tolerance sweeps).
+    # tests/test_workset_cache.py tolerance sweeps); "int4" nibble-packs
+    # two SR codes per byte (levels=7, same per-row scale — ~8x smaller,
+    # the at-rest floor that makes full LLM geometry fit; see
+    # docs/llm_memory.md).
     cache_dtype: str = "float32"
     # Route party-A local updates through the fused gather→dequant→weight
     # megakernel (kernels/fused_sample.py): the sampled ring rows are read

@@ -94,8 +94,9 @@ from ..configs.base import CELUConfig, validate_pipeline_depth
 from ..optim import Optimizer, apply_updates
 from .weighting import (instance_weights, pipeline_attenuation,
                         static_staleness, xi_to_cos)
-from .workset import (CastLeaf, QuantLeaf, decode_entry, workset_draw,
-                      workset_entry, workset_init, workset_insert,
+from .workset import (CastLeaf, Quant4Leaf, QuantLeaf, decode_entry,
+                      workset_draw, workset_entry, workset_init,
+                      workset_insert,
                       workset_sample)  # noqa: F401  (workset_sample re-exported: historical import site)
 
 
@@ -477,6 +478,10 @@ def _fused_ring_sample(slot, z_new, z_store, dz_store, cos_xi: float):
     ring, dequantize, row-cosine vs the ad-hoc z, threshold, scale the
     stale cotangent.  -> (weights (B,), fp32 weighted cotangent)."""
     from ..kernels import ops as kops
+    if isinstance(z_store, Quant4Leaf):
+        return kops.fused_gather_weight_q4(
+            slot, z_new.astype(jnp.float32), z_store.q, z_store.scale,
+            dz_store.q, dz_store.scale, cos_xi)
     if isinstance(z_store, QuantLeaf):
         return kops.fused_gather_weight_q8(
             slot, z_new.astype(jnp.float32), z_store.q, z_store.scale,
@@ -557,6 +562,11 @@ def _fused_ring_weights(slot, dz_new, dz_store, cos_xi: float):
     row (same reduction order, same blocks); the cotangent output rides
     along unused."""
     from ..kernels import ops as kops
+    if isinstance(dz_store, Quant4Leaf):
+        w, _ = kops.fused_gather_weight_q4(
+            slot, dz_new.astype(jnp.float32), dz_store.q, dz_store.scale,
+            dz_store.q, dz_store.scale, cos_xi)
+        return w
     if isinstance(dz_store, QuantLeaf):
         w, _ = kops.fused_gather_weight_q8(
             slot, dz_new.astype(jnp.float32), dz_store.q, dz_store.scale,

@@ -116,10 +116,14 @@ def init_pod_state(rng, mesh: Mesh, opt: Optimizer, *, n_fields: int,
     """``cache_dtype`` sets the at-rest precision of the party-stacked
     z/dz rings ("float32" — bit-identical to the historical pod state —
     or "bfloat16", halving the cache; the round casts on read/write).
-    The int8 storage codec is host-sim-engine only for now — the pod ring
-    keeps a plain dtype so it shards as one leaf over the mesh."""
+    The int8/int4 storage codecs are host-sim-engine only for now — the
+    pod ring keeps a plain dtype so it shards as one leaf over the mesh
+    (the quantized codecs carry a second scale leaf per ring and a
+    packed-byte layout that the collective permutes would have to learn;
+    core/workset.py + kernels/fused_sample.py own that path)."""
     if cache_dtype not in ("float32", "bfloat16"):
-        raise ValueError(f"pod cache_dtype must be float32|bfloat16, "
+        raise ValueError(f"pod cache_dtype must be float32|bfloat16 "
+                         f"(int8/int4 are host-engine codecs), "
                          f"got {cache_dtype!r}")
     params = stacked_wdl_init(rng, n_fields, vocab, embed_dim, z_dim, hidden)
     opt_state = opt.init(params)

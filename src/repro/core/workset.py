@@ -43,16 +43,24 @@ the cut-statistic subtrees (the ``z``/``dz`` entry keys, ``QUANT_KEYS``):
     because Algorithm-2's cosine is a row reduction — row-granular scales
     let the fused sample kernel gather + dequantize + weight in one VMEM
     pass without re-tiling.
+  * ``"int4"`` — int4 codes (levels = ±7), nibble-packed two per byte
+    (:class:`Quant4Leaf`; the PR-2 wire codec's packing applied at rest).
+    Same per-row fp32 scale, same SR quantizer at ``levels=7``; odd row
+    widths pad one zero code before packing (the pad nibble decodes to an
+    exact zero, so it contributes nothing to the cosine reductions).
+    ~7x smaller than fp32 — the LLM-geometry setting, where the cache is
+    a party's dominant training-state allocation.
 
 Cache memory math (per party, ``z`` + ``dz``, scales included):
 
     cache_bytes(fp32) = 2 * W * B * F * 4
     cache_bytes(int8) = 2 * W * B * (F + 4)        # codes + fp32 row scale
+    cache_bytes(int4) = 2 * W * B * (ceil(F/2) + 4)  # packed nibbles
 
-    geometry                          fp32        int8      ratio
-    paper  W=5 B=4096 F=256         41.9 MB     10.6 MB     3.94x
-    llm    W=5 B=256  S=64 d=128    83.9 MB     21.2 MB     3.94x
-    bench  W=5 B=256  F=32           1.3 MB      0.4 MB     3.56x
+    geometry                          fp32        int8     int4
+    paper  W=5 B=4096 F=256         41.9 MB     10.6 MB    5.4 MB
+    llm    W=5 B=256  S=64 d=128    83.9 MB     21.2 MB   10.6 MB
+    smollm W=5 B=8 S=1024 d=960    1573.0 MB   399.5 MB  196.9 MB
 
 ``insert`` and ``sample`` auto-detect the table's storage form — only
 ``workset_init`` takes ``cache_dtype``.  ``workset_sample`` returns
@@ -75,7 +83,7 @@ INT_MIN = -(2 ** 30)
 # cached verbatim.
 QUANT_KEYS = ("z", "dz")
 
-CACHE_DTYPES = ("float32", "bfloat16", "int8")
+CACHE_DTYPES = ("float32", "bfloat16", "int8", "int4")
 
 
 # --------------------------------------------------------------------------
@@ -112,6 +120,65 @@ class QuantLeaf:
         return x.reshape(self.shape).astype(self.dtype)
 
 
+def pack_nibbles(q):
+    """Signed int4 codes (..., Fp) in [-7, 7] (Fp even) -> packed uint8
+    (..., Fp // 2).  Same bias-and-or layout as the PR-2 wire codec
+    (``compression.StochasticQuantCodec(bits=4)``): byte j holds element
+    2j in the low nibble and 2j + 1 in the high nibble, each biased by
+    +8 so the zero code is the nibble value 8."""
+    b = (q + 8).astype(jnp.uint8)                  # [-7, 7] -> [1, 15]
+    return b[..., 0::2] | (b[..., 1::2] << 4)
+
+
+def unpack_nibbles(packed):
+    """Packed uint8 (..., P) -> signed int4 codes (..., 2 * P) in
+    [-8, 7] fp32-safe int8 (the inverse of :func:`pack_nibbles`)."""
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (-1,))
+
+
+def _pad_even(F: int) -> int:
+    return F + (F & 1)
+
+
+@jax.tree_util.register_pytree_node_class
+class Quant4Leaf:
+    """int4 nibble-packed at-rest storage of one cached statistic leaf.
+
+    ``q`` holds packed uint8 bytes — two signed int4 codes (levels ±7)
+    per byte — of the leaf flattened to (B, F) rows and F padded to even
+    (entry level (B, ceil(F/2)); table level (W, B, ceil(F/2))).
+    ``scale`` is one fp32 absmax scale per row ((B,) / (W, B)), exactly
+    like :class:`QuantLeaf`.  The pad nibble stores code 0 so it decodes
+    to an exact zero; :meth:`dequant` slices it away."""
+
+    __slots__ = ("q", "scale", "shape", "dtype")
+
+    def __init__(self, q, scale, shape, dtype):
+        self.q = q
+        self.scale = scale
+        self.shape = tuple(shape)
+        self.dtype = jnp.dtype(dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, str(self.dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    def dequant(self):
+        """Entry-level (q (B, ceil(F/2)), scale (B,)) -> the original
+        leaf."""
+        F = 1
+        for s in self.shape[1:]:
+            F *= int(s)
+        codes = unpack_nibbles(self.q)[:, :max(F, 1)]
+        x = codes.astype(jnp.float32) * self.scale[:, None]
+        return x.reshape(self.shape).astype(self.dtype)
+
+
 @jax.tree_util.register_pytree_node_class
 class CastLeaf:
     """bf16-at-rest storage of one cached statistic leaf (a plain dtype
@@ -135,7 +202,7 @@ class CastLeaf:
 
 
 def _is_store(x) -> bool:
-    return isinstance(x, (QuantLeaf, CastLeaf))
+    return isinstance(x, (QuantLeaf, Quant4Leaf, CastLeaf))
 
 
 def _row_shape(a) -> Tuple[int, int]:
@@ -147,18 +214,20 @@ def _row_shape(a) -> Tuple[int, int]:
     return B, max(F, 1)
 
 
-def _quantize_rows(rng, x2d):
+def _quantize_rows(rng, x2d, levels: int = 127):
     """(B, F) fp32 -> (codes int8 (B, F), fp32 row scales (B,)); the fused
     Pallas SR quantizer when the grid can tile B, its bit-identical jnp
-    oracle otherwise."""
+    oracle otherwise.  ``levels`` is the max code magnitude (127 = int8 at
+    rest, 7 = int4 at rest — the codes come back int8 either way; the int4
+    caller nibble-packs them)."""
     from ..kernels.quantize import BLOCK_T
     B = x2d.shape[0]
     u = jax.random.uniform(rng, x2d.shape, jnp.float32)
     if B % min(BLOCK_T, B) == 0:
         from ..kernels import ops as kops
-        return kops.quantize_stochastic(x2d, u, 127)
+        return kops.quantize_stochastic(x2d, u, levels)
     from ..kernels.ref import quantize_sr_ref
-    return quantize_sr_ref(x2d, u, 127)
+    return quantize_sr_ref(x2d, u, levels)
 
 
 def _empty_store(W: int, a, cache_dtype: str):
@@ -168,6 +237,13 @@ def _empty_store(W: int, a, cache_dtype: str):
     if cache_dtype == "bfloat16":
         return CastLeaf(jnp.zeros((W,) + a.shape, jnp.bfloat16), a.dtype)
     B, F = _row_shape(a)
+    if cache_dtype == "int4":
+        # zero scales make the empty table decode to exact zeros, so the
+        # packed byte value is immaterial; 0x88 (code 0 in both nibbles)
+        # keeps unpack(empty) == 0 too, matching the int8 empty table.
+        return Quant4Leaf(jnp.full((W, B, _pad_even(F) // 2), 0x88,
+                                   jnp.uint8),
+                          jnp.zeros((W, B), jnp.float32), a.shape, a.dtype)
     return QuantLeaf(jnp.zeros((W, B, F), jnp.int8),
                      jnp.zeros((W, B), jnp.float32), a.shape, a.dtype)
 
@@ -176,6 +252,13 @@ def _encode_leaf(store, x, rng):
     """One entry leaf -> the storage form matching the table's leaf (the
     table's shape/dtype metadata wins, like the historical ``astype`` on
     insert coerced the entry to the buffer dtype)."""
+    if isinstance(store, Quant4Leaf):
+        B, F = _row_shape(x)
+        q, scale = _quantize_rows(rng, x.reshape(B, F).astype(jnp.float32),
+                                  levels=7)
+        if F & 1:                       # pad one zero code before packing
+            q = jnp.pad(q, ((0, 0), (0, 1)))
+        return Quant4Leaf(pack_nibbles(q), scale, store.shape, store.dtype)
     if isinstance(store, QuantLeaf):
         B, F = _row_shape(x)
         q, scale = _quantize_rows(rng, x.reshape(B, F).astype(jnp.float32))
@@ -186,7 +269,7 @@ def _encode_leaf(store, x, rng):
 
 
 def _decode_leaf(leaf):
-    if isinstance(leaf, QuantLeaf):
+    if isinstance(leaf, (QuantLeaf, Quant4Leaf)):
         return leaf.dequant()
     if isinstance(leaf, CastLeaf):
         return leaf.decode()
@@ -234,13 +317,19 @@ def sample_hbm_bytes(entry_example: Dict[str, Any],
                          f"got {cache_dtype!r}")
     if party not in ("a", "b"):
         raise ValueError(f"party must be 'a' or 'b', got {party!r}")
-    itemsize = {"float32": 4, "bfloat16": 2, "int8": 1}[cache_dtype]
     z_leaves = jax.tree_util.tree_leaves(entry_example.get("z", {}))
     dz_leaves = jax.tree_util.tree_leaves(entry_example.get("dz", {}))
+
+    def _at_rest(B: int, F: int) -> int:
+        if cache_dtype == "int4":            # packed nibbles + row scale
+            return B * (_pad_even(F) // 2) + B * 4
+        itemsize = {"float32": 4, "bfloat16": 2, "int8": 1}[cache_dtype]
+        return B * F * itemsize + (B * 4 if cache_dtype == "int8" else 0)
+
     total = 0
     for a in z_leaves + dz_leaves:           # the ring reads, at rest
         B, F = _row_shape(a)
-        total += B * F * itemsize + (B * 4 if cache_dtype == "int8" else 0)
+        total += _at_rest(B, F)
     if party == "a":
         for a in z_leaves:                   # per ⟨z, dz⟩ pair:
             B, F = _row_shape(a)
@@ -316,7 +405,8 @@ def workset_insert(ws: Dict[str, Any], entry: Dict[str, Any],
     stores, treedef = jax.tree_util.tree_flatten(ws["buf"],
                                                  is_leaf=_is_store)
     values = treedef.flatten_up_to(entry)
-    if rng is None and any(isinstance(s, QuantLeaf) for s in stores):
+    if rng is None and any(isinstance(s, (QuantLeaf, Quant4Leaf))
+                           for s in stores):
         rng = jax.random.fold_in(jax.random.PRNGKey(0xCE1), t)
     encoded = treedef.unflatten([
         _encode_leaf(s, v, None if rng is None

@@ -73,6 +73,30 @@ def _kernel_q8(slot_ref, a_ref, zq_ref, zs_ref, dzq_ref, dzs_ref,
     out_ref[...] = cot
 
 
+def _unpack4(packed):
+    """(BLOCK_B, F/2) packed uint8 -> (BLOCK_B, F) fp32 int4 codes, in
+    VMEM (byte j: element 2j low nibble, 2j+1 high — the wire codec's
+    layout; see ``core.workset.unpack_nibbles``)."""
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    both = jnp.stack([lo, hi], axis=-1)          # (bb, F/2, 2)
+    return both.reshape(packed.shape[0], -1).astype(jnp.float32)
+
+
+def _kernel_q4(slot_ref, a_ref, zq_ref, zs_ref, dzq_ref, dzs_ref,
+               thresh_ref, w_ref, out_ref):
+    """int4 ring block: unpack the nibbles in VMEM, dequant against the
+    per-row scale, then the shared weight-and-scale body.  No unpacked
+    entry ever exists in HBM — the packed bytes are the only ring read."""
+    del slot_ref
+    a = a_ref[...].astype(jnp.float32)
+    z = _unpack4(zq_ref[0]) * zs_ref[0][:, None]
+    dz = _unpack4(dzq_ref[0]) * dzs_ref[0][:, None]
+    w, cot = _weight_and_scale(a, z, dz, thresh_ref[0])
+    w_ref[...] = w
+    out_ref[...] = cot
+
+
 def _call(kernel, slot, operands, ring_specs, B, F, bb, interpret):
     """Common pallas_call plumbing: scalar-prefetch slot + (bb, F) ad-hoc
     blocks + per-ring slot-indexed blocks + (1,) threshold."""
@@ -132,4 +156,28 @@ def fused_sample_q8_2d(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi, *,
         pl.BlockSpec((1, bb), lambda i, s: (s[0], i)),
     ]
     return _call(_kernel_q8, slot, (ad_hoc, zq, zscale, dzq, dzscale,
+                                    thresh), ring, B, F, bb, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_sample_q4_2d(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi, *,
+                       interpret: bool = True):
+    """int4 nibble-packed ring.  zq / dzq: (W, B, F // 2) packed uint8
+    (F even — the storage codec pads odd rows; the caller pads ``ad_hoc``
+    to match), zscale / dzscale: (W, B) fp32 per-row scales.  Same
+    contract as :func:`fused_sample_2d`; unpack + dequant happen in VMEM
+    so the packed bytes are the only HBM ring traffic."""
+    W, B, P = zq.shape
+    F = 2 * P
+    assert ad_hoc.shape == (B, F), (ad_hoc.shape, B, F)
+    bb = min(BLOCK_B, B)
+    assert B % bb == 0, (B, bb)
+    thresh = jnp.asarray([cos_xi], jnp.float32)
+    ring = [
+        pl.BlockSpec((1, bb, P), lambda i, s: (s[0], i, 0)),
+        pl.BlockSpec((1, bb), lambda i, s: (s[0], i)),
+        pl.BlockSpec((1, bb, P), lambda i, s: (s[0], i, 0)),
+        pl.BlockSpec((1, bb), lambda i, s: (s[0], i)),
+    ]
+    return _call(_kernel_q4, slot, (ad_hoc, zq, zscale, dzq, dzscale,
                                     thresh), ring, B, F, bb, interpret)

@@ -72,6 +72,26 @@ def fused_gather_weight_q8(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi):
     return w, cot.reshape(ad_hoc.shape)
 
 
+def fused_gather_weight_q4(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi):
+    """Fused workset sample over the int4 nibble-packed ring (gather →
+    unpack → dequant → cosine → threshold → cotangent scale, one VMEM
+    pass — the packed bytes are the only HBM ring read).  zq/dzq:
+    (W, B, ceil(F/2)) packed uint8, zscale/dzscale: (W, B) fp32 row
+    scales.  Odd F: the storage codec's pad nibble decodes to zero, so
+    the wrapper zero-pads ``ad_hoc`` to the packed width and slices the
+    pad column off the cotangent."""
+    B = ad_hoc.shape[0]
+    a2d = ad_hoc.reshape(B, -1).astype(jnp.float32)
+    F = a2d.shape[1]
+    Fp = 2 * zq.shape[2]
+    if Fp != F:                      # odd row width: one pad column
+        a2d = jnp.pad(a2d, ((0, 0), (0, Fp - F)))
+    w, cot = _fs.fused_sample_q4_2d(_slot1(slot), a2d, zq, zscale,
+                                    dzq, dzscale, jnp.float32(cos_xi),
+                                    interpret=INTERPRET)
+    return w, cot[:, :F].reshape(ad_hoc.shape)
+
+
 def quantize_stochastic(x, u, levels):
     """Fused per-tile absmax-scale stochastic-rounding quantizer.
 
@@ -90,6 +110,16 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
 def fused_adagrad(grad, accum, lr, eps):
     """-> (update fp32, new_accum fp32)."""
     return _ag.fused_adagrad(grad, accum, lr, eps, interpret=INTERPRET)
+
+
+def fused_adagrad_q8(grad2d, accum_q, accum_scale, u, lr, eps):
+    """int8-at-rest AdaGrad step (dequant → accumulate → scale → requant
+    in one VMEM pass; the fp32 accumulator never exists in HBM).
+    grad2d/u: (R, C) fp32 in the optimizer's padded tiling, accum_q:
+    (R, C) int8 codes, accum_scale: (R, 1) fp32 master scales.
+    -> (update fp32, new codes int8, new scales)."""
+    return _ag.fused_adagrad_q8(grad2d, accum_q, accum_scale, u, lr, eps,
+                                interpret=INTERPRET)
 
 
 def flash_attention_trainable(q, k, v, *, causal: bool = True,

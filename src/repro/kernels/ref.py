@@ -58,6 +58,28 @@ def fused_sample_q8_ref(slot, ad_hoc, zq, zscale, dzq, dzscale,
     return w, (dz * w[:, None]).reshape(ad_hoc.shape)
 
 
+def fused_sample_q4_ref(slot, ad_hoc, zq, zscale, dzq, dzscale,
+                        cos_xi: float):
+    """int4 nibble-packed ring oracle: unpack the sampled rows' packed
+    bytes (two signed codes per byte, wire-codec layout), dequantize by
+    the per-row scale, then the fp32 composition of
+    :func:`fused_sample_ref`.  The pad nibble (odd row widths) decodes to
+    an exact zero, so keeping it in the reductions is harmless; the
+    cotangent is sliced back to ad_hoc's width."""
+    from ..core.workset import unpack_nibbles
+    B = ad_hoc.shape[0]
+    a2d = ad_hoc.reshape(B, -1).astype(jnp.float32)
+    F = a2d.shape[1]
+    Fp = 2 * zq.shape[2]
+    if Fp != F:
+        a2d = jnp.pad(a2d, ((0, 0), (0, Fp - F)))
+    z = unpack_nibbles(zq[slot]).astype(jnp.float32) * zscale[slot][:, None]
+    dz = unpack_nibbles(dzq[slot]).astype(jnp.float32) \
+        * dzscale[slot][:, None]
+    w = cosine_weight_ref(a2d, z, cos_xi)
+    return w, (dz * w[:, None])[:, :F].reshape(ad_hoc.shape)
+
+
 def quantize_sr_ref(x, u, levels):
     """Per-tile absmax scale + stochastic rounding to signed integer codes
     (the compressed-wire encode hot path).
@@ -97,3 +119,24 @@ def fused_adagrad_ref(grad, accum, lr: float, eps: float):
     g = grad.astype(jnp.float32)
     a_new = accum + g * g
     return -lr * g / (jnp.sqrt(a_new) + eps), a_new
+
+
+def fused_adagrad_q8_ref(grad2d, accum_q, accum_scale, u, lr: float,
+                         eps: float):
+    """int8-at-rest AdaGrad oracle.  Codes live in SQRT-space (stored
+    accumulator value = (code * scale)², the resolution concentrated
+    where AdaGrad's 1/sqrt step needs it): dequantize r = codes * scale,
+    accumulate r' = sqrt(r² + g²), emit the update, re-derive the row
+    scale from the new row max and stochastically requantize
+    (``floor(r'/s + u)``, unbiased in r'; codes clipped to [0, 127] —
+    the accumulator is non-negative).  grad2d/u: (R, C) fp32; accum_q:
+    (R, C) int8; accum_scale: (R, 1) fp32.
+    -> (update, new codes, new scales)."""
+    g = grad2d.astype(jnp.float32)
+    r = accum_q.astype(jnp.float32) * accum_scale
+    r_new = jnp.sqrt(r * r + g * g)
+    upd = -lr * g / (r_new + eps)
+    s_new = jnp.maximum(jnp.max(r_new, axis=1, keepdims=True), EPS) / 127.0
+    codes = jnp.clip(jnp.floor(r_new / s_new + u.astype(jnp.float32)),
+                     0.0, 127.0).astype(jnp.int8)
+    return upd, codes, s_new

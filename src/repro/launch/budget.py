@@ -1,0 +1,107 @@
+"""Exact per-party HBM budgets at FULL LLM geometry — without ever
+materializing a weight.
+
+Everything here runs under ``jax.eval_shape``: the 3B-param MoE config
+is "instantiated" as a tree of ShapeDtypeStructs, so the accounting is
+exact (it is the same init/``workset_init``/``opt.init`` code the
+training run lowers) yet costs a trace, not tens of GB of host RAM.
+Three components per party, the three walls the quantized-at-rest
+storage codecs attack:
+
+  * **params** — the party's tower slice (``models.vfl.init_all``);
+  * **optimizer state** — the AdaGrad accumulator
+    (``optim.quantized.opt_state_nbytes``): fp32 mirrors the params,
+    bf16 halves it, int8 stores sqrt-space codes + per-row scales;
+  * **workset cache** — the W-deep ring of cut statistics ⟨z, dz⟩ that
+    CELU's local updates replay (``core.workset``): at (B, S, d) LLM
+    shapes this dwarfs the model, and the fp32→int4 at-rest ladder is
+    what brings a real-geometry party back under one device's HBM (the
+    numbers land in ``results/BENCH_llm.json`` and docs/llm_memory.md).
+
+Used by ``benchmarks/llm.py`` and ``examples/llm_vfl_training.py`` so
+the benchmark table and the example's printed budget cannot drift."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.workset import QUANT_KEYS, workset_init
+from ..models import vfl
+from ..optim import make_optimizer
+from ..optim.quantized import opt_state_nbytes
+
+
+def tree_nbytes(shapes) -> int:
+    """Total device bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(shapes))
+
+
+def _param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda: vfl.init_all(jax.random.PRNGKey(0), cfg))
+
+
+def _z_struct(cfg: ArchConfig, params_a, batch_size: int, seq_len: int):
+    """Abstract cut tensor Z_A: eval_shape through the REAL party-A
+    forward so the budget tracks the model code, not a hand-derived
+    (B, S, d) guess."""
+    batch_a = {"tokens_a": jax.ShapeDtypeStruct((batch_size, seq_len),
+                                                jnp.int32)}
+    return jax.eval_shape(
+        lambda p, b: vfl.forward_a(p, cfg, b, train=True), params_a,
+        batch_a)
+
+
+def _cache_nbytes(z, W: int, cache_dtype: str) -> int:
+    """Cut-statistics bytes of ONE W-deep workset ring holding ⟨z, dz⟩
+    at ``cache_dtype`` — the exact ``workset_init`` layout (codes +
+    scales + packing padding), via eval_shape."""
+    table = jax.eval_shape(
+        lambda zz: workset_init(W, {"z": zz, "dz": zz},
+                                cache_dtype=cache_dtype), z)
+    return tree_nbytes({k: table["buf"][k] for k in QUANT_KEYS})
+
+
+def party_hbm_budget(cfg: ArchConfig, *, batch_size: int, seq_len: int,
+                     W: int = 5, cache_dtype: str = "float32",
+                     opt_state_dtype: str = "float32",
+                     lr: float = 0.01) -> Dict[str, Any]:
+    """-> exact per-party HBM bytes at full geometry (flat dict of int
+    counters; every key ends in ``_bytes`` so the benchmark-regression
+    gate treats them as deterministic)."""
+    params = _param_shapes(cfg)
+    opt = make_optimizer("adagrad", lr, state_dtype=opt_state_dtype)
+    z = _z_struct(cfg, params["a"], batch_size, seq_len)
+    cache_b = _cache_nbytes(z, W, cache_dtype)
+    row = {
+        "params_bytes_a": tree_nbytes(params["a"]),
+        "params_bytes_b": tree_nbytes(params["b"]),
+        "opt_state_bytes_a": opt_state_nbytes(opt, params["a"]),
+        "opt_state_bytes_b": opt_state_nbytes(opt, params["b"]),
+        # both parties keep one W-deep ring over the same cut tensor
+        # (party B's table holds the K=1 z/dz lists — identical bytes)
+        "cache_bytes_a": cache_b,
+        "cache_bytes_b": cache_b,
+    }
+    for p in ("a", "b"):
+        row[f"hbm_total_bytes_{p}"] = (row[f"params_bytes_{p}"]
+                                       + row[f"opt_state_bytes_{p}"]
+                                       + row[f"cache_bytes_{p}"])
+    return row
+
+
+def format_budget(name: str, row: Dict[str, Any]) -> str:
+    """Human-readable per-party budget block (the example prints this)."""
+    gb = 1024 ** 3
+    lines = [f"[hbm] {name}: per-party device-memory budget"]
+    for p in ("a", "b"):
+        lines.append(
+            f"[hbm]   party {p}: params "
+            f"{row[f'params_bytes_{p}'] / gb:8.3f} GiB + opt state "
+            f"{row[f'opt_state_bytes_{p}'] / gb:8.3f} GiB + workset cache "
+            f"{row[f'cache_bytes_{p}'] / gb:8.3f} GiB = "
+            f"{row[f'hbm_total_bytes_{p}'] / gb:8.3f} GiB")
+    return "\n".join(lines)

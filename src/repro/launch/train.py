@@ -83,15 +83,32 @@ def _ckpt_extra_ref(n_pending: int, chaos: bool):
 
 
 # --------------------------------------------------------------------------
-def llm_task(cfg: ArchConfig) -> proto.VFLTask:
-    """VFLTask over the LLM backbone split (text archs)."""
+def llm_task(cfg: ArchConfig, remat: bool = True) -> proto.VFLTask:
+    """VFLTask over the LLM backbone split (text archs).  ``remat``
+    toggles activation checkpointing of the tower scans (models.backbone
+    Ctx.remat)."""
     def forward_a(pa, batch_a):
-        return vfl.forward_a(pa, cfg, batch_a, train=True)
+        return vfl.forward_a(pa, cfg, batch_a, train=True, remat=remat)
 
     def loss_b(pb, z_a, batch_b):
-        return vfl.per_instance_loss(pb, cfg, z_a, batch_b, train=True)
+        return vfl.per_instance_loss(pb, cfg, z_a, batch_b, train=True,
+                                     remat=remat)
 
     return proto.VFLTask(forward_a, loss_b)
+
+
+def make_opt(args):
+    """Optimizer from --optimizer/--lr/--opt-state-dtype; the state dtype
+    only routes for adagrad (the paper's optimizer — sgd/adam/sm3 keep
+    their native state)."""
+    kw = {}
+    if args.opt_state_dtype != "float32":
+        if args.optimizer != "adagrad":
+            raise SystemExit("--opt-state-dtype requires --optimizer "
+                             "adagrad (sm3 is already factored; sgd/adam "
+                             "keep fp32 state)")
+        kw["state_dtype"] = args.opt_state_dtype
+    return make_optimizer(args.optimizer, args.lr, **kw)
 
 
 def train_dlrm(args) -> Dict[str, Any]:
@@ -115,7 +132,7 @@ def train_dlrm(args) -> Dict[str, Any]:
                       cache_fused=not args.no_cache_fusion)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = init_fn(jax.random.PRNGKey(args.seed), cfg)
-    opt = make_optimizer(args.optimizer, args.lr)
+    opt = make_opt(args)
 
     it = synth.aligned_batches(data["train"], args.batch_size,
                                seed=args.seed)
@@ -267,7 +284,7 @@ def train_llm(args) -> Dict[str, Any]:
     B, S = args.batch_size, args.seq_len
     data = synth.make_token_stream(max(B * 8, 64), S, cfg.vocab_size,
                                    cfg.aux_vocab_size, seed=args.seed)
-    task = llm_task(cfg)
+    task = llm_task(cfg, remat=args.remat)
     base = CELUConfig(R=args.R, W=args.W, xi_degrees=args.xi,
                       weighting=not args.no_weighting,
                       compression=args.compression,
@@ -277,7 +294,7 @@ def train_llm(args) -> Dict[str, Any]:
                       cache_fused=not args.no_cache_fusion)
     celu_cfg, n_local = engine.preset_config(args.protocol, base)
     params = vfl.init_all(jax.random.PRNGKey(args.seed), cfg)
-    opt = make_optimizer(args.optimizer, args.lr)
+    opt = make_opt(args)
 
     it = synth.token_batches(data, B, seed=args.seed)
     _, ba0, bb0 = next(it)
@@ -346,10 +363,11 @@ def main(argv=None):
                          "fresh updates on the depth-D (D >= 2) pipeline; "
                          "0 disables (depths 0/1 never damp)")
     ap.add_argument("--cache-dtype", default="float32",
-                    choices=("float32", "bfloat16", "int8"),
+                    choices=("float32", "bfloat16", "int8", "int4"),
                     help="at-rest precision of the workset cache (int8 = "
                          "SR-quantized codes + fp32 per-row scales, ~4x "
-                         "smaller; core/workset.py storage codec)")
+                         "smaller; int4 nibble-packs two codes per byte, "
+                         "~8x smaller; core/workset.py storage codec)")
     ap.add_argument("--no-cache-fusion", action="store_true",
                     help="disable the fused gather→dequant→weight sample "
                          "megakernel (pin the materializing reference "
@@ -386,7 +404,19 @@ def main(argv=None):
     ap.add_argument("--resume", default="", metavar="PATH",
                     help="resume from a --checkpoint file (bit-exact: "
                          "same flags, same seed)")
-    ap.add_argument("--optimizer", default="adagrad")
+    ap.add_argument("--optimizer", default="adagrad",
+                    choices=("adagrad", "sgd", "adam", "sm3"))
+    ap.add_argument("--opt-state-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"),
+                    help="at-rest precision of the AdaGrad accumulator "
+                         "(int8 = sqrt-space codes + fp32 per-row master "
+                         "scales through the fused requant kernel, ~4x "
+                         "smaller; optim/quantized.py)")
+    ap.add_argument("--remat", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="activation-checkpoint the LLM tower scans "
+                         "(recompute in backward; --no-remat stores all "
+                         "activations)")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true")

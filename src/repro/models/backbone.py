@@ -117,6 +117,12 @@ class Ctx:
     causal: bool = True
     pos: Any = None                # scalar int32, decode
     train: bool = False
+    # Activation checkpointing of the per-stage scan body (train only):
+    # recompute block activations in the backward pass instead of storing
+    # S*d per layer — the standard trade that makes full LLM geometry fit.
+    # False stores everything (faster backward, O(layers) more activation
+    # HBM); surfaced as --remat/--no-remat in launch.train.
+    remat: bool = True
 
 
 def _ffn(params, x, cfg, btype):
@@ -291,7 +297,7 @@ def tower_apply(params, x, cfg: ArchConfig, stages, ctx: Ctx):
                 h, ai = block_apply_full(p_layer[f"b{i}"], h, bt, ctx)
                 a = a + ai
             return (L.shard_batch_dim(h), a), None
-        if ctx.train:
+        if ctx.train and ctx.remat:
             body = jax.checkpoint(body)
         (x, aux), _ = jax.lax.scan(body, (x, aux), sp)
     return x, aux

@@ -89,7 +89,7 @@ def init_all(rng, cfg: ArchConfig):
 # Party A forward
 # --------------------------------------------------------------------------
 def forward_a(params_a, cfg: ArchConfig, batch: Dict[str, Any],
-              train: bool = False):
+              train: bool = False, remat: bool = True):
     """-> Z_A.  text: (B,S,d); vlm: (B,P,d); audio: (B,S_a,d)."""
     if cfg.family == "vlm":
         h = jax.nn.silu(jnp.einsum(
@@ -101,13 +101,14 @@ def forward_a(params_a, cfg: ArchConfig, batch: Dict[str, Any],
                        params_a["proj"])
         S = x.shape[1]
         ctx = Ctx(cfg, positions=jnp.arange(S, dtype=jnp.int32),
-                  causal=False, train=train, window=cfg.sliding_window)
+                  causal=False, train=train, remat=remat,
+                  window=cfg.sliding_window)
         x, _ = tower_apply(params_a["tower"], x, cfg, stages_a(cfg), ctx)
         return L.rmsnorm(params_a["ln"], x, cfg.norm_eps)
     x = params_a["embed"][batch["tokens_a"]]
     S = x.shape[1]
     ctx = Ctx(cfg, positions=jnp.arange(S, dtype=jnp.int32), train=train,
-              window=cfg.sliding_window)
+              remat=remat, window=cfg.sliding_window)
     x, _ = tower_apply(params_a["tower"], x, cfg, stages_a(cfg), ctx)
     return x
 
@@ -127,14 +128,14 @@ def _logits(h, params_b, cfg: ArchConfig):
 
 
 def forward_b(params_b, cfg: ArchConfig, z_a, batch: Dict[str, Any],
-              train: bool = False):
+              train: bool = False, remat: bool = True):
     """-> (logits, aux).  z_a enters via the fusion declared by the split."""
     x = params_b["embed"][batch["tokens"]]
     S = x.shape[1]
     pos = jnp.arange(S, dtype=jnp.int32)
     fusion = cfg.vfl_split.fusion
     mem = z_a if fusion == "cross_attn" else None
-    ctx = Ctx(cfg, positions=pos, memory=mem, train=train,
+    ctx = Ctx(cfg, positions=pos, memory=mem, train=train, remat=remat,
               window=cfg.sliding_window)
     x, aux1 = tower_apply(params_b["bottom"], x, cfg, stages_b(cfg), ctx)
     if fusion == "add":
@@ -144,9 +145,10 @@ def forward_b(params_b, cfg: ArchConfig, z_a, batch: Dict[str, Any],
 
 
 def per_instance_loss(params_b, cfg: ArchConfig, z_a, batch,
-                      train: bool = True):
+                      train: bool = True, remat: bool = True):
     """Cross-entropy per instance (B,) + aux scalar — Party B's objective."""
-    logits, aux = forward_b(params_b, cfg, z_a, batch, train=train)
+    logits, aux = forward_b(params_b, cfg, z_a, batch, train=train,
+                            remat=remat)
     labels = batch["labels"]
     # Sharding-friendly cross-entropy: logsumexp + one-hot-reduction both
     # lower to vocab-dim-local reductions + psum when the vocab is sharded

@@ -12,6 +12,12 @@ standard mixed-precision discipline.  The paper trains with AdaGrad
 ``adagrad(..., use_pallas=True)`` routes the element-wise accumulate+scale
 through the fused Pallas kernel (kernels/fused_adagrad.py) — one VMEM pass
 over (grad, accum, param) instead of three HBM round-trips.
+
+``adagrad(..., state_dtype=...)`` selects the AT-REST accumulator storage:
+"float32" (default, bit-identical to before), "bfloat16", or "int8"
+(8-bit-optimizer style codes + per-row fp32 master scale, fused
+dequant→accumulate→scale→requant kernel).  ``make_optimizer("sm3", ...)``
+is the factored O(r + c) accumulator.  See ``optim.quantized``.
 """
 from __future__ import annotations
 
@@ -31,8 +37,20 @@ def _zeros_like_f32(params):
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
+OPT_STATE_DTYPES = ("float32", "bfloat16", "int8")
+
+
 def adagrad(lr: float, eps: float = 1e-10, *,
-            use_pallas: bool = False) -> Optimizer:
+            use_pallas: bool = False,
+            state_dtype: str = "float32") -> Optimizer:
+    if state_dtype not in OPT_STATE_DTYPES:
+        raise ValueError(f"state_dtype must be one of {OPT_STATE_DTYPES}, "
+                         f"got {state_dtype!r}")
+    if state_dtype != "float32":
+        from .quantized import adagrad_quantized
+        return adagrad_quantized(lr, eps, state_dtype=state_dtype,
+                                 use_pallas=use_pallas)
+
     def init(params):
         return {"accum": _zeros_like_f32(params)}
 
@@ -114,4 +132,6 @@ def apply_updates(params, updates):
 
 
 def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
-    return {"adagrad": adagrad, "sgd": sgd, "adam": adam}[name](lr, **kw)
+    from .quantized import sm3
+    return {"adagrad": adagrad, "sgd": sgd, "adam": adam,
+            "sm3": sm3}[name](lr, **kw)

@@ -159,6 +159,49 @@ def tree_pspecs(tree, mesh: Mesh, *, data_axes=("data",)):
         lambda leaf: batch_pspec(leaf.shape, mesh, data_axes=data_axes), tree)
 
 
+def workset_pspecs(table, mesh: Mesh, *, data_axes=("data",)):
+    """Ring-buffer tables (``core.workset``): every buf leaf carries a
+    leading W slot axis — shard the per-instance batch dim (dim 1) over
+    data, never the ring axis (a draw reads ONE slot; sharding W would
+    turn every gather into a cross-device fetch).  This covers the
+    quantized leaves transparently: ``QuantLeaf``/``Quant4Leaf`` codes
+    (W, B, F or packed nibbles) and their (W, B) scales shard B the
+    same way, so an int4 ring shards identically to the fp32 ring it
+    replaces.  Clock vectors (W,) and scalars replicate."""
+    dsize = _axis_size(mesh, tuple(data_axes))
+    ax = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def spec(leaf) -> P:
+        nd = leaf.ndim
+        if nd >= 2 and leaf.shape[1] % dsize == 0 and leaf.shape[1] >= dsize:
+            return P(*((None, ax) + (None,) * (nd - 2)))
+        return P()
+
+    return jax.tree_util.tree_map(spec, table)
+
+
+def opt_state_pspecs(opt_state, mesh: Mesh, *, data_axes=("data",)):
+    """ZeRO-1-style specs for optimizer state, covering the quantized
+    layouts (``optim.quantized``): a ``QuantAccum``'s int8 codes (R, C)
+    and (R, 1) master scales shard the padded row dim over data (R is a
+    multiple of the fused kernel's ROWS tiling, so it divides the usual
+    data-axis sizes and every shard keeps whole requant rows — the
+    row-max scale never crosses a device); fp32/bf16 accumulators shard
+    their leading dim when divisible (the rule dryrun's ZeRO-1 path
+    derives from ``params_pspecs``); SM3's factored row/col vectors,
+    step counters, and other 1-D/scalar state replicate."""
+    dsize = _axis_size(mesh, tuple(data_axes))
+    ax = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def spec(leaf) -> P:
+        nd = leaf.ndim
+        if nd >= 2 and leaf.shape[0] % dsize == 0 and leaf.shape[0] >= dsize:
+            return P(*((ax,) + (None,) * (nd - 1)))
+        return P()
+
+    return jax.tree_util.tree_map(spec, opt_state)
+
+
 def _cache_spec(path, leaf, mesh: Mesh, data_axes, model_axis: str) -> P:
     """KV/state cache leaves: stacked (L, B, cap, Kv, hd) etc.  Shard batch
     over data if divisible; shard Kv/heads over model if divisible; for

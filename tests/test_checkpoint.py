@@ -63,7 +63,8 @@ def test_python_scalar_leaves_roundtrip(tmp_path):
 # --------------------------------------------------------------------------
 # Full scheduler state
 # --------------------------------------------------------------------------
-def _build(depth, *, cache_dtype="int8", seed=0):
+def _build(depth, *, cache_dtype="int8", opt_state_dtype="float32",
+           seed=0):
     spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
                        n_train=2048, n_test=512)
     data = make_tabular(spec, seed=0)
@@ -73,7 +74,7 @@ def _build(depth, *, cache_dtype="int8", seed=0):
     base = CELUConfig(R=3, W=3, xi_degrees=60.0, cache_dtype=cache_dtype)
     ccfg, nloc = engine.preset_config("celu", base)
     params = init_fn(jax.random.PRNGKey(seed), cfg)
-    opt = make_optimizer("adagrad", 0.05)
+    opt = make_optimizer("adagrad", 0.05, state_dtype=opt_state_dtype)
     asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
     etask = engine.lift_two_party(task)
     tp = engine.make_transport(ccfg, "topk_int8")
@@ -120,6 +121,74 @@ def test_round_state_mid_pipeline_resume_bit_exact(tmp_path):
     for _ in range(4 - n):   # position it1 at batch 4 (step 5's batch)
         next(it1)
     rs1, l_got = _steps(pe1, rs1, it1, asj, 1)       # resumed step 5
+    np.testing.assert_array_equal(np.asarray(l_ref, np.float32),
+                                  np.asarray(l_got, np.float32))
+    for a, b in zip(jax.tree_util.tree_leaves(rs0.as_state()),
+                    jax.tree_util.tree_leaves(rs1.as_state())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantized_leaves_stored_natively(tmp_path):
+    """Quant4Leaf rings and QuantAccum optimizer state land in the file
+    as their packed uint8 / int8 codes + fp32 scales — no fp32 detour —
+    and restore bit-exactly."""
+    from repro.core.workset import Quant4Leaf
+    from repro.optim.quantized import QuantAccum
+    q4 = Quant4Leaf(
+        jnp.asarray(np.random.default_rng(0).integers(0, 256, (3, 8, 4)),
+                    jnp.uint8),
+        jnp.asarray(np.random.default_rng(1).uniform(size=(3, 8)),
+                    jnp.float32), (8, 8), jnp.float32)
+    acc = QuantAccum(
+        jnp.asarray(np.random.default_rng(2).integers(0, 128, (8, 16)),
+                    jnp.int8),
+        jnp.asarray(np.random.default_rng(3).uniform(size=(8, 1)),
+                    jnp.float32), (128,))
+    path = str(tmp_path / "quant.npz")
+    ckpt.save(path, {"ring": q4, "acc": acc})
+    with np.load(path) as data:
+        dtypes = sorted(str(data[k].dtype) for k in data.files)
+        assert dtypes == ["float32", "float32", "int8", "uint8"]
+    ref = {"ring": Quant4Leaf(jnp.zeros((3, 8, 4), jnp.uint8),
+                              jnp.zeros((3, 8), jnp.float32),
+                              (8, 8), jnp.float32),
+           "acc": QuantAccum(jnp.zeros((8, 16), jnp.int8),
+                             jnp.zeros((8, 1), jnp.float32), (128,))}
+    got = ckpt.restore(path, ref)
+    np.testing.assert_array_equal(np.asarray(got["ring"].q),
+                                  np.asarray(q4.q))
+    np.testing.assert_array_equal(np.asarray(got["ring"].scale),
+                                  np.asarray(q4.scale))
+    np.testing.assert_array_equal(np.asarray(got["acc"].q),
+                                  np.asarray(acc.q))
+    np.testing.assert_array_equal(np.asarray(got["acc"].scale),
+                                  np.asarray(acc.scale))
+
+
+def test_round_state_resume_int4_cache_quantized_opt(tmp_path):
+    """The PR-8 surfaces end to end: depth-2 pipeline over an int4
+    nibble-packed workset ring with int8-at-rest AdaGrad state — saved
+    mid-run, restored into a fresh engine, and the next step is
+    bit-identical (the requant SR stream is seeded from the step counter,
+    which rides the checkpoint)."""
+    pe0, rs0, it0, asj = _build(2, cache_dtype="int4",
+                                opt_state_dtype="int8")
+    rs0, _ = _steps(pe0, rs0, it0, asj, 4)
+    path = str(tmp_path / "mid4.npz")
+    ckpt.save_round_state(path, rs0, extra={"round": 4})
+    rs0, l_ref = _steps(pe0, rs0, it0, asj, 1)
+
+    n = ckpt.peek_pending_len(path)
+    pe1, rs_ref, it1, asj = _build(2, cache_dtype="int4",
+                                   opt_state_dtype="int8")
+    for _ in range(n):
+        bi, ba, bb = next(it1)
+        rs_ref = pe1.dispatch(rs_ref, [asj(ba)], asj(bb), bi)
+    rs1, _ = ckpt.restore_round_state(path, rs_ref,
+                                      extra_reference={"round": 0})
+    for _ in range(4 - n):
+        next(it1)
+    rs1, l_got = _steps(pe1, rs1, it1, asj, 1)
     np.testing.assert_array_equal(np.asarray(l_ref, np.float32),
                                   np.asarray(l_got, np.float32))
     for a, b in zip(jax.tree_util.tree_leaves(rs0.as_state()),

@@ -1,0 +1,278 @@
+"""Quantized optimizer state (optim/quantized.py + the fused q8 kernel).
+
+Covers: fused_adagrad_q8 kernel vs the jnp oracle (multi-tile grids,
+narrow-column tilings), the sqrt-space requant staying exact on
+row-homogeneous gradients, bf16/int8 AdaGrad tracking the fp32
+accumulator within tolerance, SM3's factored state actually shrinking
+while still optimizing, state-size accounting, jit/scan pytree
+discipline of the QuantAccum leaves, and the ``opt_state_pspecs``
+sharding rule over the quantized layouts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.optim import OPT_STATE_DTYPES, adagrad, apply_updates, \
+    make_optimizer
+from repro.optim.quantized import QuantAccum, adagrad_quantized, \
+    opt_state_nbytes, quant_accum_init, sm3
+
+RNG = np.random.default_rng(11)
+
+
+def _f32(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Kernel vs oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("R,C", [(8, 1024), (32, 1024), (8, 2), (16, 114)])
+def test_fused_adagrad_q8_matches_oracle(R, C):
+    g = _f32((R, C))
+    q = jnp.asarray(RNG.integers(0, 128, size=(R, C)), jnp.int8)
+    s = jnp.asarray(RNG.uniform(1e-6, 1e-2, size=(R, 1)), jnp.float32)
+    u = jnp.asarray(RNG.uniform(size=(R, C)), jnp.float32)
+    upd_k, q_k, s_k = ops.fused_adagrad_q8(g, q, s, u, 0.05, 1e-10)
+    upd_r, q_r, s_r = ref.fused_adagrad_q8_ref(g, q, s, u, 0.05, 1e-10)
+    np.testing.assert_allclose(np.asarray(upd_k), np.asarray(upd_r),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+def test_fused_adagrad_q8_zero_state_first_step():
+    """From the all-zero init state the first update must equal plain
+    AdaGrad's first update exactly (dequant of zero codes is zero)."""
+    g = _f32((8, 64))
+    q = jnp.zeros((8, 64), jnp.int8)
+    s = jnp.zeros((8, 1), jnp.float32)
+    u = jnp.zeros((8, 64), jnp.float32)
+    upd, _, _ = ops.fused_adagrad_q8(g, q, s, u, 0.1, 1e-10)
+    upd_ref, _ = ref.fused_adagrad_ref(g, jnp.zeros_like(g), 0.1, 1e-10)
+    np.testing.assert_allclose(np.asarray(upd), np.asarray(upd_ref),
+                               rtol=1e-6, atol=0)
+
+
+# --------------------------------------------------------------------------
+# Optimizer-level parity vs the fp32 accumulator
+# --------------------------------------------------------------------------
+def _run(opt, params, grad_seq):
+    st = opt.init(params)
+    upd = None
+    for g in grad_seq:
+        upd, st = opt.update(g, st)
+    return upd, st
+
+
+def test_int8_adagrad_exact_on_row_homogeneous_grads():
+    """Constant-magnitude gradients keep every element at the row max, so
+    the sqrt-space requant is EXACT and int8 AdaGrad reproduces the fp32
+    update to float tolerance across steps."""
+    params = {"w": jnp.zeros((16, 64), jnp.float32)}
+    signs = RNG.choice([-1.0, 1.0], size=(16, 64))
+    grads = [{"w": jnp.asarray(signs * 0.1, jnp.float32)}] * 6
+    u32, _ = _run(adagrad(0.05), params, grads)
+    u8, _ = _run(adagrad(0.05, state_dtype="int8"), params, grads)
+    np.testing.assert_allclose(np.asarray(u8["w"]), np.asarray(u32["w"]),
+                               rtol=2e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("state_dtype,tol", [("bfloat16", 0.02),
+                                             ("int8", 0.35)])
+def test_quantized_adagrad_tracks_fp32_within_tolerance(state_dtype, tol):
+    """Random gradients: the quantized accumulators stay within a bounded
+    relative error of the fp32 update for elements whose accumulator is
+    not far below the row max (the 8-bit-optimizer regime; sqrt-space
+    codes cover (1/127)^2 of the row max)."""
+    params = {"w": jnp.zeros((16, 128), jnp.float32),
+              "b": jnp.zeros((37,), jnp.float32)}
+    grads = [jax.tree_util.tree_map(
+        lambda p, k=k: jnp.asarray(
+            np.random.default_rng(k).normal(size=p.shape) * 0.1,
+            jnp.float32), params) for k in range(6)]
+    u32, _ = _run(adagrad(0.05), params, grads)
+    uq, _ = _run(adagrad(0.05, state_dtype=state_dtype), params, grads)
+    for k in u32:
+        a, b = np.asarray(uq[k]), np.asarray(u32[k])
+        # elements still in the representable band of the row scale
+        sig = np.abs(b) > 0.25 * np.abs(b).max()
+        rel = np.abs(a - b)[sig] / np.abs(b)[sig]
+        assert rel.max() <= tol, (k, rel.max())
+
+
+def test_quantized_adagrad_optimizes_quadratic():
+    """End-to-end convergence: minimizing a least-squares objective with
+    int8 / bf16 state reaches within 10% of the fp32-state loss."""
+    X = _f32((128, 16), 0.5)
+    w_true = _f32((16,))
+    y = X @ w_true
+
+    def loss(w):
+        r = X @ w - y
+        return jnp.mean(r * r)
+
+    gfn = jax.grad(loss)
+    finals = {}
+    for sd in OPT_STATE_DTYPES:
+        opt = adagrad(0.5, state_dtype=sd)
+        w = {"w": jnp.zeros((16,), jnp.float32)}
+        st = opt.init(w)
+        for _ in range(60):
+            upd, st = opt.update({"w": gfn(w["w"])}, st)
+            w = apply_updates(w, upd)
+        finals[sd] = float(loss(w["w"]))
+    base = finals["float32"]
+    assert base < 0.05 * float(jnp.mean(y * y))      # fp32 actually trains
+    for sd in ("bfloat16", "int8"):
+        assert finals[sd] <= base + 0.1 * abs(base) + 5e-3, finals
+
+
+def test_int8_adagrad_update_is_deterministic():
+    """The requant SR stream is seeded from the step counter: the same
+    (grads, state) produce bit-identical updates and codes — the property
+    checkpoint resume relies on."""
+    params = {"w": jnp.zeros((8, 32), jnp.float32)}
+    g = {"w": _f32((8, 32), 0.1)}
+    opt = adagrad(0.05, state_dtype="int8")
+    st = opt.init(params)
+    u1, st1 = opt.update(g, st)
+    u2, st2 = opt.update(g, st)
+    np.testing.assert_array_equal(np.asarray(u1["w"]), np.asarray(u2["w"]))
+    np.testing.assert_array_equal(np.asarray(st1["accum"][0].q),
+                                  np.asarray(st2["accum"][0].q))
+
+
+# --------------------------------------------------------------------------
+# SM3
+# --------------------------------------------------------------------------
+def test_sm3_state_is_factored_and_optimizes():
+    params = {"w": jnp.zeros((64, 32), jnp.float32),
+              "b": jnp.zeros((32,), jnp.float32)}
+    opt = make_optimizer("sm3", 0.5)
+    st = opt.init(params)
+    # leaf order is the params flatten order ("b" sorts before "w"):
+    # full (32,) for the 1-D bias, (64,) row + (32,) col for w — not 64*32
+    assert st["accum"][0]["full"].shape == (32,)
+    assert st["accum"][1]["row"].shape == (64,)
+    assert st["accum"][1]["col"].shape == (32,)
+    assert opt_state_nbytes(opt, params) < \
+        opt_state_nbytes(adagrad(0.5), params) / 10
+
+    X = _f32((256, 64), 0.5)
+    y = X @ _f32((64, 32))
+
+    def loss(w):
+        r = X @ w - y
+        return jnp.mean(r * r)
+
+    w = {"w": jnp.zeros((64, 32), jnp.float32)}
+    st = opt.init(w)
+    l0 = float(loss(w["w"]))
+    for _ in range(50):
+        upd, st = opt.update({"w": jax.grad(loss)(w["w"])}, st)
+        w = apply_updates(w, upd)
+    assert float(loss(w["w"])) < 0.2 * l0
+
+
+def test_sm3_cover_upper_bounds_adagrad_sum():
+    """SM3's defining invariant: min(row_i, col_j) >= the true
+    accumulated g² sum at every cell (row/col are maxima of v, v builds
+    on the min of maxima), so steps are never LARGER than AdaGrad's —
+    the factored state is conservative, not optimistic."""
+    opt = sm3(0.1)
+    g = _f32((8, 16), 0.3)
+    st = opt.init({"w": jnp.zeros((8, 16))})
+    true_sum = np.zeros((8, 16), np.float64)
+    for _ in range(4):
+        _, st = opt.update({"w": g}, st)
+        true_sum += np.asarray(g, np.float64) ** 2
+        cover = np.minimum(np.asarray(st["accum"][0]["row"])[:, None],
+                           np.asarray(st["accum"][0]["col"])[None, :])
+        assert (cover >= true_sum - 1e-5).all()
+
+
+# --------------------------------------------------------------------------
+# State accounting + pytree discipline
+# --------------------------------------------------------------------------
+def test_state_bytes_ordering():
+    """At LLM-ish leaf sizes: int8 < bf16/sm3 < fp32, int8 ~4x smaller
+    (per-row fp32 scales amortized over 1024 lanes)."""
+    params = {"w": jnp.zeros((2048, 960), jnp.float32),
+              "b": jnp.zeros((960,), jnp.float32)}
+    b32 = opt_state_nbytes(adagrad(0.1), params)
+    b16 = opt_state_nbytes(adagrad(0.1, state_dtype="bfloat16"), params)
+    b8 = opt_state_nbytes(adagrad(0.1, state_dtype="int8"), params)
+    bs = opt_state_nbytes(make_optimizer("sm3", 0.1), params)
+    assert b8 < b16 < b32 and bs < b8
+    assert b32 / b8 > 3.5
+
+
+def test_quant_accum_rides_jit_and_flattens():
+    p = jnp.zeros((100,), jnp.float32)
+    acc = quant_accum_init(p)
+    assert isinstance(acc, QuantAccum)
+    leaves, treedef = jax.tree_util.tree_flatten(acc)
+    assert [l.dtype for l in leaves] == [jnp.int8, jnp.float32]
+    acc2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert acc2.shape == (100,)
+    opt = adagrad_quantized(0.05)
+    st = opt.init({"w": p})
+    u_j, st_j = jax.jit(opt.update)({"w": _f32((100,))}, st)
+    assert u_j["w"].shape == (100,)
+    assert isinstance(st_j["accum"][0], QuantAccum)
+
+
+def test_bad_state_dtype_rejected():
+    with pytest.raises(ValueError, match="state_dtype"):
+        adagrad(0.1, state_dtype="fp16")
+    with pytest.raises(ValueError, match="state_dtype"):
+        adagrad_quantized(0.1, state_dtype="float32")
+
+
+# --------------------------------------------------------------------------
+# Sharding rules over the quantized state
+# --------------------------------------------------------------------------
+def test_opt_state_pspecs_quantized_layouts():
+    """``sharding.rules.opt_state_pspecs`` shards a QuantAccum's padded
+    row dim over data (ZeRO-1-style; R is a multiple of the kernel ROWS
+    tiling so a 2-way axis always divides, and every shard keeps whole
+    requant rows), replicates the step counter and SM3's factored
+    vectors, and the derived specs place + step without error."""
+    from types import SimpleNamespace
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import make_sharding, opt_state_pspecs
+
+    params = {"w": _f32((16, 24)), "b": _f32((16,))}
+    opt = make_optimizer("adagrad", 0.01, state_dtype="int8")
+    st = jax.eval_shape(opt.init, params)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    specs = opt_state_pspecs(st, mesh)
+    for acc in specs["accum"]:
+        assert acc.q == P("data", None)
+        assert acc.scale == P("data", None)
+    assert specs["t"] == P()
+    # R % ROWS == 0 -> a 2-way data axis still shards every leaf
+    two_way = opt_state_pspecs(st, SimpleNamespace(shape={"data": 2}))
+    for acc in two_way["accum"]:
+        assert acc.q == P("data", None)
+
+    # SM3's factored row/col vectors are 1-D: replicate
+    sm3_st = jax.eval_shape(make_optimizer("sm3", 0.01).init, params)
+    sm3_specs = opt_state_pspecs(sm3_st, mesh)
+    for leaf, spec in zip(jax.tree_util.tree_leaves(sm3_st),
+                          jax.tree_util.tree_leaves(sm3_specs)):
+        if getattr(leaf, "ndim", 0) < 2:
+            assert spec == P()
+
+    # derived specs are placeable and the fused update runs on top
+    st_c = opt.init(params)
+    st_p = jax.device_put(st_c, make_sharding(mesh, specs))
+    upd, st2 = opt.update(
+        jax.tree_util.tree_map(jnp.ones_like, params), st_p)
+    assert int(st2["t"]) == 1
+    assert upd["w"].shape == (16, 24)

@@ -1,11 +1,13 @@
 """Quantized workset cache + fused gather→dequant→weight sample path.
 
-Covers: the storage codec (int8 / bf16 at rest, fp32 bit-exactness),
-kernel-vs-oracle parity for the fused sample megakernel (fp32 and int8
-rings, multi-tile grids, the unfusable-batch fallback, the all-dead-slot
-edge), Algorithm-2 weight tolerance of the int8 cache vs the fp32 cache
-(SR unbiasedness through the cosine), and the ``workset_stats``
-pipeline-staleness regression.
+Covers: the storage codec (int8 / int4 / bf16 at rest, fp32
+bit-exactness), nibble pack/unpack roundtrips at odd row widths,
+kernel-vs-oracle parity for the fused sample megakernel (fp32, int8, and
+nibble-packed int4 rings; multi-tile grids, the unfusable-batch
+fallback, the all-dead-slot edge), Algorithm-2 weight tolerance of the
+lossy caches vs the fp32 cache (SR unbiasedness through the cosine),
+the ``workset_stats`` pipeline-staleness regression, and the
+``workset_pspecs`` sharding rule over quantized rings.
 """
 import jax
 import jax.numpy as jnp
@@ -14,8 +16,9 @@ import pytest
 
 from repro.configs.base import CELUConfig
 from repro.core import engine
-from repro.core.workset import (QUANT_KEYS, CastLeaf, QuantLeaf,
-                                decode_entry, sample_hbm_bytes,
+from repro.core.workset import (QUANT_KEYS, CastLeaf, Quant4Leaf,
+                                QuantLeaf, decode_entry, pack_nibbles,
+                                sample_hbm_bytes, unpack_nibbles,
                                 workset_draw, workset_entry, workset_init,
                                 workset_insert, workset_nbytes,
                                 workset_sample, workset_stats)
@@ -52,7 +55,8 @@ def test_fp32_cache_layout_is_the_historical_table():
 
 @pytest.mark.parametrize("cache_dtype,leaf_cls,max_rel",
                          [("bfloat16", CastLeaf, 1 / 128),
-                          ("int8", QuantLeaf, 1 / 64)])
+                          ("int8", QuantLeaf, 1 / 64),
+                          ("int4", Quant4Leaf, 1 / 6)])
 def test_lossy_cache_roundtrip(cache_dtype, leaf_cls, max_rel):
     """Insert + sample through a lossy cache reconstructs the statistics
     to storage precision (int8: one LSB of the per-row absmax scale)."""
@@ -88,22 +92,43 @@ def test_int8_cache_sr_unbiased():
 
 def test_cache_footprint_ratio():
     """The int8 table holds the cut statistics in ~F/(F+4)x4 fewer bytes
-    (codes + one fp32 scale per row)."""
+    (codes + one fp32 scale per row); int4 nibble-packs two codes per
+    byte on top of that."""
     e = _entry(B=256, F=32)
     fp32 = workset_nbytes(workset_init(5, e), QUANT_KEYS)
     int8 = workset_nbytes(workset_init(5, e, cache_dtype="int8"),
                           QUANT_KEYS)
     bf16 = workset_nbytes(workset_init(5, e, cache_dtype="bfloat16"),
                           QUANT_KEYS)
+    int4 = workset_nbytes(workset_init(5, e, cache_dtype="int4"),
+                          QUANT_KEYS)
     assert fp32 == 2 * 5 * 256 * 32 * 4
     assert int8 == 2 * 5 * 256 * (32 + 4)
     assert bf16 == fp32 // 2
+    assert int4 == 2 * 5 * 256 * (32 // 2 + 4)
     assert fp32 / int8 > 3.0
+    assert fp32 / int4 > 6.0
+
+
+def test_int4_pack_roundtrip_odd_widths():
+    """pack→unpack is the identity on codes in [-7, 7], with odd widths
+    padded by one zero code (the pad nibble decodes to an exact 0)."""
+    for B, F in ((4, 8), (3, 7), (5, 33), (2, 1)):
+        q = jnp.asarray(RNG.integers(-7, 8, size=(B, F)), jnp.int8)
+        qp = jnp.pad(q, ((0, 0), (0, F & 1))) if F & 1 else q
+        packed = pack_nibbles(qp)
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == (B, (F + (F & 1)) // 2)
+        back = unpack_nibbles(packed)
+        np.testing.assert_array_equal(np.asarray(back[:, :F]), np.asarray(q))
+        if F & 1:    # the pad nibble must decode to 0, not garbage
+            np.testing.assert_array_equal(np.asarray(back[:, F]),
+                                          np.zeros(B, np.int8))
 
 
 def test_unknown_cache_dtype_rejected():
     with pytest.raises(ValueError, match="cache_dtype"):
-        workset_init(2, _entry(), cache_dtype="int4")
+        workset_init(2, _entry(), cache_dtype="fp16")
 
 
 def test_quantized_table_survives_scan_carry():
@@ -140,6 +165,31 @@ def test_fused_sample_f32_matches_oracle(W, B, F, cos_xi):
         np.testing.assert_allclose(np.asarray(w), np.asarray(w_r), **tol)
         np.testing.assert_allclose(np.asarray(cot), np.asarray(cot_r),
                                    **tol)
+
+
+@pytest.mark.parametrize("W,B,F", [(3, 64, 8), (4, 256, 16), (2, 384, 96),
+                                   (3, 64, 9), (4, 128, 33)])  # odd F
+def test_fused_sample_q4_matches_oracle(W, B, F):
+    """int4 nibble-packed ring kernel vs the unpack→dequant→cosine oracle
+    (multi-tile grids at B=384, odd row widths through the pad nibble)."""
+    P = (F + 1) // 2
+    a = _arr((B, F))
+    zq = jnp.asarray(RNG.integers(0, 256, size=(W, B, P)), jnp.uint8)
+    dzq = jnp.asarray(RNG.integers(0, 256, size=(W, B, P)), jnp.uint8)
+    if F & 1:   # storage codec invariant: pad nibble holds code 0 (+8)
+        zq = (zq & 0x0F) | jnp.uint8(0x80)
+        dzq = (dzq & 0x0F) | jnp.uint8(0x80)
+    zs = jnp.abs(_arr((W, B))) + 0.01
+    dzs = jnp.abs(_arr((W, B))) + 0.01
+    for slot in (0, W - 1):
+        w, cot = ops.fused_gather_weight_q4(jnp.int32(slot), a, zq, zs,
+                                            dzq, dzs, 0.3)
+        w_r, cot_r = ref.fused_sample_q4_ref(slot, a, zq, zs, dzq, dzs, 0.3)
+        assert cot.shape == a.shape
+        np.testing.assert_allclose(np.asarray(w), np.asarray(w_r),
+                                   rtol=3e-7, atol=3e-7)
+        np.testing.assert_allclose(np.asarray(cot), np.asarray(cot_r),
+                                   rtol=3e-6, atol=3e-6)
 
 
 @pytest.mark.parametrize("W,B,F", [(3, 64, 8), (4, 256, 16), (2, 384, 96)])
@@ -187,6 +237,13 @@ def test_fused_sample_all_dead_slot_yields_zero():
         jnp.zeros((W, B), jnp.float32), jnp.zeros((W, B, F), jnp.int8),
         jnp.zeros((W, B), jnp.float32), 0.5)
     assert (np.asarray(w) == 0.0).all() and (np.asarray(cot) == 0.0).all()
+    # int4 ring: the empty table is 0x88 bytes (code 0 in both nibbles)
+    # with zero scales — decodes to exact zeros
+    empty = jnp.full((W, B, F // 2), 0x88, jnp.uint8)
+    w, cot = ops.fused_gather_weight_q4(
+        jnp.int32(1), a, empty, jnp.zeros((W, B), jnp.float32),
+        empty, jnp.zeros((W, B), jnp.float32), 0.5)
+    assert (np.asarray(w) == 0.0).all() and (np.asarray(cot) == 0.0).all()
 
 
 def test_local_grad_a_cached_fused_matches_reference():
@@ -196,7 +253,7 @@ def test_local_grad_a_cached_fused_matches_reference():
     def forward(p, batch):
         return batch["x"] @ p
 
-    for cache_dtype in ("float32", "int8"):
+    for cache_dtype in ("float32", "int8", "int4"):
         for B, F in ((64, 8), (37, 8)):        # 37: unfusable, falls back
             p = _arr((4, F))
             e = {"z": _arr((B, F)), "dz": _arr((B, F)),
@@ -263,6 +320,22 @@ def test_int8_cache_weights_within_tolerance_fixed(B, F, seed):
     c32 = _weights_through_cache(z, dz, a, "float32", seed)
     c8 = _weights_through_cache(z, dz, a, "int8", seed)
     assert np.abs(c8 - c32).max() <= 0.06
+
+
+@pytest.mark.parametrize("B,F,seed", [(8, 16, 0), (32, 64, 1), (64, 128, 2),
+                                      (17, 33, 3)])
+def test_int4_cache_weights_within_tolerance_fixed(B, F, seed):
+    """int4 at rest: 7 levels per row absmax perturbs elements by up to
+    ~14%, so the Algorithm-2 cosine moves more than under int8 — but
+    stays bounded, and the SR noise is unbiased (the convergence claim is
+    pinned end-to-end by test_lossy_cache_trains and BENCH_llm)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    a = z + 0.3 * jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    dz = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    c32 = _weights_through_cache(z, dz, a, "float32", seed)
+    c4 = _weights_through_cache(z, dz, a, "int4", seed)
+    assert np.abs(c4 - c32).max() <= 0.25
 
 
 def test_int8_cache_weights_within_tolerance():
@@ -336,7 +409,7 @@ def test_fp32_fused_sample_bitwise_equals_materializing_path():
     assert _trace("float32", True) == _trace("float32", False)
 
 
-@pytest.mark.parametrize("cache_dtype", ["bfloat16", "int8"])
+@pytest.mark.parametrize("cache_dtype", ["bfloat16", "int8", "int4"])
 def test_lossy_cache_trains(cache_dtype):
     rows = _trace(cache_dtype, True, rounds=10)
     losses = [l for l, _ in rows]
@@ -378,9 +451,12 @@ def test_sample_hbm_bytes_counters():
     unfused32 = sample_hbm_bytes(e, "float32", fused=False)
     fused32 = sample_hbm_bytes(e, "float32", fused=True)
     fused8 = sample_hbm_bytes(e, "int8", fused=True)
-    assert fused8 < fused32 < unfused32
+    fused4 = sample_hbm_bytes(e, "int4", fused=True)
+    assert fused4 < fused8 < fused32 < unfused32
     # the fused int8 path moves > 2x fewer bytes than unfused fp32
     assert unfused32 / fused8 > 2.0
+    # int4 halves the ring-read bytes again (codes at half a byte)
+    assert unfused32 / fused4 > 3.0
     with pytest.raises(ValueError):
         sample_hbm_bytes(e, "fp16")
 
@@ -414,7 +490,7 @@ def _loss_b(p, zs, batch):
     return li, 0.0
 
 
-@pytest.mark.parametrize("cache_dtype", ["float32", "int8"])
+@pytest.mark.parametrize("cache_dtype", ["float32", "int8", "int4"])
 def test_party_b_fused_ring_weights_parity(cache_dtype):
     """The label party's dz-side cosine weighting through the fused
     gather→dequant→weight kernel (never materializing the decoded ∇Z
@@ -462,3 +538,39 @@ def test_sample_hbm_bytes_party_b_accounting():
     assert sample_hbm_bytes(e, "int8", fused=True, party="b") < b_fused
     with pytest.raises(ValueError, match="party"):
         sample_hbm_bytes(e, "float32", party="c")
+
+
+# --------------------------------------------------------------------------
+# Sharding rules over quantized rings
+# --------------------------------------------------------------------------
+def test_workset_pspecs_shard_batch_never_ring():
+    """``sharding.rules.workset_pspecs`` must shard the per-instance
+    batch dim of every ring leaf — including Quant4Leaf's packed codes
+    and scales — and never the W slot axis (a draw reads ONE slot)."""
+    from types import SimpleNamespace
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import make_sharding, workset_pspecs
+
+    z = _arr((8, 16))
+    ws = workset_init(5, {"z": z, "dz": z}, cache_dtype="int4")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    specs = workset_pspecs(ws, mesh)
+    for k in ("z", "dz"):
+        assert specs["buf"][k].q == P(None, "data", None)
+        assert specs["buf"][k].scale == P(None, "data")
+    for k in ("insert_time", "use_count", "batch_idx", "cursor", "time"):
+        assert specs[k] == P()
+    # the specs tree must be placeable as-is
+    placed = jax.device_put(ws, make_sharding(mesh, specs))
+    assert placed["buf"]["z"].q.shape == ws["buf"]["z"].q.shape
+
+    # non-divisible batch replicates — the rule never falls back to W,
+    # even when W itself would divide the data axis
+    fake = SimpleNamespace(shape={"data": 5})
+    bad = workset_pspecs(ws, fake)
+    assert bad["buf"]["z"].q == P()
+    # a divisible batch shards under the same multi-way axis
+    ok = workset_pspecs(ws, SimpleNamespace(shape={"data": 4}))
+    assert ok["buf"]["z"].q == P(None, "data", None)
