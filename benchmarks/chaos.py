@@ -29,8 +29,9 @@ from repro.launch.wan import (clocks_from_plan, hetero_wire_seconds,
                               retry_exchange_seconds,
                               transport_party_updown)
 
-from .common import csv_row, default_workload, run_protocol
-from .end_to_end import LR, _rounds_to_loss, _smoothed
+from .common import (csv_row, default_workload, rounds_to_loss,
+                     run_protocol, smoothed)
+from .end_to_end import LR
 
 ROUNDS = 400
 SLACK_X = 1.5           # faulted rounds-to-target budget vs fault-free
@@ -52,7 +53,7 @@ def _sched_round(losses, n_finite) -> "int | None":
     """1-based scheduler-round index of the ``n_finite``-th finite loss.
 
     At depth >= 1 a stalled round reports a non-finite loss (no merge
-    ran), which ``_smoothed`` drops — so ``_rounds_to_loss`` counts
+    ran), which ``smoothed`` drops — so ``rounds_to_loss`` counts
     *merged* rounds.  The gate converts back to the raw schedule
     position to charge stalls at their real cost."""
     import numpy as np
@@ -188,11 +189,11 @@ def chaos_study(rounds: int = ROUNDS, check: bool = False,
     faulted = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
                            rounds=f_rounds, lr=LR, eval_every=50,
                            pipeline_depth=1, fault_plan=plan)
-    base_smooth = _smoothed(clean["loss_curve"])
+    base_smooth = smoothed(clean["loss_curve"])
     target = round(base_smooth[-1] * 1.02, 6)
     r_clean = _sched_round(clean["loss_curve"],
-                           _rounds_to_loss(base_smooth, target))
-    r_fault_merged = _rounds_to_loss(_smoothed(faulted["loss_curve"]),
+                           rounds_to_loss(base_smooth, target))
+    r_fault_merged = rounds_to_loss(smoothed(faulted["loss_curve"]),
                                      target)
     r_fault = _sched_round(faulted["loss_curve"], r_fault_merged)
     reached = r_fault is not None and r_clean is not None

@@ -209,5 +209,24 @@ def rounds_to(curve, target):
     return None
 
 
+def smoothed(losses, k=25):
+    """Trailing-k running mean over the finite entries of a loss curve
+    (the depth-D pipeline's first D-1 rounds report NaN while the queue
+    fills)."""
+    xs = [x for x in losses if np.isfinite(x)]
+    out = []
+    for i in range(len(xs)):
+        out.append(float(np.mean(xs[max(0, i - k + 1):i + 1])))
+    return out
+
+
+def rounds_to_loss(smoothed_curve, target):
+    """First (1-based) smoothed round at or below the target loss."""
+    for i, x in enumerate(smoothed_curve):
+        if x <= target:
+            return i + 1
+    return None
+
+
 def csv_row(*cols):
     print(",".join(str(c) for c in cols), flush=True)

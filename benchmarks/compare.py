@@ -1,23 +1,30 @@
 """Benchmark-regression gate: diff a fresh benchmark JSON against its
-committed baseline.  Gates two files in CI: ``BENCH_local_scan.json``
-(vs ``results/BENCH_baseline.json``) and the LLM-geometry memory table
-``BENCH_llm.json`` (vs ``results/BENCH_llm_baseline.json``).
+committed baseline.  Gates three files in CI: ``BENCH_local_scan.json``
+(vs ``results/BENCH_baseline.json``), the LLM-geometry memory table
+``BENCH_llm.json`` (vs ``results/BENCH_llm_baseline.json``) and the
+fleet-throughput table ``BENCH_fleet.json`` (vs
+``results/BENCH_fleet_baseline.json``).
 
-Two classes of signal, two thresholds:
+Three classes of signal:
 
   * **Deterministic counters** — the named roofline counters in
     ``EXACT_KEYS`` plus EVERY per-variant key ending in ``_bytes`` (the
-    LLM table's per-party params/opt-state/cache budgets) are exact
-    functions of the code, not the machine.  ANY increase over the
-    baseline fails the gate.
-  * **Measured wall** — ``local_step_ms`` is a CPU wall measurement on a
-    shared CI runner; it may drift up to ``--wall-tol`` (default 25%)
-    before the gate trips.
+    LLM table's per-party params/opt-state/cache budgets, the fleet
+    table's per-job wire bytes) are exact functions of the code, not the
+    machine.  ANY increase over the baseline fails the gate.
+  * **Measured wall** — the ``WALL_KEYS`` metrics are wall measurements
+    on a shared CI runner; each may drift up to ``--wall-tol`` (default
+    25%) in its BAD direction before the gate trips (``local_step_ms``
+    regresses UP, ``jobs_per_sec`` regresses DOWN).
+  * **Indicative** — any key starting with ``indicative_`` (e.g. the LLM
+    table's ``indicative_cpu_tokens_per_sec``: CPU wall through
+    interpreted Pallas kernels) is excluded from the gate BY CONTRACT,
+    even if it also matches a gated pattern.
 
 A counter that IMPROVED is reported but passes — refresh the baseline
-(rerun ``python -m benchmarks.run --only local_scan`` and copy the JSON
-over ``results/BENCH_baseline.json``) in the same PR that earns the win,
-so the gate ratchets.
+(rerun the producing benchmark and copy the JSON over its
+``*_baseline.json``) in the same PR that earns the win, so the gate
+ratchets.
 
     python -m benchmarks.compare \
         --baseline results/BENCH_baseline.json \
@@ -37,18 +44,22 @@ DEFAULT_CURRENT = os.path.join(RESULTS_DIR, "BENCH_local_scan.json")
 # exact per-variant counters: any increase is a regression
 EXACT_KEYS = ("cache_bytes", "stat_cache_bytes",
               "sample_hbm_bytes_per_step", "hbm_bytes_per_round")
-# measured per-variant wall: tolerated up to --wall-tol relative drift
-WALL_KEY = "local_step_ms"
+# measured per-variant wall metrics: (key, bad direction).  Tolerated up
+# to --wall-tol relative drift toward "bad".
+WALL_KEYS = (("local_step_ms", "up"), ("jobs_per_sec", "down"))
+# keys carrying this prefix are non-claims and never gate
+INDICATIVE_PREFIX = "indicative_"
 
 
 def _exact_keys(base: dict, cur: dict):
     """Deterministic keys of one variant: the named counters plus every
-    ``*_bytes`` field (memory budgets are exact by construction)."""
+    ``*_bytes`` field (memory budgets are exact by construction).
+    ``indicative_*`` keys are excluded by contract."""
     keys = set(EXACT_KEYS)
     for k, v in list(base.items()) + list(cur.items()):
         if k.endswith("_bytes") and isinstance(v, (int, float)):
             keys.add(k)
-    return sorted(keys)
+    return sorted(k for k in keys if not k.startswith(INDICATIVE_PREFIX))
 
 
 def compare(baseline: dict, current: dict, wall_tol: float = 0.25):
@@ -79,15 +90,21 @@ def compare(baseline: dict, current: dict, wall_tol: float = 0.25):
             elif c < b:
                 notes.append(f"{name}.{k}: {b} -> {c} (improved — refresh "
                              f"the baseline to ratchet)")
-        b, c = base.get(WALL_KEY), cur.get(WALL_KEY)
-        if b and c:
-            if c > b * (1.0 + wall_tol):
+        for wall_key, bad in WALL_KEYS:
+            b, c = base.get(wall_key), cur.get(wall_key)
+            if not (b and c):
+                continue
+            worse = c > b * (1.0 + wall_tol) if bad == "up" \
+                else c < b * (1.0 - wall_tol)
+            better = c < b * (1.0 - wall_tol) if bad == "up" \
+                else c > b * (1.0 + wall_tol)
+            if worse:
                 failures.append(
-                    f"{name}.{WALL_KEY}: {b} -> {c} ms "
-                    f"(+{(c / b - 1) * 100:.0f}% > {wall_tol * 100:.0f}% "
-                    f"tolerance)")
-            elif c < b * (1.0 - wall_tol):
-                notes.append(f"{name}.{WALL_KEY}: {b} -> {c} ms (faster)")
+                    f"{name}.{wall_key}: {b} -> {c} "
+                    f"({abs(c / b - 1) * 100:.0f}% worse > "
+                    f"{wall_tol * 100:.0f}% tolerance)")
+            elif better:
+                notes.append(f"{name}.{wall_key}: {b} -> {c} (improved)")
     for name in cur_v:
         if name not in base_v:
             notes.append(f"new variant {name!r} not in baseline (not "
@@ -100,8 +117,9 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--current", default=DEFAULT_CURRENT)
     ap.add_argument("--wall-tol", type=float, default=0.25,
-                    help="relative local_step_ms drift tolerated "
-                         "(default 0.25 = 25%%)")
+                    help="relative drift tolerated on each WALL_KEYS "
+                         "metric in its bad direction (default 0.25 = "
+                         "25%%)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)

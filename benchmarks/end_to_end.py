@@ -24,7 +24,8 @@ import os
 
 from repro.launch.wan import WANClock
 
-from .common import csv_row, default_workload, rounds_to, run_protocol
+from .common import (csv_row, default_workload, rounds_to, rounds_to_loss,
+                     run_protocol, smoothed)
 
 ROUNDS = 1200
 LR = 0.003
@@ -178,28 +179,61 @@ def run_one(dataset: str, model: str, protocols=("vanilla", "fedbcd",
         csv_row(name, r, f"{t:.1f}", f"{t_van / t:.2f}x", f"{a:.4f}")
 
 
-def _smoothed(losses, k=25):
-    """Trailing-k running mean over the finite entries of a loss curve
-    (the depth-D pipeline's first D-1 rounds report NaN while the queue
-    fills)."""
+def _sweep_runs_fleet(data, cfg, rounds: int, depths) -> tuple:
+    """All sweep depths as ONE fleet call: the depth knob is static, so
+    the specs partition into ``len(depths)`` compiled cohorts — each a
+    single ``jit(scan + flush)`` — instead of ``len(depths) * rounds``
+    host-side stage dispatches.  Loss curves are bit-exact to the
+    ``PipelinedEngine`` host loop (the fleet scheduler's golden gate in
+    tests/test_fleet.py), so the convergence verdicts are unchanged;
+    final AUC is evaluated on the post-drain params."""
+    import jax
+    import jax.numpy as jnp
     import numpy as np
-    xs = [x for x in losses if np.isfinite(x)]
-    out = []
-    for i in range(len(xs)):
-        out.append(float(np.mean(xs[max(0, i - k + 1):i + 1])))
-    return out
 
+    from repro.configs.base import CELUConfig
+    from repro.core import engine
+    from repro.data import synthetic as synth
+    from repro.fleet import FleetWorkload, JobSpec, run_fleet
+    from repro.models.tabular import auc, make_dlrm
 
-def _rounds_to_loss(smoothed, target):
-    """First (1-based) smoothed round at or below the target loss."""
-    for i, x in enumerate(smoothed):
-        if x <= target:
-            return i + 1
-    return None
+    init_fn, task, predict = make_dlrm(cfg)
+    etask = engine.lift_two_party(task)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+
+    def params_for(seed):
+        return engine.lift_two_party_params(
+            init_fn(jax.random.PRNGKey(seed), cfg))
+
+    def batch_stream():
+        for bi, ba, bb in synth.aligned_batches(data["train"], 256,
+                                                seed=0):
+            yield bi, [asj(ba)], asj(bb)
+
+    ccfg, nloc = engine.preset_config(
+        "celu", CELUConfig(R=5, W=5, xi_degrees=60.0))
+    specs = [JobSpec(celu=ccfg, local_steps=nloc, lr=LR, depth=d)
+             for d in depths]
+    res = run_fleet(specs, rounds,
+                    workload=FleetWorkload(etask, params_for,
+                                           batch_stream))
+
+    te = data["test"]
+    tea = {"x_a": jnp.asarray(te["x_a"])}
+    teb = {"x_b": jnp.asarray(te["x_b"]), "y": jnp.asarray(te["y"])}
+    runs = {}
+    for j, d in enumerate(depths):
+        logits = np.asarray(
+            predict(engine.unlift_params(res.final_state(j)["params"]),
+                    cfg, tea, teb), np.float64)
+        runs[d] = {"loss_curve": [float(x) for x in res.losses[j]],
+                   "final_auc": auc(logits, te["y"])}
+    return res, runs
 
 
 def depth_sweep(rounds: int = SWEEP_ROUNDS, depths=SWEEP_DEPTHS,
-                check: bool = False, out: str = BENCH_PIPE) -> dict:
+                check: bool = False, out: str = BENCH_PIPE,
+                host_loop: bool = False) -> dict:
     """The pipeline-depth convergence study: the SAME celu config under
     exchange-queue depths ``depths``, scored against the depth-0 run's
     target loss.  Depths 0/1 are the golden-pinned schedules; D >= 2 pays
@@ -207,6 +241,9 @@ def depth_sweep(rounds: int = SWEEP_ROUNDS, depths=SWEEP_DEPTHS,
     the D-deep WAN overlap — the study quantifies the trade:
     rounds-to-target rises with D while the WAN clock's time-to-target
     falls as long as the extra rounds stay cheaper than the hidden wire.
+    Runs all depths as ONE compiled fleet call by default
+    (``repro.fleet``; ``host_loop=True`` keeps the legacy per-round
+    ``run_protocol`` loop — the two paths are loss-curve bit-exact).
     Writes ``results/BENCH_pipeline_depth.json``; with ``check`` the run
     exits non-zero if any exposed depth misses the depth-0 target (the CI
     nightly gate)."""
@@ -215,19 +252,24 @@ def depth_sweep(rounds: int = SWEEP_ROUNDS, depths=SWEEP_DEPTHS,
             f"{rounds} rounds, target = depth-0 smoothed tail x 1.02")
     csv_row("depth", "reached", "rounds_to_target", "time_to_target_s",
             "speedup_vs_depth0", "final_loss", "final_auc")
-    runs = {}
-    for d in depths:
-        runs[d] = run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
-                               rounds=rounds, lr=LR, eval_every=50,
-                               pipeline_depth=d)
-    base_smooth = _smoothed(runs[depths[0]]["loss_curve"])
+    if host_loop:
+        runs = {d: run_protocol("celu", data, cfg, R=5, W=5, xi=60.0,
+                                rounds=rounds, lr=LR, eval_every=50,
+                                pipeline_depth=d) for d in depths}
+    else:
+        fres, runs = _sweep_runs_fleet(data, cfg, rounds, depths)
+        csv_row(f"# fleet path: {len(depths)} depths as "
+                f"{fres.n_cohorts} compiled cohorts in one call, "
+                f"wall {fres.wall_s:.1f}s "
+                f"(+{fres.compile_s:.1f}s compile)")
+    base_smooth = smoothed(runs[depths[0]]["loss_curve"])
     # 2% slack over the depth-0 tail: the bar every exposed depth must hit
     target = round(base_smooth[-1] * 1.02, 6)
     zb = paper_round_updown()
     table, t0 = {}, None
     for d in depths:
-        smooth = _smoothed(runs[d]["loss_curve"])
-        r2t = _rounds_to_loss(smooth, target)
+        smooth = smoothed(runs[d]["loss_curve"])
+        r2t = rounds_to_loss(smooth, target)
         reached = r2t is not None
         warmup = max(d - 1, 0)
         # r2t indexes MERGED rounds (the smoothed curve drops the NaN
@@ -298,9 +340,14 @@ def main(argv=None):
                     help="with --depth-sweep: exit non-zero if any depth "
                          "misses the depth-0 target loss (the nightly CI "
                          "gate)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="with --depth-sweep: run the legacy per-round "
+                         "host loop instead of the one-call fleet path "
+                         "(loss-curve bit-exact either way)")
     args = ap.parse_args(argv)
     if args.depth_sweep:
-        depth_sweep(rounds=args.sweep_rounds, check=args.check)
+        depth_sweep(rounds=args.sweep_rounds, check=args.check,
+                    host_loop=args.host_loop)
         return
     protocols = ("vanilla", "fedbcd", "celu") if args.protocol == "all" \
         else (args.protocol,)

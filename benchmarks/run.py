@@ -14,11 +14,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=("ablation", "end_to_end", "roofline", "micro",
                              "beyond", "local_scan", "pipeline_depth",
-                             "chaos", "llm"))
+                             "chaos", "llm", "fleet"))
     args = ap.parse_args()
 
-    from . import (ablation, beyond, chaos, end_to_end, llm, local_scan,
-                   microbench, roofline)
+    from . import (ablation, beyond, chaos, end_to_end, fleet, llm,
+                   local_scan, microbench, roofline)
     blocks = {
         "micro": microbench.main,
         "local_scan": local_scan.main,     # emits BENCH_local_scan.json
@@ -35,6 +35,10 @@ def main() -> None:
         # emits BENCH_chaos.json (convergence under the seeded fault
         # matrix; the nightly chaos CI lane runs it with --check)
         "chaos": chaos.main,
+        # emits BENCH_fleet.json (N jobs as one compiled vmapped program
+        # vs the sequential host loop; the fast CI lane gates jobs/sec
+        # drift via benchmarks.compare and the >=5x speedup floor)
+        "fleet": fleet.main,
         "beyond": beyond.main,
     }
     picked = [args.only] if args.only else list(blocks)

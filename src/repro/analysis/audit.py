@@ -443,6 +443,177 @@ def trace_case(case: AuditCase, transport=None) -> CaseResult:
 
 
 # --------------------------------------------------------------------------
+# Fleet (vmapped batched-state) case
+# --------------------------------------------------------------------------
+AUDIT_JOBS = 2      # fleet width of the batched-state audit trace
+
+
+def _pending_tags(pending, K: int):
+    """Input taints for an adopted steady-state exchange queue.  Queue
+    slots hold what a prior compute dispatch produced: RELEASED z/dz
+    messages (the boundary mark cleared their raw taint when they crossed
+    the wire), each party's own gradient and cached batch (raw to the
+    owner — the host rule's PendingExchange theorem), B's loss, and the
+    wire-seeded error-feedback residual snapshot."""
+    fresh = pending.fresh
+    ftags = dict(
+        zs=[_const(z, EMPTY) for z in fresh["zs"]],
+        dzs=[_const(z, EMPTY) for z in fresh["dzs"]],
+        g_as=[_const(fresh["g_as"][i], raw_of(f"a{i}")) for i in range(K)],
+        g_b=_const(fresh["g_b"], raw_of("b")),
+        loss=raw_of("b"),
+        tstate=_transport_tags(fresh["tstate"], K),
+    )
+    return pending._replace(
+        fresh=ftags,
+        batches_a=[_const(pending.batches_a[i], raw_of(f"a{i}"))
+                   for i in range(K)],
+        batch_b=_const(pending.batch_b, raw_of("b")),
+        batch_idx=EMPTY, dispatched_at=EMPTY)
+
+
+def _out_pending_tags(p_sds, K: int):
+    """Host rule for the OUTPUT queue: released messages must stay
+    public, every private leaf must stay with its owner — a refactor
+    that parks a pre-release cut tensor in a queue slot another party
+    reads is exactly what this region catches (taint.py module doc)."""
+    import jax
+
+    def reg(tree, allowed, label):
+        return jax.tree_util.tree_map(lambda _: OutTag(allowed, label),
+                                      tree)
+
+    A = [frozenset({f"a{i}"}) for i in range(K)]
+    b = frozenset({"b"})
+    fresh = p_sds.fresh
+    tp_tags = {}
+    for d, lst in fresh["tstate"].items():
+        owners = A if d == "up" else [b] * K
+        tp_tags[d] = [reg(lst[i], owners[i],
+                          f"fleet.pending.tstate.{d}[{i}]")
+                      for i in range(len(lst))]
+    ftags = dict(
+        zs=[reg(fresh["zs"][i], _PUBLIC, f"fleet.pending.zs[{i}]")
+            for i in range(K)],
+        dzs=[reg(fresh["dzs"][i], _PUBLIC, f"fleet.pending.dzs[{i}]")
+             for i in range(K)],
+        g_as=[reg(fresh["g_as"][i], A[i], f"fleet.pending.g_as[{i}]")
+              for i in range(K)],
+        g_b=reg(fresh["g_b"], b, "fleet.pending.g_b"),
+        loss=OutTag(b, "fleet.pending.loss"),
+        tstate=tp_tags,
+    )
+    return p_sds._replace(
+        fresh=ftags,
+        batches_a=[reg(p_sds.batches_a[i], A[i],
+                       f"fleet.pending.batches_a[{i}]") for i in range(K)],
+        batch_b=reg(p_sds.batch_b, b, "fleet.pending.batch_b"),
+        batch_idx=OutTag(_PUBLIC, "fleet.pending.batch_idx"),
+        dispatched_at=OutTag(_PUBLIC, "fleet.pending.dispatched_at"))
+
+
+def trace_fleet_case(case: Optional[AuditCase] = None,
+                     jobs: int = AUDIT_JOBS, transport=None) -> CaseResult:
+    """Audit the vmapped fleet step: ``jobs`` stacked scheduler states
+    (engine state + PendingExchange queue + traced phase) driven through
+    ONE batched jaxpr, at the heaviest supported config by default
+    (depth 2, top-k + int8 codec, DP noise, int8 cache).
+
+    The batched-state theorem this proves: the taint, sanitizer-ordering
+    and byte-ledger analyses are invariant under the leading job axis —
+    every boundary crossing carries ``(jobs,) + z_shape`` (ONE mark moves
+    the fleet's messages), the queue's host rule still separates parties
+    per slot, and the per-job wire ledger reconciles unchanged."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import engine as E
+    from ..fleet.scheduler import JobHyper, make_fleet_step
+    from ..optim import make_optimizer
+    from .kernel_lint import lint_engine_fusability
+    from .markers import AuditedTransport, instrumented
+    from .wire_audit import audit_wire
+
+    if case is None:
+        case = AuditCase(name=f"fleet-N{jobs}-K1-d2-topk_int8-int8-dp0.3",
+                         K=1, depth=2, compression="topk_int8",
+                         cache_dtype="int8", dp_sigma=0.3)
+    celu = _make_celu(case)
+    task, params, batches_a, batch_b = _toy_task(case.K)
+    opt = make_optimizer("adagrad", 0.1)
+    tp_inner = transport if transport is not None \
+        else E.make_transport(celu)
+    tp = AuditedTransport(tp_inner, celu)
+
+    state = E.init_state(task, params, opt, celu, batches_a, batch_b,
+                         transport=tp_inner)
+    init, step, _ = make_fleet_step(task, celu, depth=case.depth,
+                                    transport=tp)
+    fs = init(state, batches_a, batch_b)
+    # steady-state queue phase: slots adopted as if a prior dispatch
+    # filled them, so the traced merge cond sees a live queue
+    fs = fs._replace(n_pending=jnp.int32(case.depth))
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.stack([jnp.asarray(x)] * jobs), t)
+    fs_j, hyper_j = stack(fs), stack(JobHyper.for_spec(0.1, 60.0))
+    vstep = jax.vmap(step, in_axes=(0, 0, None, None, None))
+    args = (fs_j, hyper_j, batches_a, batch_b, jnp.int32(3))
+
+    tp._counts.clear()
+    with instrumented():
+        closed, out_sds = jax.make_jaxpr(vstep, return_shape=True)(*args)
+
+    K = case.K
+    fs_tags = fs._replace(state=_state_tags(state, K),
+                          pending=_pending_tags(fs.pending, K),
+                          n_pending=EMPTY)
+    hyper_tags = JobHyper(lr=EMPTY, cos_xi=EMPTY,
+                          keys={k: EMPTY for k in hyper_j.keys})
+    in_tags = (fs_tags, hyper_tags,
+               [_const(batches_a[i], raw_of(f"a{i}")) for i in range(K)],
+               _const(batch_b, raw_of("b")), EMPTY)
+    in_leaves = jax.tree_util.tree_leaves(
+        in_tags, is_leaf=lambda x: isinstance(x, Taint))
+    assert len(in_leaves) == len(closed.jaxpr.invars), \
+        (case.name, len(in_leaves), len(closed.jaxpr.invars))
+
+    fs_sds, m_sds = out_sds
+    out_tags = (fs_sds._replace(
+        state=_out_state_tags(fs_sds.state, K),
+        pending=_out_pending_tags(fs_sds.pending, K),
+        n_pending=OutTag(_PUBLIC, "fleet.n_pending")),
+        _out_metric_tags(m_sds))
+    out_leaves = jax.tree_util.tree_leaves(
+        out_tags, is_leaf=lambda x: isinstance(x, OutTag))
+
+    trace = audit_trace(closed, in_leaves, out_leaves, case=case.name)
+    findings = list(trace.findings)
+    findings += _check_collectives(trace, case.name)
+
+    z_shapes = [(AUDIT_B, AUDIT_Z)] * K
+    wire_findings, stats = audit_wire(tp_inner, celu, z_shapes, trace,
+                                      n_computes=1, case=case.name,
+                                      jobs=jobs)
+    findings += wire_findings
+    findings += lint_engine_fusability(celu, AUDIT_B, case.name)
+
+    if not trace.boundaries:
+        findings.append(Finding(
+            code="audit.no-boundaries", severity="error",
+            where="instrumented fleet trace",
+            detail="the vmapped trace contains no boundary marks — the "
+                   "mark primitive's batching rule is broken and the "
+                   "fleet audit proves nothing", case=case.name))
+
+    stats["eqns"] = len(closed.jaxpr.eqns)
+    stats["pallas_calls"] = len(trace.pallas_calls)
+    cfg = asdict(case)
+    cfg["jobs"] = jobs
+    return CaseResult(name=case.name, config=cfg, findings=findings,
+                      stats=stats)
+
+
+# --------------------------------------------------------------------------
 # Pod (SPMD) case
 # --------------------------------------------------------------------------
 def trace_pod_case() -> CaseResult:
@@ -528,6 +699,7 @@ def trace_pod_case() -> CaseResult:
 # --------------------------------------------------------------------------
 def run_audit(cases: Optional[Sequence[AuditCase]] = None, *,
               include_pod: bool = True,
+              include_fleet: bool = True,
               include_kernel_lint: bool = True) -> AuditReport:
     import jax
 
@@ -546,6 +718,8 @@ def run_audit(cases: Optional[Sequence[AuditCase]] = None, *,
                    "geometries": len(DEFAULT_GEOMETRIES)}))
     for case in cases:
         results.append(trace_case(case))
+    if include_fleet:
+        results.append(trace_fleet_case())
     if include_pod:
         results.append(trace_pod_case())
     return AuditReport(

@@ -48,6 +48,15 @@ mark_p.def_impl(lambda x, **_: x)
 mark_p.def_abstract_eval(lambda aval, **_: aval)
 mlir.register_lowering(mark_p, lambda ctx, x, **_: [x])
 
+# vmap rule: the mark rides the batched operand unchanged, so sanitizer
+# and boundary marks survive a leading fleet/job axis — the batched-state
+# audit (audit.trace_fleet_case) traces vmapped schedules through the
+# same taint pass, with boundary avals carrying the job axis.
+from jax.interpreters import batching  # noqa: E402
+
+batching.primitive_batchers[mark_p] = \
+    lambda args, dims, **params: (mark_p.bind(args[0], **params), dims[0])
+
 # Sanitizer names whose marks "declare" a narrowing precision cast (the
 # kernel-contract cast lint whitelists casts flowing into these).
 DECLARED_CAST_STAGES = ("wire", "encode", "cache")

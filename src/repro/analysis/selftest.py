@@ -1,7 +1,8 @@
 """Seeded-mutation self-tests: the auditor must CATCH each planted bug,
 naming the offender — an analyzer that cannot fail is not a gate.
 
-Four mutations, one per invariant family plus the DP-ordering rule:
+Five mutations, one per invariant family plus the DP-ordering rule and
+the batched fleet path:
 
   * **raw-send** — a transport whose ``send`` returns the raw tensor
     unencoded: the taint pass must flag the boundary crossing.
@@ -15,6 +16,11 @@ Four mutations, one per invariant family plus the DP-ordering rule:
     behavior (DP noise applied BEFORE the lossy encode, so error
     feedback re-transmits and cancels the mechanism): the sanitizer
     ordering check must flag it.
+  * **fleet-raw-send** — the raw-send transport driven through the
+    VMAPPED fleet step (``trace_fleet_case``): the taint pass must flag
+    the same crossing with the leading job axis on the boundary aval —
+    a batched trace that hides planted bugs would make the fleet audit
+    case vacuous.
 """
 from __future__ import annotations
 
@@ -22,7 +28,7 @@ import contextlib
 from dataclasses import dataclass, field
 from typing import List
 
-from .audit import AuditCase, _make_celu, trace_case
+from .audit import AuditCase, _make_celu, trace_case, trace_fleet_case
 
 
 @dataclass
@@ -154,6 +160,26 @@ def _mut_noise_before_encode() -> MutationResult:
                   "NoiseFirstTransport", r)
 
 
+def _mut_fleet_raw_send() -> MutationResult:
+    from ..core import compression as C
+    from ..core import engine as E
+
+    class RawLeakTransport(E.CompressedWANTransport):
+        """Planted bug: releases the raw cut tensor, codec ignored —
+        driven through the vmapped fleet step this time."""
+
+        def send(self, rng, x, res=None, direction: str = "up"):
+            return x, res
+
+    case = AuditCase(name="mut-fleet-raw-send", depth=2,
+                     compression="int8")
+    up, down = C.make_codec_pair("int8")
+    r = trace_fleet_case(case, transport=RawLeakTransport(
+        _make_celu(case), up, down))
+    return _grade("fleet-raw-send", "taint.raw-boundary",
+                  "RawLeakTransport", r)
+
+
 def _grade(name: str, expected_code: str, offender: str,
            result) -> MutationResult:
     hits = [f for f in result.findings
@@ -166,7 +192,7 @@ def _grade(name: str, expected_code: str, offender: str,
 def run_selftest():
     """-> (all caught?, per-mutation results)."""
     results = [_mut_raw_send(), _mut_under_count(), _mut_bad_blockspec(),
-               _mut_noise_before_encode()]
+               _mut_noise_before_encode(), _mut_fleet_raw_send()]
     return all(m.caught for m in results), results
 
 

@@ -58,10 +58,17 @@ def _measured_bytes(tp, direction: str, shape) -> Tuple[int, str]:
 
 
 def audit_wire(tp, celu, z_shapes: Sequence[Tuple[int, ...]],
-               trace: TraceAudit, n_computes: int, case: str
-               ) -> Tuple[List[Finding], Dict[str, Any]]:
+               trace: TraceAudit, n_computes: int, case: str,
+               jobs: int = 0) -> Tuple[List[Finding], Dict[str, Any]]:
     """Cross-check measured vs claimed vs reported bytes, and reconcile
-    the ledger against the boundary crossings the trace actually has."""
+    the ledger against the boundary crossings the trace actually has.
+
+    ``jobs > 0`` audits a BATCHED (vmapped fleet) trace: the byte ledger
+    is still per job — ``z_shapes`` stay unbatched and every
+    measured/claimed/reported check is unchanged — but each boundary
+    crossing in the jaxpr must carry the leading ``(jobs,)`` axis (one
+    mark moves the whole fleet's messages; a per-job mark count would
+    mean the job axis was unrolled and the fleet compiles N programs)."""
     from ..core.engine import CompressedWANTransport
 
     findings: List[Finding] = []
@@ -120,7 +127,8 @@ def audit_wire(tp, celu, z_shapes: Sequence[Tuple[int, ...]],
                 f"dispatch(es)) — an unaccounted send would move bytes "
                 f"the WAN clock never sees")
         for rec in recs:
-            want = tuple(z_shapes[rec.party % K])
+            want = ((jobs,) if jobs else ()) \
+                + tuple(z_shapes[rec.party % K])
             if rec.shape != want:
                 add("wire.boundary-shape",
                     f"{direction}:{rec.party}",
@@ -132,4 +140,6 @@ def audit_wire(tp, celu, z_shapes: Sequence[Tuple[int, ...]],
     stats["downlink_bytes"] = down_total
     stats["round_bytes"] = round_reported
     stats["boundaries"] = len(trace.boundaries)
+    if jobs:
+        stats["jobs"] = jobs
     return findings, stats

@@ -668,7 +668,7 @@ def init_state(task: KPartyTask, params: Dict[str, Any], opt: Optimizer,
 # --------------------------------------------------------------------------
 def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
                  n_local: int, tp, fused: bool, pipeline_staleness=0,
-                 lr_damping: float = 0.0):
+                 lr_damping: float = 0.0, cos_xi=None, rng_keys=None):
     """Build the round's two first-class stages over the shared state
     layout:
 
@@ -706,8 +706,23 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
     stage produces are damped accordingly — the FedBCD-style guard that
     keeps the sub-linear rate as queued staleness grows.  Depths 0/1 never
     pass a dynamic staleness, so their golden-pinned numerics are
-    untouched."""
-    cos_xi = xi_to_cos(celu.xi_degrees)
+    untouched.
+
+    ``cos_xi`` and ``rng_keys`` widen the stages to per-job TRACED
+    hyper-parameters for the vmapped fleet runner (``repro.fleet``):
+    ``cos_xi`` overrides the Algorithm-2 threshold (default: the static
+    ``xi_to_cos(celu.xi_degrees)``, bit-for-bit the historical constant)
+    and ``rng_keys`` is a ``{"exchange", "insert", "draw"}`` dict of PRNG
+    keys replacing the engine's fixed bases — a job with the default keys
+    reproduces the scalar engine's rng chain exactly, a job with
+    seed-folded keys draws an independent stream.  Both may be tracers
+    (closed over during a jit/vmap trace of the caller)."""
+    if cos_xi is None:
+        cos_xi = xi_to_cos(celu.xi_degrees)
+    if rng_keys is None:
+        rng_keys = {"exchange": jax.random.PRNGKey(17),
+                    "insert": jax.random.PRNGKey(0xCE1),
+                    "draw": jax.random.PRNGKey(29)}
     s_pipe = int(pipeline_staleness)
     uniform = celu.sampling == "uniform"
 
@@ -723,7 +738,7 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
     def exchange_compute(params, tstate, batches_a, batch_b, comm_rounds):
         pas, pb = params["a"], params["b"]
         K = len(pas)
-        rng = jax.random.fold_in(jax.random.PRNGKey(17), comm_rounds)
+        rng = jax.random.fold_in(rng_keys["exchange"], comm_rounds)
         keys = jax.random.split(rng, 2 * K)
         missing = [d for d in getattr(tp, "stateful_directions", ())
                    if d not in tstate]
@@ -785,7 +800,7 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
 
         # rounding noise for quantized-at-rest caches (unused — and DCE'd —
         # by the fp32 table); per-party keys keep the SR noise independent
-        ins_rng = jax.random.fold_in(jax.random.PRNGKey(0xCE1),
+        ins_rng = jax.random.fold_in(rng_keys["insert"],
                                      state["comm_rounds"])
         ws_a = [workset_insert(state["ws"]["a"][i],
                                {"z": zs[i], "dz": dzs[i],
@@ -825,7 +840,7 @@ def _make_stages(task: KPartyTask, opt: Optimizer, celu: CELUConfig, *,
         damp = _damp(staleness)
         scale = jnp.float32(1.0 / (K + 1))
         comm_rounds = state["comm_rounds"]
-        draw_base = jax.random.PRNGKey(29)
+        draw_base = rng_keys["draw"]
         if staleness is not None:
             # the depth-D queue can run several scans at the SAME
             # comm_rounds (warmup: no merges yet; manual local() calls

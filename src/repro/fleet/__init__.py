@@ -1,0 +1,18 @@
+"""Fleet-scale training: many CELU-VFL jobs as one compiled XLA program.
+
+``scheduler`` re-expresses the PipelinedEngine's host-side schedule as a
+device-side traced step (lax.cond over a traced queue phase) so it
+batches over a leading job axis; ``runner`` partitions a list of
+:class:`JobSpec` into compiled cohorts and runs each as a single
+``jit(scan(vmap(step)))``.  See docs/FLEET.md.
+"""
+from .runner import (FleetResult, FleetWorkload, JobSpec, cohort_key,
+                     run_fleet)
+from .scheduler import (ENGINE_RNG_BASES, FleetRoundState, JobHyper,
+                        average_flush_metrics, make_fleet_step)
+
+__all__ = [
+    "ENGINE_RNG_BASES", "FleetResult", "FleetRoundState", "FleetWorkload",
+    "JobHyper", "JobSpec", "average_flush_metrics", "cohort_key",
+    "make_fleet_step", "run_fleet",
+]

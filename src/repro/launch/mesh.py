@@ -36,3 +36,23 @@ def make_host_mesh():
 
 def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """1-D ``("fleet",)`` mesh over the host's devices — the job axis of
+    the vmapped fleet runner (``repro.fleet``) shards over it, one
+    contiguous block of jobs per device.
+
+    On CPU CI the device grid comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set in the
+    ENVIRONMENT of a fresh process (before jax's first import — see
+    launch/dryrun.py and the pod subprocess tests for the precedent);
+    this function never mutates device state itself."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), ("fleet",))
+
+
+def fleet_job_sharding(mesh):
+    """NamedSharding splitting a leading job axis over the fleet mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec("fleet"))

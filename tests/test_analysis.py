@@ -116,6 +116,45 @@ def test_depth_queue_case_audits_two_chained_dispatches():
     assert r.stats["boundaries"] == 8
 
 
+def test_fleet_case_audits_batched_state_clean():
+    """The vmapped fleet step (jobs stacked on a leading axis) passes the
+    same taint / ordering / byte-ledger analyses, with ONE boundary mark
+    per direction whose aval carries the job axis."""
+    from repro.analysis.audit import AUDIT_B, AUDIT_Z, trace_fleet_case
+
+    r = trace_fleet_case(jobs=3)
+    assert not r.errors, [f.detail for f in r.errors]
+    assert r.config["jobs"] == 3
+    # 1 party x (up + down) x 1 dispatch per step — batched, not unrolled:
+    # an unrolled job axis would triple the boundary count
+    assert r.stats["boundaries"] == 2
+    assert r.stats["jobs"] == 3
+    assert r.stats["pallas_calls"] > 0
+
+
+def test_fleet_case_boundary_shapes_carry_job_axis():
+    """audit_wire(jobs=N) must reject a boundary whose aval LOST the job
+    axis (the batching rule silently dropping marks would otherwise look
+    like a clean, narrower trace)."""
+    from repro.analysis.audit import AUDIT_B, AUDIT_Z, trace_fleet_case
+    from repro.analysis.taint import BoundaryRecord, TraceAudit
+    from repro.analysis.wire_audit import audit_wire
+    from repro.configs.base import CELUConfig
+    from repro.core import engine as E
+
+    celu = CELUConfig()
+    tp = E.make_transport(celu)
+    trace = TraceAudit(case="shape-probe")
+    for i, d in enumerate(("up", "down")):
+        trace.boundaries[i] = BoundaryRecord(
+            direction=d, party=0, transport="SimWANTransport",
+            shape=(AUDIT_B, AUDIT_Z), dtype="float32", satisfied=True)
+    findings, _ = audit_wire(tp, celu, [(AUDIT_B, AUDIT_Z)], trace,
+                             n_computes=1, case="shape-probe", jobs=3)
+    shape_errs = [f for f in findings if f.code == "wire.boundary-shape"]
+    assert len(shape_errs) == 2, [f.detail for f in findings]
+
+
 def test_pod_case_runs_or_skips_cleanly():
     r = trace_pod_case()
     assert not r.errors, [f.detail for f in r.errors]
@@ -135,7 +174,8 @@ def test_seeded_mutations_all_caught():
     missed = [m.name for m in results if not m.caught]
     assert ok, f"analyzer missed planted bug(s): {missed}"
     assert [m.name for m in results] == [
-        "raw-send", "under-count", "bad-blockspec", "noise-before-encode"]
+        "raw-send", "under-count", "bad-blockspec", "noise-before-encode",
+        "fleet-raw-send"]
 
 
 def test_raw_send_mutation_names_party_and_direction():

@@ -1,0 +1,315 @@
+"""Fleet runner gates: the batched device-side scheduler must be a
+bit-exact re-expression of the scalar engine, not a numerical cousin.
+
+  * N=1 vmap fleets (and N=3 ``mode="map"`` fleets) reproduce the K=1 and
+    K=3 golden traces bit-for-bit at depth 0, and PipelinedEngine's rows,
+    flush metrics, counters and final params bit-for-bit at depths 1/2.
+  * N=3 vmap lanes of identical jobs are bit-identical to EACH OTHER
+    (CPU XLA's batched GEMMs may sit a ULP off the unbatched program —
+    docs/FLEET.md — so cross-checking lanes, not the scalar engine, is
+    the right vmap invariant at N > 1).
+  * Stacked metrics keep the caller's job order across cohorts, traced
+    knobs (lr / xi / seed) batch inside one cohort, static knobs
+    partition it.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CELUConfig
+from repro.core import engine
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.fleet import (FleetWorkload, JobSpec, average_flush_metrics,
+                         cohort_key, run_fleet)
+from repro.models.tabular import DLRMConfig, make_dlrm
+from repro.optim import make_optimizer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "two_party_trace.json")
+GOLDEN3 = os.path.join(os.path.dirname(__file__), "golden",
+                       "three_party_trace.json")
+BASE = CELUConfig(R=3, W=3, xi_degrees=60.0)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def golden3():
+    with open(GOLDEN3) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    """The exact K=1 workload the two-party golden trace was recorded on,
+    lifted to a FleetWorkload (shared batch schedule, per-seed params)."""
+    spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
+                       n_train=2048, n_test=512)
+    data = make_tabular(spec, seed=0)
+    cfg = DLRMConfig("wdl", 4, 3, vocab=32, embed_dim=4, z_dim=8,
+                     hidden=(16, 8))
+    init_fn, task, _ = make_dlrm(cfg)
+    etask = engine.lift_two_party(task)
+    asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+
+    def params_for(seed):
+        p = init_fn(jax.random.PRNGKey(seed), cfg)
+        return engine.lift_two_party_params(p)
+
+    def batch_stream():
+        for bi, ba, bb in aligned_batches(data["train"], 64, seed=0):
+            yield bi, [asj(ba)], asj(bb)
+
+    return FleetWorkload(etask, params_for, batch_stream)
+
+
+def _rows(res, j, rounds, k3=False):
+    """FleetResult job ``j`` -> golden-comparable rows (same schema as
+    tests.test_engine._run_trace)."""
+    rows = []
+    for t in range(rounds):
+        rows.append({"loss": float(np.float32(res.losses[j, t])),
+                     "w_mean": float(np.float32(res.w_mean[j, t])),
+                     "w_zero_frac": float(np.float32(res.w_zero_frac[j, t])),
+                     "local_steps": int(res.local_steps[j, t])})
+    sa = res.steps_a[j] if k3 else res.steps_a[j][0]
+    rows.append({"steps_a": sa, "steps_b": int(res.steps_b[j]),
+                 "comm_rounds": int(res.comm_rounds[j])})
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Golden parity: the fleet IS the scalar engine
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("protocol", ["vanilla", "fedbcd", "celu"])
+def test_fleet_vmap_n1_matches_two_party_golden(protocol, workload, golden):
+    """A one-job vmap fleet reproduces the 20-round K=1 golden trace
+    bit-for-bit — protocol presets, counters and all."""
+    ccfg, nloc = engine.preset_config(protocol, BASE)
+    res = run_fleet([JobSpec(celu=ccfg, local_steps=nloc)], 20,
+                    workload=workload, mode="vmap")
+    assert _rows(res, 0, 20) == golden[protocol]
+    assert res.n_cohorts == 1 and res.mode == "vmap"
+
+
+def test_fleet_map_n3_matches_two_party_golden(workload, golden):
+    """A three-job ``mode="map"`` fleet of identical jobs runs the
+    UNBATCHED program per lane inside one compiled call: every lane is
+    bit-identical to the golden trace at any fleet size."""
+    ccfg, nloc = engine.preset_config("celu", BASE)
+    res = run_fleet([JobSpec(celu=ccfg, local_steps=nloc)] * 3, 20,
+                    workload=workload, mode="map")
+    for j in range(3):
+        assert _rows(res, j, 20) == golden["celu"], f"lane {j}"
+
+
+def test_fleet_vmap_n3_lanes_bit_identical(workload):
+    """vmap lanes of identical jobs must agree with EACH OTHER bitwise
+    (the N>1 vmap invariant; vs-scalar exactness at N>1 is mode="map"'s
+    contract, not vmap's — CPU batched GEMMs reassociate)."""
+    ccfg, nloc = engine.preset_config("celu", BASE)
+    res = run_fleet([JobSpec(celu=ccfg, local_steps=nloc)] * 3, 10,
+                    workload=workload, mode="vmap")
+    for arr in (res.losses, res.w_mean, res.w_zero_frac, res.local_steps):
+        for j in (1, 2):
+            np.testing.assert_array_equal(arr[j], arr[0])
+    p0 = jax.tree_util.tree_leaves(res.final_state(0)["params"])
+    for j in (1, 2):
+        pj = jax.tree_util.tree_leaves(res.final_state(j)["params"])
+        assert all(np.array_equal(a, b) for a, b in zip(p0, pj))
+
+
+def test_fleet_vmap_n1_matches_three_party_golden(golden3):
+    """The K=3 (two feature parties + B) golden trace survives the fleet
+    path bit-for-bit — the job axis composes with the K-party lists."""
+    from test_engine import _three_party_workload
+    task, celu, opt, data, split, params = _three_party_workload()
+
+    def batch_stream():
+        for bi, ba, bb in aligned_batches(data["train"], 64, seed=0):
+            bas, b = split(ba, bb)
+            yield bi, bas, b
+
+    wl = FleetWorkload(task, lambda seed: params, batch_stream)
+    res = run_fleet([JobSpec(celu=celu, lr=0.02)], 20, workload=wl,
+                    mode="vmap")
+    assert _rows(res, 0, 20, k3=True) == golden3["celu"]
+
+
+# --------------------------------------------------------------------------
+# Pipelined depths: fleet step/flush vs PipelinedEngine, bit for bit
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("depth", [1, 2])
+def test_fleet_vmap_n1_matches_pipelined_engine(depth, workload):
+    """At depths 1/2 the fleet's traced queue must replay
+    PipelinedEngine's host schedule exactly: per-round rows (NaN warmup
+    included), flush metrics, counters, final params."""
+    rounds = 12
+    ccfg, nloc = engine.preset_config("celu", BASE)
+    opt = make_optimizer("adagrad", 0.05)
+    pipe = engine.make_pipeline(workload.task, opt, ccfg, local_steps=nloc,
+                                depth=depth)
+    it = workload.batch_stream()
+    bi0, ba0, bb0 = next(it)
+    state = engine.init_state(workload.task, workload.params_for(0), opt,
+                              ccfg, ba0, bb0)
+    rs = pipe.init(state)
+    host_rows = []
+    it = workload.batch_stream()
+    for _ in range(rounds):
+        bi, ba, bb = next(it)
+        rs, m = pipe.step(rs, ba, bb, bi)
+        host_rows.append({k: np.float32(m[k]) for k in
+                          ("loss", "w_mean", "w_zero_frac")}
+                         | {"local_steps": int(m["local_steps"])})
+    rs, fm = pipe.flush(rs)
+    fin = pipe.finalize(rs)
+
+    res = run_fleet([JobSpec(celu=ccfg, local_steps=nloc, depth=depth)],
+                    rounds, workload=workload, mode="vmap")
+    for t, h in enumerate(host_rows):
+        for k in ("loss", "w_mean", "w_zero_frac"):
+            got = np.float32(getattr(res, {"loss": "losses"}.get(k, k))[0, t])
+            want = h[k]
+            assert (np.isnan(want) and np.isnan(got)) or got == want, \
+                (t, k, want, got)
+        assert int(res.local_steps[0, t]) == h["local_steps"], t
+    for k in ("w_mean", "w_zero_frac"):
+        assert np.float32(res.flush_metrics[k][0]) == np.float32(fm[k])
+    assert int(res.flush_metrics["local_steps"][0]) == int(fm["local_steps"])
+    assert int(res.comm_rounds[0]) == int(fin["comm_rounds"])
+    assert res.steps_a[0] == [int(s) for s in fin["steps"]["a"]]
+    assert int(res.steps_b[0]) == int(fin["steps"]["b"])
+    hp = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(np.asarray, fin["params"]))
+    fp = jax.tree_util.tree_leaves(res.final_state(0)["params"])
+    assert all(np.array_equal(a, b) for a, b in zip(hp, fp))
+
+
+# --------------------------------------------------------------------------
+# Stacked metrics, cohorts, traced knobs
+# --------------------------------------------------------------------------
+def test_fleet_traced_knobs_share_one_cohort(workload):
+    """lr / xi / seed vary per job WITHOUT recompiling: one cohort, one
+    compiled program, lanes genuinely different."""
+    ccfg, nloc = engine.preset_config("celu", BASE)
+    specs = [JobSpec(celu=ccfg, local_steps=nloc, lr=0.05, seed=0),
+             JobSpec(celu=ccfg, local_steps=nloc, lr=0.1, seed=1,
+                     xi_degrees=45.0),
+             JobSpec(celu=ccfg, local_steps=nloc, lr=0.02, seed=2,
+                     xi_degrees=75.0)]
+    assert len({cohort_key(s) for s in specs}) == 1
+    res = run_fleet(specs, 6, workload=workload, mode="vmap")
+    assert res.n_cohorts == 1 and res.cohort_sizes == [3]
+    assert res.losses.shape == (3, 6)
+    assert np.isfinite(res.losses).all()
+    # different lr/seed/xi => different trajectories, lane per lane
+    assert not np.array_equal(res.losses[0], res.losses[1])
+    assert not np.array_equal(res.losses[1], res.losses[2])
+    # one WAN round moves the same bytes for every job in the cohort
+    assert (res.round_wire_bytes > 0).all()
+    assert len(set(res.round_wire_bytes.tolist())) == 1
+
+
+def test_fleet_mixed_depths_partition_and_keep_order(workload):
+    """Static knobs (here: depth) split the fleet into cohorts, but the
+    result rows stay in the CALLER's job order and every job completes
+    all its rounds after the drain."""
+    rounds = 6
+    ccfg, nloc = engine.preset_config("celu", BASE)
+    specs = [JobSpec(celu=ccfg, local_steps=nloc, depth=0),
+             JobSpec(celu=ccfg, local_steps=nloc, depth=2),
+             JobSpec(celu=ccfg, local_steps=nloc, depth=0, lr=0.1)]
+    assert len({cohort_key(s) for s in specs}) == 2
+    res = run_fleet(specs, rounds, workload=workload, mode="vmap")
+    assert res.n_cohorts == 2 and sorted(res.cohort_sizes) == [1, 2]
+    assert (res.comm_rounds == rounds).all()   # depth-2 queue drained
+    # depth-0 jobs have no warmup NaNs; the depth-2 job has exactly one
+    assert np.isfinite(res.losses[0]).all()
+    assert np.isfinite(res.losses[2]).all()
+    assert np.isnan(res.losses[1, 0]) and np.isfinite(res.losses[1, 1:]).all()
+    # order preserved: jobs 0 and 2 differ only by lr
+    assert not np.array_equal(res.losses[0], res.losses[2])
+
+
+def test_average_flush_metrics_passthrough_and_average():
+    """Depth 0/1 metrics pass through; per-scan rows average with one
+    IEEE rounding per add (PipelinedEngine.flush's eager arithmetic)."""
+    m = {"local_steps": np.int32(6), "w_mean": np.float32(0.5),
+         "w_zero_frac": np.float32(0.25)}
+    assert average_flush_metrics(m) == m
+    rows = {"local_steps": jnp.int32(9),
+            "w_mean_scans": jnp.asarray([0.3, 0.0, 0.6], jnp.float32),
+            "w_zero_frac_scans": jnp.asarray([0.1, 0.0, 0.2], jnp.float32),
+            "n_scans": jnp.int32(2)}
+    out = average_flush_metrics(rows)
+    assert out["local_steps"] == 9
+    a, b = np.float32(0.3), np.float32(0.6)
+    assert out["w_mean"] == np.float32(
+        np.float32(np.float32(np.float32(0.0) + a) + np.float32(0.0) + b)
+        / np.float32(2.0))
+
+
+# --------------------------------------------------------------------------
+# Sharded fleet (host-platform device grid) — fresh process, like the
+# other multi-device lanes
+# --------------------------------------------------------------------------
+SHARD_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs.base import CELUConfig
+from repro.core import engine
+from repro.data.synthetic import TabularSpec, aligned_batches, make_tabular
+from repro.fleet import FleetWorkload, JobSpec, run_fleet
+
+assert len(jax.devices()) == 4
+spec = TabularSpec("criteo", fields_a=4, fields_b=3, vocab=32,
+                   n_train=2048, n_test=512)
+data = make_tabular(spec, seed=0)
+from repro.models.tabular import DLRMConfig, make_dlrm
+cfg = DLRMConfig("wdl", 4, 3, vocab=32, embed_dim=4, z_dim=8, hidden=(16, 8))
+init_fn, task, _ = make_dlrm(cfg)
+etask = engine.lift_two_party(task)
+asj = lambda d: {k: jnp.asarray(v) for k, v in d.items()}
+params_for = lambda seed: engine.lift_two_party_params(
+    init_fn(jax.random.PRNGKey(seed), cfg))
+def batch_stream():
+    for bi, ba, bb in aligned_batches(data["train"], 64, seed=0):
+        yield bi, [asj(ba)], asj(bb)
+wl = FleetWorkload(etask, params_for, batch_stream)
+base = CELUConfig(R=3, W=3, xi_degrees=60.0)
+ccfg, nloc = engine.preset_config("celu", base)
+specs = [JobSpec(celu=ccfg, local_steps=nloc, seed=s) for s in range(8)]
+sharded = run_fleet(specs, 4, workload=wl, mode="vmap", shard=True)
+plain = run_fleet(specs, 4, workload=wl, mode="vmap", shard=False)
+assert np.isfinite(sharded.losses).all()
+assert np.allclose(sharded.losses, plain.losses, rtol=1e-5, atol=1e-6), \\
+    np.abs(sharded.losses - plain.losses).max()
+print("FLEET_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_fleet_sharded_over_host_device_grid():
+    """An 8-job fleet sharded over a forced 4-device host grid agrees
+    with the unsharded run (device boundaries may re-tile GEMMs, so the
+    gate is allclose, not bitwise)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SHARD_CODE],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert "FLEET_SHARDED_OK" in r.stdout, \
+        (r.stdout[-500:], r.stderr[-2000:])
