@@ -15,7 +15,12 @@ Three classes of signal:
   * **Measured wall** — the ``WALL_KEYS`` metrics are wall measurements
     on a shared CI runner; each may drift up to ``--wall-tol`` (default
     25%) in its BAD direction before the gate trips (``local_step_ms``
-    regresses UP, ``jobs_per_sec`` regresses DOWN).
+    regresses UP, ``speedup_vs_sequential`` regresses DOWN).  A gated
+    wall metric that is present in the baseline but missing (or zero)
+    in the current run FAILS — a variant cannot dodge the gate by not
+    reporting.  Absolute-throughput keys (``INFO_WALL_KEYS``, e.g.
+    ``jobs_per_sec``) are reported on >tolerance drift but never gate:
+    they track the runner that wrote the baseline, not the code.
   * **Indicative** — any key starting with ``indicative_`` (e.g. the LLM
     table's ``indicative_cpu_tokens_per_sec``: CPU wall through
     interpreted Pallas kernels) is excluded from the gate BY CONTRACT,
@@ -45,8 +50,14 @@ DEFAULT_CURRENT = os.path.join(RESULTS_DIR, "BENCH_local_scan.json")
 EXACT_KEYS = ("cache_bytes", "stat_cache_bytes",
               "sample_hbm_bytes_per_step", "hbm_bytes_per_round")
 # measured per-variant wall metrics: (key, bad direction).  Tolerated up
-# to --wall-tol relative drift toward "bad".
-WALL_KEYS = (("local_step_ms", "up"), ("jobs_per_sec", "down"))
+# to --wall-tol relative drift toward "bad".  Only runner-relative
+# metrics belong here: the fleet table gates the speedup RATIO (both
+# sides measured on the same runner), not absolute throughput, which
+# tracks the machine that wrote the baseline, not the code.
+WALL_KEYS = (("local_step_ms", "up"), ("speedup_vs_sequential", "down"))
+# absolute wall metrics: reported on drift, never gated (not portable
+# across runners)
+INFO_WALL_KEYS = ("jobs_per_sec",)
 # keys carrying this prefix are non-claims and never gate
 INDICATIVE_PREFIX = "indicative_"
 
@@ -92,7 +103,15 @@ def compare(baseline: dict, current: dict, wall_tol: float = 0.25):
                              f"the baseline to ratchet)")
         for wall_key, bad in WALL_KEYS:
             b, c = base.get(wall_key), cur.get(wall_key)
-            if not (b and c):
+            if not b:
+                continue   # never gated for this variant
+            if not c:
+                # a gated metric cannot silently vanish or zero out —
+                # that's how a broken variant would dodge the gate
+                failures.append(
+                    f"{name}.{wall_key}: {b} in baseline but "
+                    f"{'missing' if c is None else c} in the current "
+                    f"run (gated wall metric must keep reporting)")
                 continue
             worse = c > b * (1.0 + wall_tol) if bad == "up" \
                 else c < b * (1.0 - wall_tol)
@@ -105,6 +124,19 @@ def compare(baseline: dict, current: dict, wall_tol: float = 0.25):
                     f"{wall_tol * 100:.0f}% tolerance)")
             elif better:
                 notes.append(f"{name}.{wall_key}: {b} -> {c} (improved)")
+        for info_key in INFO_WALL_KEYS:
+            b, c = base.get(info_key), cur.get(info_key)
+            if not b:
+                continue
+            if not c:
+                notes.append(f"{name}.{info_key}: {b} in baseline but "
+                             f"{'missing' if c is None else c} in the "
+                             f"current run (informational)")
+            elif abs(c / b - 1) > wall_tol:
+                notes.append(f"{name}.{info_key}: {b} -> {c} "
+                             f"({abs(c / b - 1) * 100:.0f}% drift; "
+                             f"informational — absolute throughput is "
+                             f"not runner-portable)")
     for name in cur_v:
         if name not in base_v:
             notes.append(f"new variant {name!r} not in baseline (not "

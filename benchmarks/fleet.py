@@ -13,8 +13,9 @@ sizes {1, 16, 128, 512}:
     ``benchmarks.compare`` as a wall metric (drift DOWN fails).
   * ``speedup_vs_sequential`` — fleet wall vs the sequential baseline:
     the same jobs run one-at-a-time through the scalar engine's jitted
-    round (compiled ONCE and reused — the baseline is not charged
-    recompiles, only per-round host dispatch).  Sequential wall is
+    round (every distinct lr's round is compiled AND run once untimed
+    before the clock starts — the baseline is never charged a compile,
+    only per-round host dispatch).  Sequential wall is
     measured on ``SEQ_SAMPLE`` jobs and scaled linearly (the loop is
     embarrassingly job-parallel on the host side, so the extrapolation
     is exact up to allocator noise; the measured count is recorded).
@@ -58,7 +59,14 @@ FLEET_SIZES = (1, 16, 128, 512)
 ROUNDS = 8                 # communication rounds per job (+ queue drain)
 BATCH = 64
 SEQ_SAMPLE = 8             # sequential-baseline jobs actually timed
-MIN_SPEEDUP = 5.0          # --check floor on speedup_vs_sequential @ 128
+MIN_SPEEDUP = 1.5          # --check floor on speedup_vs_sequential @ 128
+# Why 1.5 and not higher: with the sequential baseline honestly warmed
+# (no compiles in the timed loop) the measured win at N=128 is ~2.5x on
+# a single-core dev box — the fleet's whole schedule is already ONE
+# lax.scan'd program, so what remains is batched-op efficiency, not
+# dispatch amortization.  The floor asserts "genuinely faster" with
+# headroom for runner variance; the compare gate's 25% drift tolerance
+# vs the committed baseline does the fine-grained ratcheting.
 BASE = CELUConfig(R=3, W=3, xi_degrees=60.0)
 
 
@@ -97,11 +105,12 @@ def job_specs(n: int, depth: int = 0):
 
 def sequential_baseline(workload: FleetWorkload, rounds: int,
                         n_sample: int):
-    """Per-job wall of the host-loop baseline: the jitted scalar round is
-    compiled ONCE (first job, excluded), then each job pays only python
-    dispatch + device time, round by round."""
+    """Per-job wall of the host-loop baseline: every distinct lr's jitted
+    round is compiled AND executed once untimed, so the timed loop pays
+    only python dispatch + device time, round by round — never an XLA
+    compile."""
     ccfg, nloc = engine.preset_config("celu", BASE)
-    specs = job_specs(n_sample + 1)
+    specs = job_specs(n_sample)
 
     sched = []
     it = workload.batch_stream()
@@ -109,16 +118,28 @@ def sequential_baseline(workload: FleetWorkload, rounds: int,
         bi, ba, bb = next(it)
         sched.append((bi, ba, bb))
 
-    walls = []
+    # lr is baked into the jitted round: a REAL sequential sweep
+    # recompiles per distinct lr.  Be generous to the baseline: compile
+    # every lr the sample will use and run one untimed warmup round
+    # each, so the timed walls below are pure steady-state dispatch.
     rnd_cache = {}
-    for j, spec in enumerate(specs):
+    for spec in specs:
+        if spec.lr in rnd_cache:
+            continue
         opt = make_optimizer(spec.optimizer, spec.lr)
-        # lr is baked into the jitted round: a REAL sequential sweep
-        # recompiles per distinct lr — cache per lr to be generous to
-        # the baseline (charge steady-state dispatch, not compiles)
-        if spec.lr not in rnd_cache:
-            rnd_cache[spec.lr] = engine.make_round(
-                workload.task, opt, ccfg, local_steps=spec.local_steps)
+        rnd = engine.make_round(workload.task, opt, ccfg,
+                                local_steps=spec.local_steps)
+        state = engine.init_state(workload.task,
+                                  workload.params_for(spec.seed), opt,
+                                  ccfg, sched[0][1], sched[0][2])
+        bi, ba, bb = sched[0]
+        state, _ = rnd(state, ba, bb, bi)
+        jax.block_until_ready(state)
+        rnd_cache[spec.lr] = rnd
+
+    walls = []
+    for spec in specs:
+        opt = make_optimizer(spec.optimizer, spec.lr)
         rnd = rnd_cache[spec.lr]
         state = engine.init_state(workload.task,
                                   workload.params_for(spec.seed), opt,
@@ -127,8 +148,7 @@ def sequential_baseline(workload: FleetWorkload, rounds: int,
         for bi, ba, bb in sched:
             state, m = rnd(state, ba, bb, bi)
         jax.block_until_ready(state)
-        if j > 0:          # job 0 is the compile warmup
-            walls.append(time.perf_counter() - t0)
+        walls.append(time.perf_counter() - t0)
     return float(np.mean(walls))
 
 
@@ -178,8 +198,9 @@ def run_table(sizes=FLEET_SIZES, rounds=ROUNDS, seq_sample=SEQ_SAMPLE):
                      "fleet_sizes": list(sizes)},
         "sequential": {"jobs_measured": seq_sample,
                        "per_job_wall_s": round(per_job_seq, 4),
-                       "note": "jitted scalar round compiled once per "
-                               "distinct lr; wall scaled linearly to N"},
+                       "note": "jitted scalar round compiled and warmed "
+                               "untimed per distinct lr; wall scaled "
+                               "linearly to N"},
         "variants": variants,
     }
 
