@@ -1,9 +1,10 @@
 """Benchmark-regression gate: diff a fresh benchmark JSON against its
-committed baseline.  Gates three files in CI: ``BENCH_local_scan.json``
+committed baseline.  Gates four files in CI: ``BENCH_local_scan.json``
 (vs ``results/BENCH_baseline.json``), the LLM-geometry memory table
-``BENCH_llm.json`` (vs ``results/BENCH_llm_baseline.json``) and the
+``BENCH_llm.json`` (vs ``results/BENCH_llm_baseline.json``), the
 fleet-throughput table ``BENCH_fleet.json`` (vs
-``results/BENCH_fleet_baseline.json``).
+``results/BENCH_fleet_baseline.json``) and the serving table
+``BENCH_serve.json`` (vs ``results/BENCH_serve_baseline.json``).
 
 Three classes of signal:
 
@@ -56,8 +57,11 @@ EXACT_KEYS = ("cache_bytes", "stat_cache_bytes",
 # tracks the machine that wrote the baseline, not the code.
 WALL_KEYS = (("local_step_ms", "up"), ("speedup_vs_sequential", "down"))
 # absolute wall metrics: reported on drift, never gated (not portable
-# across runners)
-INFO_WALL_KEYS = ("jobs_per_sec",)
+# across runners).  The serve table's latency/throughput keys live here
+# for the same reason the fleet table's do: the RATIO
+# (speedup_vs_sequential) gates; absolutes track the runner.
+INFO_WALL_KEYS = ("jobs_per_sec", "requests_per_sec", "tokens_per_sec",
+                  "p50_token_latency_ms", "p99_token_latency_ms")
 # keys carrying this prefix are non-claims and never gate
 INDICATIVE_PREFIX = "indicative_"
 

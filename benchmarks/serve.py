@@ -1,0 +1,278 @@
+"""Serving throughput/latency: continuous batching over the party
+boundary vs the sequential per-request loop -> ``results/BENCH_serve.json``.
+
+The claim behind ``repro.serve``: one vmapped decode step over a
+fixed-capacity lane array amortizes per-token dispatch across every
+in-flight request, and the quantized activation ring + compressed uplink
+shrink what crosses the party boundary per token — without changing the
+greedy output (bit-exact at fp32, greedy-matched at int8).  The table
+measures, at reduced smollm-360m geometry on the seeded open-loop load:
+
+  * ``speedup_vs_sequential`` — closed-burst engine wall vs the SAME
+    requests run one-at-a-time through the jitted monolithic
+    prefill+decode loop (both sides honestly warmed: every jitted
+    function is compiled AND executed untimed before the clock starts).
+    Gated by ``benchmarks.compare`` as a wall metric (drift DOWN fails);
+    the ``--check`` gate (CI) requires >= {MIN_SPEEDUP}x at capacity 8.
+  * ``requests_per_sec`` / ``tokens_per_sec`` — absolute throughput,
+    informational only (tracks the runner, not the code).
+  * ``p50_token_latency_ms`` / ``p99_token_latency_ms`` — per-token
+    latency percentiles under the open-loop Poisson load (arrival ->
+    first token, then inter-token gaps), informational.
+  * ``*_wire_bytes`` — exact per-message serving wire bytes (prefill
+    uplink, per-token uplink, per-token downlink, whole-run total):
+    deterministic counters, ANY increase fails the gate.
+  * ``greedy_match_rate`` — fraction of generated tokens identical to
+    the fp32 sequential reference (reported, not gated: an argmax near a
+    tie may flip under quantization noise at random-init geometry).
+
+``wire_full_*`` variants publish the analytic uplink bytes at FULL
+smollm-360m geometry (d_model 960) — pure ``wire_bytes()`` math, no
+model is instantiated.
+
+    PYTHONPATH=src python -m benchmarks.serve [--check] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.compression import IdentityCodec, StochasticQuantCodec
+from repro.models import vfl
+from repro.serve import (LoadSpec, Request, ServeConfig, ServeEngine,
+                         make_naive_fns, naive_generate, synth_requests)
+
+from .common import csv_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "BENCH_serve.json")
+
+ARCH = "smollm-360m"
+CAPACITY = 8
+PROMPT_LEN = 16
+MAX_NEW = 16
+N_REQUESTS = 32
+PARAM_SEED = 2
+MIN_SPEEDUP = 2.0          # --check floor on speedup_vs_sequential @ cap 8
+# Why 2.0: the engine's decode step does CAPACITY lanes of work per
+# dispatch where the sequential loop pays one dispatch per token per
+# request; at capacity 8 on a single-core dev box the measured win is
+# ~4-5x (both sides compile-free), so 2.0 asserts "genuinely faster"
+# with headroom for runner variance.  The compare gate's 25% drift
+# tolerance vs the committed baseline does the fine-grained ratcheting.
+
+
+def _requests(cfg, rate: float):
+    spec = LoadSpec(n_requests=N_REQUESTS, rate=rate,
+                    prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                    min_new_tokens=4, seed=0)
+    return synth_requests(spec, cfg)
+
+
+def sequential_baseline(params, cfg, requests):
+    """Wall of serving the burst one request at a time through the
+    jitted monolithic loop (compiled + run once untimed first), plus the
+    per-request fp32 greedy references."""
+    fns = make_naive_fns(cfg, PROMPT_LEN + MAX_NEW)
+    batch = lambda r: {"tokens": jnp.asarray(r.prompt[None]),
+                       "tokens_a": jnp.asarray(r.prompt_a[None])}
+    warm = naive_generate(params, cfg, batch(requests[0]), MAX_NEW,
+                          fns=fns)
+    jax.block_until_ready(warm)
+    refs = {}
+    t0 = time.perf_counter()
+    for r in requests:
+        toks = naive_generate(params, cfg, batch(r), r.max_new_tokens,
+                              fns=fns)
+        refs[r.req_id] = np.asarray(toks)[0]
+    wall = time.perf_counter() - t0
+    return wall, refs
+
+
+def run_engine_variant(name, params, cfg, scfg, refs, seq_wall, variants):
+    eng = ServeEngine(params, cfg, scfg)
+    t0 = time.perf_counter()
+    eng.warm()
+    compile_s = time.perf_counter() - t0
+
+    # closed burst: throughput + exact byte counters
+    burst = [Request(r.req_id, r.prompt, r.prompt_a, r.max_new_tokens)
+             for r in _requests(cfg, rate=0.0)]
+    comps, stats = eng.run(burst)
+    wall = stats["virtual_duration_s"]
+    total_tokens = stats["total_tokens"]
+    matched = sum(int(np.sum(refs[c.req_id][:len(c.tokens)] == c.tokens))
+                  for c in comps)
+
+    # open loop at ~70% of measured throughput: latency percentiles
+    rate = 0.7 * len(comps) / wall
+    open_reqs = _requests(cfg, rate=rate)
+    eng2 = ServeEngine(params, cfg, scfg).warm()
+    comps2, _ = eng2.run(open_reqs)
+    lats = []
+    for c in comps2:
+        prev = c.arrival
+        for t in c.token_times:
+            lats.append(t - prev)
+            prev = t
+    lats_ms = 1e3 * np.asarray(lats)
+
+    row = {
+        "capacity": scfg.capacity,
+        "n_requests": len(comps),
+        "total_tokens": total_tokens,
+        "compression": scfg.compression or "fp32",
+        "cache_dtype": scfg.cache_dtype,
+        "refresh_every": scfg.refresh_every,
+        "engine_wall_s": round(wall, 4),
+        "sequential_wall_s": round(seq_wall, 4),
+        "speedup_vs_sequential": round(seq_wall / wall, 2),
+        "requests_per_sec": round(len(comps) / wall, 2),
+        "tokens_per_sec": round(total_tokens / wall, 1),
+        "p50_token_latency_ms": round(float(np.percentile(lats_ms, 50)), 3),
+        "p99_token_latency_ms": round(float(np.percentile(lats_ms, 99)), 3),
+        "openloop_rate_req_s": round(rate, 2),
+        "prefill_up_wire_bytes": eng.prefill_up_bytes,
+        "decode_token_up_wire_bytes": eng.step_up_bytes,
+        "token_down_wire_bytes": eng.token_down_bytes,
+        "run_wire_bytes": stats["wire_up_bytes"] + stats["wire_down_bytes"],
+        "greedy_match_rate": round(matched / total_tokens, 4),
+        "indicative_compile_s": round(compile_s, 2),
+    }
+    variants[name] = row
+    csv_row(name, f"{row['speedup_vs_sequential']}x",
+            row["requests_per_sec"], row["tokens_per_sec"],
+            row["p50_token_latency_ms"], row["p99_token_latency_ms"],
+            row["decode_token_up_wire_bytes"], row["greedy_match_rate"])
+    return row
+
+
+def wire_math_variant(name, d_model, prompt_len, codec, variants):
+    """Analytic uplink accounting at FULL geometry: bytes for the prompt's
+    (S, d) crossing and each decode token's (d,) row — ``wire_bytes()``
+    only, nothing instantiated."""
+    row = {
+        "d_model": d_model,
+        "prompt_len": prompt_len,
+        "codec": type(codec).__name__,
+        "prefill_up_wire_bytes": int(codec.wire_bytes((prompt_len, d_model),
+                                                      jnp.float32)),
+        "decode_token_up_wire_bytes": int(codec.wire_bytes((d_model,),
+                                                           jnp.float32)),
+    }
+    variants[name] = row
+    csv_row(name, "-", "-", "-", "-", "-",
+            row["decode_token_up_wire_bytes"], "-")
+    return row
+
+
+def run_table():
+    cfg = get_config(ARCH).reduced()
+    params = vfl.init_all(jax.random.PRNGKey(PARAM_SEED), cfg)
+    requests = _requests(cfg, rate=0.0)
+    seq_wall, refs = sequential_baseline(params, cfg, requests)
+    n_tok = sum(r.max_new_tokens for r in requests)
+    csv_row(f"# serve: {N_REQUESTS} requests x <= {MAX_NEW} tokens "
+            f"({n_tok} total), capacity {CAPACITY}, sequential baseline "
+            f"{seq_wall:.2f} s (warmed)")
+    csv_row("variant", "speedup", "req/s", "tok/s", "p50_ms", "p99_ms",
+            "up_B/tok", "greedy_match")
+
+    variants = {}
+    base = dict(capacity=CAPACITY, prompt_len=PROMPT_LEN,
+                max_new_tokens=MAX_NEW, ring_slots=4, seed=0)
+    run_engine_variant(
+        "serve_cb8_fp32", params, cfg,
+        ServeConfig(compression="", cache_dtype="float32", **base),
+        refs, seq_wall, variants)
+    run_engine_variant(
+        "serve_cb8_int8", params, cfg,
+        ServeConfig(compression="int8", cache_dtype="int8", **base),
+        refs, seq_wall, variants)
+    run_engine_variant(
+        "serve_cb8_int8_stale2", params, cfg,
+        ServeConfig(compression="int8", cache_dtype="int8",
+                    refresh_every=2, **base),
+        refs, seq_wall, variants)
+
+    full = get_config(ARCH)
+    wire_math_variant("wire_full_smollm360m_fp32", full.d_model, 128,
+                      IdentityCodec(), variants)
+    wire_math_variant("wire_full_smollm360m_int8", full.d_model, 128,
+                      StochasticQuantCodec(bits=8), variants)
+
+    return {
+        "geometry": {"arch": ARCH, "reduced": True, "capacity": CAPACITY,
+                     "prompt_len": PROMPT_LEN, "max_new_tokens": MAX_NEW,
+                     "n_requests": N_REQUESTS, "param_seed": PARAM_SEED},
+        "load": {"generator": "seeded open-loop Poisson "
+                              "(repro.serve.loadgen)",
+                 "burst_note": "throughput + byte counters from the "
+                               "closed burst (rate=0); latency "
+                               "percentiles from an open-loop run at "
+                               "~70% of measured throughput"},
+        "variants": variants,
+    }
+
+
+def smoke() -> int:
+    """CI fast-lane smoke: admit + 2 decode steps at reduced geometry
+    through the int8 wire/ring, finite tokens out."""
+    cfg = get_config(ARCH).reduced()
+    params = vfl.init_all(jax.random.PRNGKey(PARAM_SEED), cfg)
+    scfg = ServeConfig(capacity=4, prompt_len=8, max_new_tokens=3,
+                       compression="int8", cache_dtype="int8",
+                       ring_slots=2)
+    eng = ServeEngine(params, cfg, scfg).warm()
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                    rng.integers(0, cfg.aux_vocab_size, 8,
+                                 dtype=np.int32), 3)
+            for i in range(4)]
+    comps, stats = eng.run(reqs)
+    ok = (len(comps) == 4 and stats["total_tokens"] == 12
+          and all(np.all((c.tokens >= 0) & (c.tokens < cfg.vocab_size))
+                  for c in comps))
+    csv_row(f"# serve smoke: 4 requests x 3 tokens (2 decode steps), "
+            f"int8 wire+ring -> {'OK' if ok else 'BAD TOKENS'}")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit non-zero if speedup_vs_sequential at "
+                         f"capacity {CAPACITY} drops below {MIN_SPEEDUP}x")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run ONLY the 2-decode-step smoke and exit")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
+
+    out = run_table()
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    csv_row(f"# wrote {os.path.normpath(RESULTS)}")
+
+    if args.check:
+        key = "serve_cb8_fp32"
+        sp = out["variants"][key]["speedup_vs_sequential"]
+        if sp < MIN_SPEEDUP:
+            print(f"[FAIL] {key}.speedup_vs_sequential = {sp}x < "
+                  f"{MIN_SPEEDUP}x floor")
+            return 1
+        print(f"serve gate: OK ({key} {sp}x >= {MIN_SPEEDUP}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

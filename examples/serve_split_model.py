@@ -1,6 +1,17 @@
-"""Serve a split VFL model: batched prefill + token-by-token decode with the
-party boundary kept as a module boundary.  Uses the VLM config (Party A =
-vision owner supplying patch embeddings) reduced for CPU.
+"""Serve a split VFL model at production shape: continuous batching over
+the party boundary.
+
+Two runs of the serving CLI (repro.launch.serve), both reduced for CPU:
+
+  * smollm-360m (fusion="add"): the ServeEngine path — requests admit
+    into a fixed-capacity lane array and evict mid-flight, every decode
+    step is ONE compiled program over all lanes, the cut activation
+    crosses the int8 uplink and Party B fuses it from the quantized
+    activation ring.  Prints requests/sec, p50/p99 token latency, and
+    exact wire bytes per token.
+  * llama-3.2-vision-90b (cross-attn): the sequential fallback — the
+    vision memory crosses once at prefill, decode is Party-B-local, so
+    there is no per-token activation to batch over the wire.
 
     PYTHONPATH=src python examples/serve_split_model.py
 """
@@ -13,10 +24,13 @@ from repro.launch import serve as S  # noqa: E402
 
 
 def main():
-    S.main(["--arch", "llama-3.2-vision-90b", "--prompt-len", "16",
-            "--gen", "8", "--batch", "2"])
-    S.main(["--arch", "xlstm-125m", "--prompt-len", "16",
-            "--gen", "8", "--batch", "2"])
+    # continuous-batching engine: 12 requests through 4 lanes
+    S.main(["--arch", "smollm-360m", "--requests", "12", "--capacity", "4",
+            "--prompt-len", "16", "--gen", "8"])
+    print()
+    # cross-attn family: sequential naive_generate fallback
+    S.main(["--arch", "llama-3.2-vision-90b", "--requests", "2",
+            "--prompt-len", "16", "--gen", "8"])
 
 
 if __name__ == "__main__":

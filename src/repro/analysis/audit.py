@@ -695,11 +695,149 @@ def trace_pod_case() -> CaseResult:
 
 
 # --------------------------------------------------------------------------
+# Serving (continuous-batching decode) case
+# --------------------------------------------------------------------------
+def trace_serve_case(transport=None) -> CaseResult:
+    """Audit ONE exchange decode step of the serving engine
+    (``repro.serve.engine.make_step_fn`` with ``exchange=True``) at
+    reduced smollm-360m geometry.
+
+    The serving boundary theorem: Party A's raw material (embedding
+    params, tower KV cache, aux token) may reach Party B's logits — and
+    hence the emitted token — ONLY through the uplink boundary (wire +
+    codec encode under int8 compression), and the activation ring Party B
+    fuses against may hold ONLY released (post-wire) rows.  Concretely
+    the output tags require: new ``cache_a`` stays with A, new
+    ``cache_b`` / the token stay with B, the ring contents and A's next
+    aux token (downlink product) are fully released.  A refactor that
+    inserts the pre-wire ``z`` into the ring, or derives ``token_a``
+    from the logits without the downlink crossing, fails this case."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config
+    from ..configs.base import CELUConfig
+    from ..core import engine as E
+    from ..models import vfl
+    from ..serve.engine import ServeConfig, ServeEngine, make_step_fn
+    from .markers import AuditedTransport, instrumented
+
+    name = "serve-cb2-int8-int8"
+    cfg = get_config("smollm-360m").reduced()
+    scfg = ServeConfig(capacity=2, prompt_len=4, max_new_tokens=2,
+                       compression="int8", cache_dtype="int8",
+                       ring_slots=2)
+    celu = CELUConfig(compression="int8/identity")
+    tp_inner = transport if transport is not None \
+        else E.make_transport(celu)
+    tp = AuditedTransport(tp_inner, celu)
+    params = vfl.init_all(jax.random.PRNGKey(0), cfg)
+    # the engine only supplies the stacked state template; the traced fn
+    # is the raw (unjitted) exchange step wired to the audited transport
+    state = ServeEngine(params, cfg, scfg).state
+    step = make_step_fn(cfg, scfg, tp, exchange=True)
+    args = (params, state, jax.random.PRNGKey(0))
+
+    tp._counts.clear()
+    with instrumented():
+        closed, out_sds = jax.make_jaxpr(step, return_shape=True)(*args)
+
+    a, b = raw_of("a0"), raw_of("b")
+    in_tags = (
+        {"a": _const(params["a"], a), "b": _const(params["b"], b)},
+        {"cache_a": _const(state["cache_a"], a),
+         "cache_b": _const(state["cache_b"], b),
+         # ring rows are RELEASED messages; tokens already crossed the
+         # downlink; the schedule vectors are public
+         "ws": _const(state["ws"], EMPTY),
+         "active": EMPTY, "pos": EMPTY,
+         "token": b,            # B's own last emission feeds only B
+         "token_a": EMPTY,      # A's aux token is a downlink product
+         "remaining": EMPTY},
+        EMPTY)                  # rng
+    in_leaves = jax.tree_util.tree_leaves(
+        in_tags, is_leaf=lambda x: isinstance(x, Taint))
+    assert len(in_leaves) == len(closed.jaxpr.invars), \
+        (name, len(in_leaves), len(closed.jaxpr.invars))
+
+    A0, B = frozenset({"a0"}), frozenset({"b"})
+
+    def reg(tree, allowed, label):
+        return jax.tree_util.tree_map(lambda _: OutTag(allowed, label),
+                                      tree)
+
+    st_sds, tok_sds, prod_sds = out_sds
+    out_tags = (
+        {"cache_a": reg(st_sds["cache_a"], A0, "serve.cache_a"),
+         "cache_b": reg(st_sds["cache_b"], B, "serve.cache_b"),
+         "ws": reg(st_sds["ws"], _PUBLIC, "serve.ws"),
+         "active": OutTag(_PUBLIC, "serve.active"),
+         "pos": OutTag(_PUBLIC, "serve.pos"),
+         "token": OutTag(B, "serve.token"),
+         "token_a": OutTag(_PUBLIC, "serve.token_a"),
+         "remaining": OutTag(_PUBLIC, "serve.remaining")},
+        reg(tok_sds, B, "serve.tokens"),
+        OutTag(_PUBLIC, "serve.produced"))
+    out_leaves = jax.tree_util.tree_leaves(
+        out_tags, is_leaf=lambda x: isinstance(x, OutTag))
+
+    trace = audit_trace(closed, in_leaves, out_leaves, case=name)
+    # Declared exception: the downlink carries a token ID as float32 (the
+    # wire dtype) and Party A converts it back with float32->int32.  The
+    # cast lint counts every f->i conversion as narrowing, but this one
+    # is exact by construction — token ids < 2^24 are exactly
+    # representable in float32 — and it sits AFTER the wire mark, so no
+    # declared stage can clear it.  Any OTHER cast on any other output
+    # still fails the case.
+    def _declared_token_cast(f):
+        return (f.code == "kernel.unmediated-cast"
+                and f.where == "serve.token_a"
+                and "float32->int32" in f.detail
+                and "bf16" not in f.detail and "int8" not in f.detail)
+    declared = [f for f in trace.findings if _declared_token_cast(f)]
+    findings = [f for f in trace.findings if not _declared_token_cast(f)]
+    findings += _check_collectives(trace, name)
+
+    # one vmapped uplink mark (the C stacked z rows) + one vmapped
+    # downlink mark (the C token ids) per exchange step
+    ups = [r for r in trace.boundaries.values() if r.direction == "up"]
+    downs = [r for r in trace.boundaries.values() if r.direction == "down"]
+    if len(ups) != 1 or len(downs) != 1:
+        findings.append(Finding(
+            code="audit.no-boundaries", severity="error",
+            where="serve exchange step",
+            detail=f"expected exactly 1 uplink + 1 downlink boundary "
+                   f"mark (the vmapped per-lane sends), found "
+                   f"{len(ups)} up / {len(downs)} down — a decode "
+                   f"release is bypassing the serving wire",
+            case=name))
+    if not trace.pallas_calls:
+        findings.append(Finding(
+            code="audit.no-pallas", severity="warning",
+            where="serve exchange step",
+            detail="int8 ring read did not trace through a fused "
+                   "gather→dequant pallas_call", case=name))
+
+    stats = {"eqns": len(closed.jaxpr.eqns),
+             "boundaries": len(trace.boundaries),
+             "uplink_marks": len(ups), "downlink_marks": len(downs),
+             "pallas_calls": len(trace.pallas_calls),
+             "declared_token_id_casts": len(declared)}
+    return CaseResult(
+        name=name,
+        config={"capacity": scfg.capacity, "compression": "int8/identity",
+                "cache_dtype": scfg.cache_dtype, "arch": "smollm-360m",
+                "reduced": True},
+        findings=findings, stats=stats)
+
+
+# --------------------------------------------------------------------------
 # Entry point
 # --------------------------------------------------------------------------
 def run_audit(cases: Optional[Sequence[AuditCase]] = None, *,
               include_pod: bool = True,
               include_fleet: bool = True,
+              include_serve: bool = True,
               include_kernel_lint: bool = True) -> AuditReport:
     import jax
 
@@ -720,6 +858,8 @@ def run_audit(cases: Optional[Sequence[AuditCase]] = None, *,
         results.append(trace_case(case))
     if include_fleet:
         results.append(trace_fleet_case())
+    if include_serve:
+        results.append(trace_serve_case())
     if include_pod:
         results.append(trace_pod_case())
     return AuditReport(

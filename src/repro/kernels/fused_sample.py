@@ -159,6 +159,75 @@ def fused_sample_q8_2d(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi, *,
                                     thresh), ring, B, F, bb, interpret)
 
 
+# --------------------------------------------------------------------------
+# Gather → dequant only (no weighting): the serving decode-activation read.
+# Same scalar-prefetch gather as the sample kernels — only the selected
+# slot's blocks are DMA'd out of the quantized ring — but the body is the
+# bare dequant: serving consumes the cached cross-party activation as-is
+# (there is no ad-hoc statistic to cosine-weight against at decode time).
+# --------------------------------------------------------------------------
+def _kernel_dq8(slot_ref, zq_ref, zs_ref, out_ref):
+    del slot_ref                             # consumed by the index maps
+    out_ref[...] = zq_ref[0].astype(jnp.float32) * zs_ref[0][:, None]
+
+
+def _kernel_dq4(slot_ref, zq_ref, zs_ref, out_ref):
+    del slot_ref
+    out_ref[...] = _unpack4(zq_ref[0]) * zs_ref[0][:, None]
+
+
+def _call_dequant(kernel, slot, operands, ring_specs, B, F, bb, interpret):
+    """pallas_call plumbing for the dequant-only kernels: scalar-prefetch
+    slot + per-ring slot-indexed blocks -> one (B, F) fp32 output."""
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // bb,),
+        in_specs=ring_specs,
+        out_specs=pl.BlockSpec((bb, F), lambda i, s: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, F), jnp.float32),
+        interpret=interpret,
+    )(slot, *operands)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_dequant_q8_2d(slot, zq, zscale, *, interpret: bool = True):
+    """Gather + dequantize ONE int8 ring entry.  slot: (1,) int32; zq:
+    (W, B, F) int8 codes, zscale: (W, B) fp32 per-row scales.  -> (B, F)
+    fp32 rows of the entry at ``slot``; no full-precision ring copy ever
+    exists in HBM."""
+    W, B, F = zq.shape
+    bb = min(BLOCK_B, B)
+    assert B % bb == 0, (B, bb)
+    ring = [
+        pl.BlockSpec((1, bb, F), lambda i, s: (s[0], i, 0)),
+        pl.BlockSpec((1, bb), lambda i, s: (s[0], i)),
+    ]
+    return _call_dequant(_kernel_dq8, slot, (zq, zscale), ring, B, F, bb,
+                         interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_dequant_q4_2d(slot, zq, zscale, *, interpret: bool = True):
+    """Gather + unpack + dequantize ONE int4 nibble-packed ring entry.
+    zq: (W, B, F // 2) packed uint8, zscale: (W, B) fp32 row scales.
+    -> (B, F) fp32 (F = 2 * packed width; the caller slices any pad
+    column)."""
+    W, B, P = zq.shape
+    F = 2 * P
+    bb = min(BLOCK_B, B)
+    assert B % bb == 0, (B, bb)
+    ring = [
+        pl.BlockSpec((1, bb, P), lambda i, s: (s[0], i, 0)),
+        pl.BlockSpec((1, bb), lambda i, s: (s[0], i)),
+    ]
+    return _call_dequant(_kernel_dq4, slot, (zq, zscale), ring, B, F, bb,
+                         interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fused_sample_q4_2d(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi, *,
                        interpret: bool = True):

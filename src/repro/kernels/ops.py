@@ -92,6 +92,25 @@ def fused_gather_weight_q4(slot, ad_hoc, zq, zscale, dzq, dzscale, cos_xi):
     return w, cot[:, :F].reshape(ad_hoc.shape)
 
 
+def fused_gather_dequant_q8(slot, zq, zscale):
+    """Gather + dequantize one int8 ring entry (the serving decode-cache
+    read: the cached cross-party activation comes straight out of the
+    quantized ring, no weighting).  zq: (W, B, F) int8, zscale: (W, B)
+    fp32 row scales.  -> (B, F) fp32."""
+    return _fs.fused_dequant_q8_2d(_slot1(slot), zq, zscale,
+                                   interpret=INTERPRET)
+
+
+def fused_gather_dequant_q4(slot, zq, zscale, width: int):
+    """Gather + unpack + dequantize one int4 nibble-packed ring entry.
+    zq: (W, B, ceil(F/2)) packed uint8, zscale: (W, B) fp32 row scales,
+    width: the true row width F (the pad nibble of odd rows is sliced
+    off).  -> (B, F) fp32."""
+    out = _fs.fused_dequant_q4_2d(_slot1(slot), zq, zscale,
+                                  interpret=INTERPRET)
+    return out[:, :width]
+
+
 def quantize_stochastic(x, u, levels):
     """Fused per-tile absmax-scale stochastic-rounding quantizer.
 

@@ -80,6 +80,22 @@ def fused_sample_q4_ref(slot, ad_hoc, zq, zscale, dzq, dzscale,
     return w, (dz * w[:, None])[:, :F].reshape(ad_hoc.shape)
 
 
+def fused_dequant_q8_ref(slot, zq, zscale):
+    """Gather + dequant oracle over the int8 ring (the serving
+    decode-cache read): codes * per-row scale at ``slot``.  -> (B, F)
+    fp32."""
+    return zq[slot].astype(jnp.float32) * zscale[slot][:, None]
+
+
+def fused_dequant_q4_ref(slot, zq, zscale, width: int):
+    """Gather + unpack + dequant oracle over the int4 nibble-packed ring;
+    the pad nibble (odd widths) is sliced off.  -> (B, width) fp32."""
+    from ..core.workset import unpack_nibbles
+    out = unpack_nibbles(zq[slot]).astype(jnp.float32) \
+        * zscale[slot][:, None]
+    return out[:, :width]
+
+
 def quantize_sr_ref(x, u, levels):
     """Per-tile absmax scale + stochastic rounding to signed integer codes
     (the compressed-wire encode hot path).

@@ -187,61 +187,107 @@ def make_serve_cache(cfg: ArchConfig, batch: int, seq_len: int,
     return cache
 
 
+def prefill_a(params_a, cfg: ArchConfig, batch, total_len: int = 0):
+    """Party A's half of prefill -> (z_a, cache_a).
+
+    z_a is the activation that crosses the party boundary (the ONLY thing
+    Party B may see); cache_a is Party A's private decode KV state (None
+    for cross-attn families, whose memory crosses once at prefill and is
+    cached inside Party B's towers)."""
+    if cfg.family in ("vlm", "audio"):
+        return forward_a(params_a, cfg, batch), None
+    S = batch["tokens_a"].shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cap = serve_capacity(cfg, max(total_len, S))
+    xa = params_a["embed"][batch["tokens_a"]]
+    ctx_a = Ctx(cfg, positions=pos, window=cfg.sliding_window)
+    z_a, _, cache_a = tower_prefill(params_a["tower"], xa, cfg,
+                                    stages_a(cfg), ctx_a, cap)
+    return z_a, cache_a
+
+
+def prefill_b(params_b, cfg: ArchConfig, z_a, batch, total_len: int = 0):
+    """Party B's half of prefill: consumes the exchanged z_a, returns
+    (last-position logits, {"b","top"} caches).  Party A's params never
+    enter this function — the party boundary is the argument list."""
+    S = batch["tokens"].shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cap = serve_capacity(cfg, max(total_len, S))
+    caches: Dict[str, Any] = {}
+    x = params_b["embed"][batch["tokens"]]
+    fusion = cfg.vfl_split.fusion
+    mem = z_a if fusion == "cross_attn" else None
+    ctx = Ctx(cfg, positions=pos, memory=mem, window=cfg.sliding_window)
+    x, _, caches["b"] = tower_prefill(params_b["bottom"], x, cfg,
+                                      stages_b(cfg), ctx, cap)
+    if fusion == "add":
+        x = x + jnp.einsum("bsd,de->bse", z_a, params_b["fuse_proj"])
+    x, _, caches["top"] = tower_prefill(params_b["top"], x, cfg,
+                                        stages_top(cfg), ctx, cap)
+    logits = _logits(x[:, -1:], params_b, cfg)
+    return logits, caches
+
+
 def prefill(params, cfg: ArchConfig, batch, total_len: int = 0):
     """Full-context forward producing last-position logits + decode caches.
 
     ``total_len``: prompt + expected generation length — sizes the KV ring
     buffer so full-attention archs don't silently evict the oldest tokens
-    during decode (sliding-window archs cap at the window regardless)."""
-    S = batch["tokens"].shape[1]
-    pos = jnp.arange(S, dtype=jnp.int32)
-    cap = serve_capacity(cfg, max(total_len, S))
+    during decode (sliding-window archs cap at the window regardless).
+    Composed from the per-party halves (prefill_a / prefill_b)."""
+    z_a, cache_a = prefill_a(params["a"], cfg, batch, total_len)
     caches: Dict[str, Any] = {}
-    if cfg.family in ("vlm", "audio"):
-        z_a = forward_a(params["a"], cfg, batch)
-        mem_len = z_a.shape[1]
-    else:
-        xa = params["a"]["embed"][batch["tokens_a"]]
-        ctx_a = Ctx(cfg, positions=pos, window=cfg.sliding_window)
-        z_a, _, caches["a"] = tower_prefill(params["a"]["tower"], xa, cfg,
-                                            stages_a(cfg), ctx_a, cap)
-        mem_len = 0
-
-    x = params["b"]["embed"][batch["tokens"]]
-    fusion = cfg.vfl_split.fusion
-    mem = z_a if fusion == "cross_attn" else None
-    ctx = Ctx(cfg, positions=pos, memory=mem, window=cfg.sliding_window)
-    x, _, caches["b"] = tower_prefill(params["b"]["bottom"], x, cfg,
-                                      stages_b(cfg), ctx, cap)
-    if fusion == "add":
-        x = x + jnp.einsum("bsd,de->bse", z_a, params["b"]["fuse_proj"])
-    x, _, caches["top"] = tower_prefill(params["b"]["top"], x, cfg,
-                                        stages_top(cfg), ctx, cap)
-    logits = _logits(x[:, -1:], params["b"], cfg)
+    if cache_a is not None:
+        caches["a"] = cache_a
+    logits, caches_b = prefill_b(params["b"], cfg, z_a, batch, total_len)
+    caches.update(caches_b)
     return logits, caches
+
+
+def decode_step_a(params_a, cfg: ArchConfig, cache_a, token_a, pos):
+    """Party A's half of one-token decode -> (z_a_t (B,1,d), new_cache_a).
+
+    z_a_t is the per-step boundary activation: on the serving wire it is
+    what the up-codec encodes and the decode activation ring stores."""
+    ctx = Ctx(cfg, pos=pos, window=cfg.sliding_window)
+    xa = params_a["embed"][token_a]
+    z_a_t, _, new_cache_a = tower_decode(params_a["tower"], xa, cfg,
+                                         stages_a(cfg), ctx, cache_a)
+    return z_a_t, new_cache_a
+
+
+def decode_step_b(params_b, cfg: ArchConfig, caches, token, z_a_t, pos):
+    """Party B's half of one-token decode.  caches: {"b","top"}; z_a_t is
+    the (possibly cache-served, possibly dequantized) Party-A activation
+    (None for cross-attn families).  -> (logits (B,1,V), new caches)."""
+    ctx = Ctx(cfg, pos=pos, window=cfg.sliding_window)
+    new_caches = dict(caches)
+    x = params_b["embed"][token]
+    x, _, new_caches["b"] = tower_decode(params_b["bottom"], x, cfg,
+                                         stages_b(cfg), ctx, caches["b"])
+    if cfg.vfl_split.fusion == "add":
+        x = x + jnp.einsum("bsd,de->bse", z_a_t, params_b["fuse_proj"])
+    x, _, new_caches["top"] = tower_decode(params_b["top"], x, cfg,
+                                           stages_top(cfg), ctx,
+                                           caches["top"])
+    logits = _logits(x, params_b, cfg)
+    return logits, new_caches
 
 
 def decode_step(params, cfg: ArchConfig, caches, step_batch, pos):
     """One-token decode.  step_batch: {"token": (B,1)[, "token_a": (B,1)]}.
 
     pos: scalar int32 absolute position of the new token.  Returns
-    (logits (B,1,V), new_caches)."""
-    ctx = Ctx(cfg, pos=pos, window=cfg.sliding_window)
+    (logits (B,1,V), new_caches).  Composed from the per-party halves."""
     new_caches = dict(caches)
     if cfg.family in ("vlm", "audio"):
         z_a_t = None
     else:
-        xa = params["a"]["embed"][step_batch["token_a"]]
-        z_a_t, _, new_caches["a"] = tower_decode(
-            params["a"]["tower"], xa, cfg, stages_a(cfg), ctx, caches["a"])
-
-    x = params["b"]["embed"][step_batch["token"]]
-    x, _, new_caches["b"] = tower_decode(params["b"]["bottom"], x, cfg,
-                                         stages_b(cfg), ctx, caches["b"])
-    if cfg.vfl_split.fusion == "add":
-        x = x + jnp.einsum("bsd,de->bse", z_a_t, params["b"]["fuse_proj"])
-    x, _, new_caches["top"] = tower_decode(params["b"]["top"], x, cfg,
-                                           stages_top(cfg), ctx,
-                                           caches["top"])
-    logits = _logits(x, params["b"], cfg)
+        z_a_t, new_caches["a"] = decode_step_a(
+            params["a"], cfg, caches["a"], step_batch["token_a"], pos)
+    logits, caches_b = decode_step_b(
+        params["b"], cfg, {"b": caches["b"], "top": caches["top"]},
+        step_batch["token"], z_a_t, pos)
+    new_caches["b"] = caches_b["b"]
+    new_caches["top"] = caches_b["top"]
     return logits, new_caches

@@ -1,0 +1,16 @@
+"""Split-model serving at production traffic (see docs/SERVING.md).
+
+``repro.serve`` turns the one-shot prefill+decode driver into a real
+serving subsystem: a continuous-batching engine with per-request decode
+state over the party boundary (``engine.ServeEngine``), the quantized
+workset ring repurposed as the cross-party decode activation cache, the
+compressed wire on the serving path with exact per-request byte
+accounting, and an open-loop synthetic load generator (``loadgen``).
+"""
+from .engine import (Completion, Request, ServeConfig, ServeEngine,
+                     make_naive_fns, naive_generate)
+from .loadgen import LoadSpec, synth_requests
+
+__all__ = ["Completion", "Request", "ServeConfig", "ServeEngine",
+           "make_naive_fns", "naive_generate", "LoadSpec",
+           "synth_requests"]

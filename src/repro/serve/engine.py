@@ -1,0 +1,488 @@
+"""Continuous-batching split-model serving over the party boundary.
+
+The decode loop IS the paper's exchange pattern, one token at a time:
+Party A's tower produces the cut activation ``z`` for the new position,
+``z`` crosses the WAN (the serving uplink), Party B fuses it and emits
+the next token (the downlink).  This module makes that loop production
+shaped:
+
+  * **Continuous batching** — a fixed-capacity lane array (the same
+    fixed-shape trick as ``fleet/scheduler.py``'s stacked exchange
+    queue): every lane holds one in-flight request's decode state
+    (stacked B=1 KV caches, position, last token, tokens remaining),
+    requests admit into free lanes and evict mid-flight as they finish,
+    and the decode step stays ONE compiled XLA program at every
+    occupancy (``jax.vmap`` over lanes — per-lane positions rule out a
+    single native batch, whose KV ring cursor is shared across rows).
+  * **Cross-party decode activation cache** — the per-step ``z`` rows
+    land in a :mod:`repro.core.workset` ring (one row per lane, the
+    lane IS the ring's batch dim), stored through the same at-rest
+    codecs as training (fp32 / bf16 / int8 ``QuantLeaf`` / int4
+    ``Quant4Leaf``) and read back through the fused gather→dequant
+    Pallas kernels — Party B's fusion consumes the CACHED activation,
+    so with ``refresh_every > 1`` stale ring rows stand in for wire
+    exchanges exactly like the paper's cached local updates.
+  * **Compressed serving wire** — the uplink ``z`` goes through the PR-2
+    codec stack (int8 stochastic rounding by default) per lane row, so
+    per-request byte accounting is exact: ``wire_bytes((d,))`` per
+    decode token, ``wire_bytes((S, d))`` per prefill.  The downlink is
+    one token id (4 bytes, identity by contract — stochastic-rounding a
+    categorical id would corrupt it; the down payload is already
+    smaller than any code for it).
+
+The engine supports the token-aligned (fusion="add") families, where a
+cut activation crosses per decode step.  Cross-attention families (vlm /
+audio) exchange their memory once at prefill and decode entirely on
+Party B — :func:`naive_generate` serves those; there is no per-step
+activation to cache.
+
+Determinism: admissions are FIFO into the lowest free lane, the decode
+schedule is a pure function of the request list, and all stochastic
+rounding derives from the engine seed — two runs over the same requests
+produce identical tokens and ledgers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, CELUConfig
+from ..core import engine as core_engine
+from ..core import workset as WS
+from ..models import vfl
+
+
+# --------------------------------------------------------------------------
+# Config / request / completion records
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs.  ``compression`` is the UPLINK codec spec (the
+    downlink token id always rides the identity codec — see module
+    docstring); ``cache_dtype`` picks the decode activation ring's
+    at-rest storage; ``refresh_every`` R sends ``z`` up every R-th decode
+    step and serves Party B from the stale ring row in between (R=1 is
+    exchange-every-step; R>1 trades greedy fidelity for R-fold fewer
+    uplink bytes per token)."""
+    capacity: int = 8              # concurrent decode lanes
+    prompt_len: int = 16           # fixed prompt length (one compile)
+    max_new_tokens: int = 16       # per-request ceiling (sizes KV rings)
+    compression: str = "int8"      # uplink codec spec; "" = fp32 wire
+    cache_dtype: str = "int8"      # activation ring storage codec
+    ring_slots: int = 4            # W slots in the activation ring
+    refresh_every: int = 1         # uplink cadence (1 = every step)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request.  ``prompt`` / ``prompt_a`` must be exactly
+    ``ServeConfig.prompt_len`` tokens (the load generator pads); the
+    request completes after ``max_new_tokens`` generated tokens.
+    ``arrival`` is the open-loop virtual arrival time in seconds."""
+    req_id: int
+    prompt: np.ndarray
+    prompt_a: np.ndarray
+    max_new_tokens: int
+    arrival: float = 0.0
+
+
+@dataclass
+class Completion:
+    """Per-request ledger: generated tokens, exact wire bytes, and the
+    virtual-clock timeline (arrival -> admit -> per-token -> done)."""
+    req_id: int
+    tokens: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    wire_up_bytes: int = 0
+    wire_down_bytes: int = 0
+    arrival: float = 0.0
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
+    token_times: List[float] = field(default_factory=list)
+
+
+# --------------------------------------------------------------------------
+# Pure step functions (importable by the boundary auditor)
+# --------------------------------------------------------------------------
+def _ring_read(buf, width: int):
+    """Newest-slot gather + decode of the activation ring's ``z`` store
+    -> (C, d) fp32 rows.  Quantized stores go through the fused Pallas
+    gather→dequant kernels (no full-precision ring copy in HBM)."""
+    def read(slot):
+        from ..kernels import ops as kops
+        if isinstance(buf, WS.QuantLeaf):
+            return kops.fused_gather_dequant_q8(slot, buf.q, buf.scale)
+        if isinstance(buf, WS.Quant4Leaf):
+            return kops.fused_gather_dequant_q4(slot, buf.q, buf.scale,
+                                                width)
+        if isinstance(buf, WS.CastLeaf):
+            return buf.v[slot].astype(jnp.float32)
+        return buf[slot]
+    return read
+
+
+def make_admit_fn(cfg: ArchConfig, scfg: ServeConfig, tp):
+    """-> pure ``admit(params, state, lane, tokens, tokens_a, n_new,
+    rng)``: B=1 prefill of both parties (the prompt's ``z`` crosses the
+    uplink once), first greedy token down, then the request's decode
+    state written into lane ``lane`` of the fixed-capacity state."""
+    total_len = scfg.prompt_len + scfg.max_new_tokens
+
+    def admit(params, state, lane, tokens, tokens_a, n_new, rng):
+        batch = {"tokens": tokens, "tokens_a": tokens_a}
+        z, cache_a = vfl.prefill_a(params["a"], cfg, batch, total_len)
+        y, _ = tp.send(rng, z[0], None, "up")          # (S, d) crossing
+        logits, cache_b = vfl.prefill_b(params["b"], cfg, y[None], batch,
+                                        total_len)
+        tok = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+        down, _ = tp.send(jax.random.fold_in(rng, 1),
+                          tok.astype(jnp.float32)[None], None, "down")
+        tok_a = jnp.mod(down[0].astype(jnp.int32), cfg.aux_vocab_size)
+
+        put = lambda full, one: jax.lax.dynamic_update_index_in_dim(
+            full, one, lane, 0)
+        new = dict(state)
+        new["cache_a"] = jax.tree_util.tree_map(put, state["cache_a"],
+                                                cache_a)
+        new["cache_b"] = jax.tree_util.tree_map(put, state["cache_b"],
+                                                cache_b)
+        new["ws"] = _ring_clear_lane(state["ws"], lane)
+        new["active"] = state["active"].at[lane].set(n_new > 1)
+        new["pos"] = state["pos"].at[lane].set(jnp.int32(scfg.prompt_len))
+        new["token"] = state["token"].at[lane].set(tok)
+        new["token_a"] = state["token_a"].at[lane].set(tok_a)
+        new["remaining"] = state["remaining"].at[lane].set(n_new - 1)
+        return new, tok
+
+    return admit
+
+
+def make_step_fn(cfg: ArchConfig, scfg: ServeConfig, tp, exchange: bool):
+    """-> pure ``step(params, state, rng)`` — ONE decode token for every
+    lane, as one program.  ``exchange=True``: each lane's fresh ``z`` row
+    crosses the uplink and is inserted into the activation ring;
+    ``exchange=False``: Party A still advances its KV cache (compute is
+    local) but nothing crosses — Party B is served from the newest CACHED
+    ring row (the paper's stale-reuse, transplanted to decode).  Either
+    way Party B reads the ring through the storage codec, the next token
+    goes down the wire, and Party A derives its next aux token from it.
+
+    Returns (new_state, tokens (C,), produced (C,) bool) — ``produced``
+    flags the lanes whose token this step is real (active at entry)."""
+    C = scfg.capacity
+    d = cfg.d_model
+
+    def decode_a(params_a, cache_a, token_a, pos):
+        z, new_cache = vfl.decode_step_a(params_a, cfg, cache_a,
+                                         token_a.reshape(1, 1), pos)
+        return z[0, 0], new_cache                      # (d,)
+
+    def decode_b(params_b, cache_b, token, z_row, pos):
+        # the ring decodes to fp32; the model computes in PARAM_DTYPE.
+        # bf16 -> f32 -> bf16 is lossless, so the fp32-ring path stays
+        # bit-identical to fusing the tower output directly.
+        from ..models.initializers import PARAM_DTYPE
+        logits, new_cache = vfl.decode_step_b(
+            params_b, cfg, cache_b, token.reshape(1, 1),
+            z_row.reshape(1, 1, d).astype(PARAM_DTYPE), pos)
+        return logits[0, 0], new_cache                 # (V,)
+
+    va = jax.vmap(decode_a, in_axes=(None, 0, 0, 0))
+    vb = jax.vmap(decode_b, in_axes=(None, 0, 0, 0, 0))
+
+    def send_row(rng, row):
+        y, _ = tp.send(rng, row, None, "up")
+        return y
+
+    def step(params, state, rng):
+        produced = state["active"]
+        z_rows, cache_a = va(params["a"], state["cache_a"],
+                             state["token_a"], state["pos"])
+        if exchange:
+            # per-lane uplink: each (d,) row is encoded independently, so
+            # the per-request byte attribution is exact by construction
+            y_rows = jax.vmap(send_row)(jax.random.split(rng, C), z_rows)
+            ws = WS.workset_insert(state["ws"], {"z": y_rows},
+                                   batch_idx=state["ws"]["time"])
+        else:
+            ws = state["ws"]
+        slot = jnp.mod(ws["time"] - 1, scfg.ring_slots)
+        z_used = _ring_read(ws["buf"]["z"], d)(slot)   # (C, d) fp32
+        logits, cache_b = vb(params["b"], state["cache_b"], state["token"],
+                             z_used, state["pos"])
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        down = jax.vmap(
+            lambda r, x: tp.send(r, x, None, "down")[0]
+        )(jax.random.split(jax.random.fold_in(rng, 1), C),
+          tok.astype(jnp.float32)[:, None])
+        tok_a = jnp.mod(down[:, 0].astype(jnp.int32), cfg.aux_vocab_size)
+
+        remaining = state["remaining"] - jnp.where(produced, 1, 0)
+        new = dict(state)
+        new["cache_a"], new["cache_b"], new["ws"] = cache_a, cache_b, ws
+        new["active"] = produced & (remaining > 0)
+        new["pos"] = state["pos"] + 1
+        new["token"], new["token_a"] = tok, tok_a
+        new["remaining"] = remaining
+        return new, tok, produced
+
+    return step
+
+
+def _ring_clear_lane(ws: Dict[str, Any], lane):
+    """Zero lane ``lane``'s column across every ring slot (scales -> 0 so
+    quantized stores decode to exact zeros): a freshly admitted request
+    must never read the previous occupant's cached activations."""
+    buf = ws["buf"]["z"]
+    if isinstance(buf, WS.QuantLeaf):
+        nb = WS.QuantLeaf(buf.q.at[:, lane].set(0),
+                          buf.scale.at[:, lane].set(0.0),
+                          buf.shape, buf.dtype)
+    elif isinstance(buf, WS.Quant4Leaf):
+        nb = WS.Quant4Leaf(buf.q.at[:, lane].set(0x88),
+                           buf.scale.at[:, lane].set(0.0),
+                           buf.shape, buf.dtype)
+    elif isinstance(buf, WS.CastLeaf):
+        nb = WS.CastLeaf(buf.v.at[:, lane].set(0), buf.dtype)
+    else:
+        nb = buf.at[:, lane].set(0.0)
+    new = dict(ws)
+    new["buf"] = dict(ws["buf"], z=nb)
+    return new
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+class ServeEngine:
+    """Continuous-batching serving engine (see module docstring).
+
+    ``params`` is ``vfl.init_all``'s {"a", "b"} tree; ``transport``
+    overrides the wire (e.g. the auditor's :class:`AuditedTransport`) —
+    by default it is built from ``scfg.compression`` with an identity
+    downlink."""
+
+    def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig,
+                 transport=None):
+        if cfg.vfl_split.fusion != "add":
+            raise ValueError(
+                f"ServeEngine needs a token-aligned (fusion='add') arch; "
+                f"{cfg.name} ({cfg.family}) exchanges its memory once at "
+                f"prefill — serve it with naive_generate")
+        if scfg.ring_slots < 1 or scfg.refresh_every < 1:
+            raise ValueError("ring_slots and refresh_every must be >= 1")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.celu = CELUConfig(compression=self._wire_spec())
+        self.tp = transport if transport is not None else \
+            core_engine.make_transport(self.celu)
+        self._admit = jax.jit(make_admit_fn(cfg, scfg, self.tp))
+        self._step = {
+            True: jax.jit(make_step_fn(cfg, scfg, self.tp, True)),
+            False: jax.jit(make_step_fn(cfg, scfg, self.tp, False)),
+        }
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._nstep = 0
+        self.state = self._init_state()
+        # exact per-message wire bytes (the transport's own accounting)
+        S, d = scfg.prompt_len, cfg.d_model
+        self.prefill_up_bytes = int(self.tp.uplink_bytes((S, d)))
+        self.step_up_bytes = int(self.tp.uplink_bytes((d,)))
+        self.token_down_bytes = int(self.tp.downlink_bytes((1,)))
+
+    def _wire_spec(self) -> str:
+        spec = self.scfg.compression
+        if not spec:
+            return ""
+        # the downlink carries one token id: identity by contract
+        return spec if "/" in spec else f"{spec}/identity"
+
+    def _init_state(self) -> Dict[str, Any]:
+        cfg, scfg = self.cfg, self.scfg
+        C, S = scfg.capacity, scfg.prompt_len
+        total_len = S + scfg.max_new_tokens
+        batch = {"tokens": jnp.zeros((1, S), jnp.int32),
+                 "tokens_a": jnp.zeros((1, S), jnp.int32)}
+        shapes = jax.eval_shape(
+            lambda p: vfl.prefill(p, cfg, batch, total_len)[1], self.params)
+        zeros = lambda l: jnp.zeros((C,) + l.shape, l.dtype)
+        return {
+            "cache_a": jax.tree_util.tree_map(zeros, shapes["a"]),
+            "cache_b": jax.tree_util.tree_map(
+                zeros, {"b": shapes["b"], "top": shapes["top"]}),
+            "ws": WS.workset_init(
+                scfg.ring_slots,
+                {"z": jnp.zeros((C, cfg.d_model), jnp.float32)},
+                cache_dtype=scfg.cache_dtype),
+            "active": jnp.zeros((C,), bool),
+            "pos": jnp.zeros((C,), jnp.int32),
+            "token": jnp.zeros((C,), jnp.int32),
+            "token_a": jnp.zeros((C,), jnp.int32),
+            "remaining": jnp.zeros((C,), jnp.int32),
+        }
+
+    def _next_key(self):
+        self._nstep += 1
+        return jax.random.fold_in(self._key, self._nstep)
+
+    def warm(self):
+        """Compile admit + both step variants untimed (one throwaway
+        admit into lane 0 and one step each on scratch state — the real
+        run is never charged an XLA compile)."""
+        S = self.scfg.prompt_len
+        scratch, _ = self._admit(
+            self.params, self.state, jnp.int32(0),
+            jnp.zeros((1, S), jnp.int32), jnp.zeros((1, S), jnp.int32),
+            jnp.int32(2), self._key)
+        for ex in (True, False):
+            out = self._step[ex](self.params, scratch, self._key)
+        jax.block_until_ready(out[0]["token"])
+        return self
+
+    # ----------------------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            clock: Optional[Any] = None
+            ) -> Tuple[List[Completion], Dict[str, Any]]:
+        """Serve ``requests`` to completion.  Open loop: a request is
+        admissible once the virtual clock (wall time actually spent
+        stepping, fast-forwarded over idle gaps) passes its ``arrival``.
+        Returns (completions sorted by req_id, stats) where stats carries
+        the per-decode-step walls and total virtual duration."""
+        timer = time.perf_counter if clock is None else clock
+        pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+        pending = list(pending)
+        lanes: List[Optional[Completion]] = [None] * self.scfg.capacity
+        done: List[Completion] = []
+        vnow = 0.0
+        step_walls: List[float] = []
+        phase = 0
+        force_exchange = False
+        R = self.scfg.refresh_every
+
+        def occupied():
+            return [i for i, c in enumerate(lanes) if c is not None]
+
+        while pending or occupied():
+            # -- admit FIFO into the lowest free lanes ----------------
+            admitted = False
+            for lane in range(self.scfg.capacity):
+                if lanes[lane] is not None or not pending:
+                    continue
+                if pending[0].arrival > vnow:
+                    break
+                req = pending.pop(0)
+                t0 = timer()
+                self.state, tok = self._admit(
+                    self.params, self.state, jnp.int32(lane),
+                    jnp.asarray(req.prompt, jnp.int32)[None],
+                    jnp.asarray(req.prompt_a, jnp.int32)[None],
+                    jnp.int32(req.max_new_tokens), self._next_key())
+                tok = int(tok)
+                vnow += timer() - t0
+                comp = Completion(req.req_id, arrival=req.arrival,
+                                  admitted_at=vnow)
+                comp.tokens = np.array([tok], np.int32)
+                comp.token_times.append(vnow)
+                comp.wire_up_bytes += self.prefill_up_bytes
+                comp.wire_down_bytes += self.token_down_bytes
+                if req.max_new_tokens <= 1:
+                    comp.finished_at = vnow
+                    done.append(comp)          # lane freed immediately
+                else:
+                    lanes[lane] = comp
+                admitted = True
+            if admitted:
+                # a fresh lane's ring column is zeroed: the next step
+                # must re-exchange so nobody fuses against zeros
+                force_exchange = True
+
+            if not occupied():
+                if pending:                    # idle: fast-forward
+                    vnow = max(vnow, pending[0].arrival)
+                    continue
+                break
+
+            # -- one decode step for every lane -----------------------
+            exchange = force_exchange or R == 1 or phase % R == 0
+            t0 = timer()
+            self.state, tok, produced = self._step[exchange](
+                self.params, self.state, self._next_key())
+            tok_np = np.asarray(tok)
+            prod_np = np.asarray(produced)
+            rem_np = np.asarray(self.state["remaining"])
+            dt = timer() - t0
+            vnow += dt
+            step_walls.append(dt)
+            phase += 1
+            force_exchange = False
+
+            for lane in occupied():
+                if not prod_np[lane]:
+                    continue
+                comp = lanes[lane]
+                comp.tokens = np.append(comp.tokens, tok_np[lane])
+                comp.token_times.append(vnow)
+                if exchange:
+                    comp.wire_up_bytes += self.step_up_bytes
+                comp.wire_down_bytes += self.token_down_bytes
+                if rem_np[lane] <= 0:          # evict: lane is free
+                    comp.finished_at = vnow
+                    done.append(comp)
+                    lanes[lane] = None
+
+        done.sort(key=lambda c: c.req_id)
+        stats = {
+            "virtual_duration_s": vnow,
+            "decode_steps": len(step_walls),
+            "step_walls": step_walls,
+            "n_requests": len(done),
+            "total_tokens": int(sum(len(c.tokens) for c in done)),
+            "wire_up_bytes": int(sum(c.wire_up_bytes for c in done)),
+            "wire_down_bytes": int(sum(c.wire_down_bytes for c in done)),
+        }
+        return done, stats
+
+
+# --------------------------------------------------------------------------
+# Sequential per-request baseline / oracle
+# --------------------------------------------------------------------------
+def make_naive_fns(cfg: ArchConfig, total_len: int):
+    """Jitted (prefill, decode_step) pair for :func:`naive_generate`.
+    Build ONCE and pass via ``fns`` when looping over many requests —
+    the sequential serving baseline must pay steady-state dispatch, not
+    a retrace per request."""
+    prefill = jax.jit(lambda p, b: vfl.prefill(p, cfg, b, total_len))
+    decode = jax.jit(lambda p, c, sb, pos: vfl.decode_step(p, cfg, c, sb,
+                                                           pos))
+    return prefill, decode
+
+
+def naive_generate(params, cfg: ArchConfig, batch: Dict[str, Any],
+                   max_new_tokens: int, total_len: int = 0, fns=None):
+    """Greedy decode through the monolithic ``vfl.prefill`` /
+    ``vfl.decode_step`` — the sequential baseline the engine must beat
+    and the bit-exactness oracle it must match (same deterministic aux
+    rule: ``token_a = token % aux_vocab``).  Works for every family
+    (cross-attn archs decode Party-B-side only).  -> (B, max_new_tokens)
+    int32 tokens."""
+    S = batch["tokens"].shape[1]
+    total_len = total_len or S + max_new_tokens
+    prefill, decode = fns if fns is not None else \
+        make_naive_fns(cfg, total_len)
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new_tokens - 1):
+        sb = {"token": tok[:, None]}
+        if cfg.family not in ("vlm", "audio"):
+            sb["token_a"] = jnp.mod(tok, cfg.aux_vocab_size)[:, None]
+        logits, caches = decode(params, caches, sb, jnp.int32(S + i))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,295 @@
+"""Serving-path gates (docs/SERVING.md).
+
+The continuous-batching engine is held to ORACLE standards, not
+vibes:
+
+  * fp32 wire + fp32 ring => BIT-EXACT tokens vs the sequential
+    monolithic loop, including mid-flight admit/evict churn (more
+    requests than lanes, mixed generation lengths).
+  * int8 wire + int8 ring => greedy token match at the pinned fixture
+    seed (param seed 2 — random-init argmax sits near ties at other
+    seeds, so the fixture pins one where quantization noise provably
+    does not flip any of the 36 generated tokens).
+  * The fused gather→dequant kernels match their pure-jnp oracles and
+    the ring roundtrip stays within quantization tolerance.
+  * Per-request wire bytes reconcile EXACTLY against the codec's own
+    ``wire_bytes`` arithmetic — and two identical runs produce identical
+    tokens, timelines aside (determinism).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.wire_audit import payload_nbytes
+from repro.configs import get_config
+from repro.core import workset as WS
+from repro.core.compression import make_codec_pair
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import vfl
+from repro.serve import (Request, ServeConfig, ServeEngine, make_naive_fns,
+                         naive_generate)
+from repro.serve.loadgen import LoadSpec, synth_requests
+
+CFG = get_config("smollm-360m").reduced()
+PROMPT = 8
+
+
+def _params(seed=0):
+    return vfl.init_all(jax.random.PRNGKey(seed), CFG)
+
+
+def _requests(n, gens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(i,
+                rng.integers(0, CFG.vocab_size, PROMPT, dtype=np.int32),
+                rng.integers(0, CFG.aux_vocab_size, PROMPT, dtype=np.int32),
+                int(gens[i]))
+        for i in range(n)
+    ]
+
+
+def _references(params, requests, max_new):
+    fns = make_naive_fns(CFG, PROMPT + max_new)
+    refs = {}
+    for r in requests:
+        toks = naive_generate(
+            params, CFG,
+            {"tokens": jnp.asarray(r.prompt[None]),
+             "tokens_a": jnp.asarray(r.prompt_a[None])},
+            r.max_new_tokens, total_len=PROMPT + max_new, fns=fns)
+        refs[r.req_id] = np.asarray(toks)[0]
+    return refs
+
+
+# ---------------------------------------------------------------------------
+# party-split refactor: composition == monolith
+# ---------------------------------------------------------------------------
+def test_prefill_halves_compose_bitexact():
+    params = _params()
+    batch = {"tokens": jnp.arange(PROMPT, dtype=jnp.int32)[None] % CFG.vocab_size,
+             "tokens_a": jnp.arange(PROMPT, dtype=jnp.int32)[None]
+             % CFG.aux_vocab_size}
+    total = PROMPT + 4
+    logits, caches = vfl.prefill(params, CFG, batch, total)
+    z, cache_a = vfl.prefill_a(params["a"], CFG, batch, total)
+    logits2, caches_b = vfl.prefill_b(params["b"], CFG, z, batch, total)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+    for la, lb in zip(jax.tree_util.tree_leaves(caches["a"]),
+                      jax.tree_util.tree_leaves(cache_a)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_decode_halves_compose_bitexact():
+    params = _params()
+    batch = {"tokens": jnp.zeros((1, PROMPT), jnp.int32),
+             "tokens_a": jnp.zeros((1, PROMPT), jnp.int32)}
+    total = PROMPT + 4
+    _, caches = vfl.prefill(params, CFG, batch, total)
+    sb = {"token": jnp.array([[3]], jnp.int32),
+          "token_a": jnp.array([[5]], jnp.int32)}
+    logits, _ = vfl.decode_step(params, CFG, caches, sb, jnp.int32(PROMPT))
+    z_t, _ = vfl.decode_step_a(params["a"], CFG, caches["a"],
+                               sb["token_a"], jnp.int32(PROMPT))
+    logits2, _ = vfl.decode_step_b(
+        params["b"], CFG, {"b": caches["b"], "top": caches["top"]},
+        sb["token"], z_t, jnp.int32(PROMPT))
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+
+
+# ---------------------------------------------------------------------------
+# fp32 engine == naive loop, bit-exact through lane churn
+# ---------------------------------------------------------------------------
+def test_fp32_engine_bitexact_vs_naive_with_churn():
+    params = _params()
+    # 6 requests through 4 lanes with mixed lengths: forced mid-flight
+    # admit/evict, the regime the continuous-batching claim is about
+    reqs = _requests(6, gens=[6, 4, 5, 6, 4, 6])
+    refs = _references(params, reqs, max_new=6)
+    scfg = ServeConfig(capacity=4, prompt_len=PROMPT, max_new_tokens=6,
+                       compression="", cache_dtype="float32", ring_slots=3)
+    comps, stats = ServeEngine(params, CFG, scfg).run(reqs)
+    assert len(comps) == 6 and stats["n_requests"] == 6
+    for c in comps:
+        np.testing.assert_array_equal(
+            c.tokens, refs[c.req_id][:len(c.tokens)],
+            err_msg=f"req {c.req_id} diverged from sequential oracle")
+        assert len(c.tokens) == reqs[c.req_id].max_new_tokens
+
+
+def test_int8_engine_greedy_matches_naive_at_fixture_seed():
+    params = _params(seed=2)          # pinned fixture seed (see docstring)
+    reqs = _requests(6, gens=[6] * 6, seed=2)
+    refs = _references(params, reqs, max_new=6)
+    scfg = ServeConfig(capacity=4, prompt_len=PROMPT, max_new_tokens=6,
+                       compression="int8", cache_dtype="int8", ring_slots=3)
+    comps, _ = ServeEngine(params, CFG, scfg).run(reqs)
+    for c in comps:
+        np.testing.assert_array_equal(c.tokens, refs[c.req_id])
+
+
+def test_single_token_requests_complete_at_admit():
+    params = _params()
+    reqs = _requests(3, gens=[1, 1, 1])
+    scfg = ServeConfig(capacity=2, prompt_len=PROMPT, max_new_tokens=4,
+                       compression="", cache_dtype="float32")
+    comps, stats = ServeEngine(params, CFG, scfg).run(reqs)
+    assert [len(c.tokens) for c in comps] == [1, 1, 1]
+    assert stats["decode_steps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# determinism + stale reuse
+# ---------------------------------------------------------------------------
+def test_two_runs_identical():
+    params = _params()
+    spec = LoadSpec(n_requests=8, rate=0.0, prompt_len=PROMPT,
+                    max_new_tokens=5, min_new_tokens=2, seed=3)
+    scfg = ServeConfig(capacity=3, prompt_len=PROMPT, max_new_tokens=5,
+                       compression="int8", cache_dtype="int8")
+    runs = []
+    for _ in range(2):
+        comps, _ = ServeEngine(params, CFG, scfg).run(
+            synth_requests(spec, CFG))
+        runs.append(comps)
+    for a, b in zip(*runs):
+        assert a.req_id == b.req_id
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert (a.wire_up_bytes, a.wire_down_bytes) == \
+            (b.wire_up_bytes, b.wire_down_bytes)
+
+
+def test_refresh_every_2_halves_decode_uplink():
+    params = _params()
+    reqs = _requests(2, gens=[6, 6])
+    mk = lambda R: ServeConfig(capacity=2, prompt_len=PROMPT,
+                               max_new_tokens=6, compression="int8",
+                               cache_dtype="int8", refresh_every=R)
+    c1, _ = ServeEngine(params, CFG, mk(1)).run(
+        [Request(r.req_id, r.prompt, r.prompt_a, r.max_new_tokens)
+         for r in reqs])
+    c2, _ = ServeEngine(params, CFG, mk(2)).run(reqs)
+    up1 = sum(c.wire_up_bytes for c in c1)
+    up2 = sum(c.wire_up_bytes for c in c2)
+    assert up2 < up1                       # stale reuse skipped sends
+    for c in c2:                           # ...and still decodes tokens
+        assert len(c.tokens) == 6
+        assert np.all((c.tokens >= 0) & (c.tokens < CFG.vocab_size))
+
+
+def test_cross_attn_family_rejected_with_pointer():
+    vcfg = get_config("llama-3.2-vision-90b").reduced()
+    params = vfl.init_all(jax.random.PRNGKey(0), vcfg)
+    with pytest.raises(ValueError, match="naive_generate"):
+        ServeEngine(params, vcfg, ServeConfig(prompt_len=PROMPT))
+    # the pointed-to path actually serves the family
+    batch = {"tokens": jnp.zeros((1, PROMPT), jnp.int32),
+             "patches": jnp.zeros((1, vcfg.n_patches, vcfg.d_frontend),
+                                  jnp.float32)}
+    toks = naive_generate(params, vcfg, batch, 3)
+    assert toks.shape == (1, 3)
+
+
+# ---------------------------------------------------------------------------
+# wire-byte reconciliation: ledger == codec arithmetic
+# ---------------------------------------------------------------------------
+def test_wire_bytes_reconcile_per_request():
+    params = _params()
+    gens = [5, 3, 4, 5]
+    reqs = _requests(4, gens=gens)
+    scfg = ServeConfig(capacity=2, prompt_len=PROMPT, max_new_tokens=5,
+                       compression="int8", cache_dtype="int8")
+    eng = ServeEngine(params, CFG, scfg)
+    comps, stats = eng.run(reqs)
+
+    # the engine's per-message constants == the codec's own accounting
+    up, down = make_codec_pair("int8/identity")
+    d = CFG.d_model
+    assert eng.prefill_up_bytes == payload_nbytes(up, (PROMPT, d))
+    assert eng.step_up_bytes == payload_nbytes(up, (d,))
+    assert eng.token_down_bytes == payload_nbytes(down, (1,))
+
+    # per-request: one (S, d) prefill crossing + (G-1) decode rows up,
+    # G token ids down (R=1: every decode step exchanges)
+    for c in comps:
+        G = gens[c.req_id]
+        assert c.wire_up_bytes == eng.prefill_up_bytes \
+            + (G - 1) * eng.step_up_bytes
+        assert c.wire_down_bytes == G * eng.token_down_bytes
+    assert stats["wire_up_bytes"] == sum(c.wire_up_bytes for c in comps)
+
+
+def test_int8_wire_strictly_smaller_than_fp32():
+    params = _params()
+    scfg8 = ServeConfig(capacity=2, prompt_len=PROMPT, compression="int8")
+    scfg32 = ServeConfig(capacity=2, prompt_len=PROMPT, compression="")
+    e8 = ServeEngine(params, CFG, scfg8)
+    e32 = ServeEngine(params, CFG, scfg32)
+    assert e8.step_up_bytes < e32.step_up_bytes
+    assert e8.prefill_up_bytes < e32.prefill_up_bytes
+    assert e8.token_down_bytes == e32.token_down_bytes == 4
+
+
+# ---------------------------------------------------------------------------
+# activation ring: fused gather→dequant kernels + roundtrip tolerance
+# ---------------------------------------------------------------------------
+def _ring(cache_dtype, W=3, B=8, F=128, seed=0):
+    ws = WS.workset_init(W, {"z": jnp.zeros((B, F), jnp.float32)},
+                         cache_dtype=cache_dtype)
+    rows = jax.random.normal(jax.random.PRNGKey(seed), (W, B, F))
+    for t in range(W):
+        ws = WS.workset_insert(ws, {"z": rows[t]}, batch_idx=ws["time"])
+    return ws, rows
+
+
+def test_fused_dequant_q8_matches_ref():
+    ws, _ = _ring("int8")
+    buf = ws["buf"]["z"]
+    assert isinstance(buf, WS.QuantLeaf)
+    for slot in range(3):
+        got = kops.fused_gather_dequant_q8(jnp.int32(slot), buf.q, buf.scale)
+        want = kref.fused_dequant_q8_ref(jnp.int32(slot), buf.q, buf.scale)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_dequant_q4_matches_ref():
+    ws, _ = _ring("int4")
+    buf = ws["buf"]["z"]
+    assert isinstance(buf, WS.Quant4Leaf)
+    for slot in range(3):
+        got = kops.fused_gather_dequant_q4(jnp.int32(slot), buf.q,
+                                           buf.scale, 128)
+        want = kref.fused_dequant_q4_ref(jnp.int32(slot), buf.q,
+                                         buf.scale, 128)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cache_dtype,rtol", [
+    ("float32", 0.0), ("bfloat16", 1 / 128), ("int8", 1 / 63),
+    ("int4", 1 / 3.5),
+])
+def test_ring_roundtrip_tolerance(cache_dtype, rtol):
+    from repro.serve.engine import _ring_read
+    ws, rows = _ring(cache_dtype)
+    got = np.asarray(_ring_read(ws["buf"]["z"], 128)(jnp.int32(2)))
+    want = np.asarray(rows[2])
+    if rtol == 0.0:
+        np.testing.assert_array_equal(got, want)
+    else:
+        # per-row absmax scaling: error bounded by scale = absmax/levels
+        bound = rtol * np.max(np.abs(want), axis=1, keepdims=True)
+        assert np.all(np.abs(got - want) <= bound + 1e-6)
+
+
+def test_ring_clear_lane_decodes_to_zero():
+    from repro.serve.engine import _ring_clear_lane, _ring_read
+    for cache_dtype in ("float32", "bfloat16", "int8", "int4"):
+        ws, _ = _ring(cache_dtype)
+        ws = _ring_clear_lane(ws, jnp.int32(3))
+        for slot in range(3):
+            out = np.asarray(_ring_read(ws["buf"]["z"], 128)(
+                jnp.int32(slot)))
+            np.testing.assert_array_equal(out[3], np.zeros(128, np.float32))
+            assert np.any(out[2] != 0)     # neighbours untouched
